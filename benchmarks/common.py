@@ -1,0 +1,38 @@
+"""Shared benchmark utilities: hardware profiles and workload builders."""
+from __future__ import annotations
+
+import sys
+import os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.simulate import HardwareModel  # noqa: E402
+
+# Paper machine (i): 4×P100 (16GB each), PCIe gen3, fp16.
+P100_SERVER = dict(
+    n_devices=4,
+    hbm_per_dev=16 * 2**30,
+    hw=HardwareModel(flops=9e12, hbm_bw=500e9, h2d_bw=11e9, d2h_bw=11e9,
+                     d2d_bw=9e9, transfer_jitter=0.6, seed=0),
+)
+
+# Paper machine (ii): 8×A100-40GB (p4d.24xlarge).
+A100_SERVER = dict(
+    n_devices=8,
+    hbm_per_dev=40 * 2**30,
+    hw=HardwareModel(flops=60e12, hbm_bw=1500e9, h2d_bw=22e9, d2h_bw=22e9,
+                     d2d_bw=50e9, transfer_jitter=0.6, seed=0),
+)
+
+# TPU v5e host (the port target): 4 chips/host, 16GB HBM each.
+V5E_HOST = dict(
+    n_devices=4,
+    hbm_per_dev=16 * 2**30,
+    hw=HardwareModel(flops=197e12, hbm_bw=819e9, h2d_bw=32e9, d2h_bw=32e9,
+                     d2d_bw=50e9, transfer_jitter=0.6, seed=0),
+)
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """The scaffold's CSV contract: ``name,us_per_call,derived``."""
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,49 @@
+"""Paper Fig. 11/13: LoRA training time per batch (fwd+bwd, activation
+checkpointing) under constrained device RAM — TURNIP vs fixed-execution."""
+from __future__ import annotations
+
+from repro.configs import get_arch
+from repro.core import BuildConfig, MemgraphOOM, build_memgraph
+from repro.core.simulate import simulate
+from repro.core.trace import TraceConfig, trace_lora_train
+
+from .common import P100_SERVER, emit
+
+
+def run(tokens=(1024, 2048), budget_gb=(16.0, 2.5), arch="llama-7b",
+        n_layers=3, quick=False) -> list[dict]:
+    cfg = get_arch(arch)
+    srv = P100_SERVER
+    rows = []
+    if quick:
+        tokens, budget_gb = tokens[:1], budget_gb[:2]
+    for T in tokens:
+        tr = trace_lora_train(cfg, seq_len=T, n_layers=n_layers,
+                              trace=TraceConfig(
+                                  n_devices=srv["n_devices"], head_group=8,
+                                  q_block=max(512, T // 2), mlp_slices=2,
+                                  dtype="float16"))
+        for budget in budget_gb:
+            cap = int(budget * 2**30 * n_layers / cfg.n_layers)
+            try:
+                res = build_memgraph(tr.tg, BuildConfig(capacity=cap))
+            except MemgraphOOM:
+                rows.append(dict(tokens=T, budget=budget, mode="turnip",
+                                 status="OOM", s=None))
+                emit(f"fig11/{arch}/T{T}/mem{budget:g}GB/turnip", 0.0, "OOM")
+                continue
+            scale = cfg.n_layers / n_layers
+            for mode, label in (("nondet", "turnip"),
+                                ("fixed", "turnip-fixed")):
+                sim = simulate(res.memgraph, srv["hw"], mode=mode)
+                full = sim.makespan * scale
+                rows.append(dict(tokens=T, budget=budget, mode=label,
+                                 status="ok", s=full,
+                                 reloads=res.n_reloads))
+                emit(f"fig11/{arch}/T{T}/mem{budget:g}GB/{label}",
+                     full * 1e6, f"rel={res.n_reloads}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""MEMGRAPH compiler statistics: build throughput, dependency counts,
+offload traffic as memory shrinks (the paper's §6 'as few dependencies as
+possible' objective, quantified)."""
+from __future__ import annotations
+
+import time
+
+from repro.configs import get_arch
+from repro.core import BuildConfig, build_memgraph
+from repro.core.trace import TraceConfig, trace_prefill
+
+from .common import P100_SERVER, emit
+
+
+def run(quick=False) -> list[dict]:
+    cfg = get_arch("llama-7b")
+    tr = trace_prefill(cfg, seq_len=1024, n_layers=4,
+                       trace=TraceConfig(n_devices=4, head_group=8,
+                                         q_block=512, mlp_slices=2,
+                                         dtype="float16"))
+    n = len(tr.tg)
+    rows = []
+    fracs = (1.0, 0.25) if quick else (1.0, 0.5, 0.25, 0.15)
+    # total bytes of all tensors on device 0 as the reference budget
+    total = sum(v.out.nbytes for v in tr.tg.vertices.values()
+                if v.device == 0)
+    for frac in fracs:
+        t0 = time.time()
+        res = build_memgraph(tr.tg, BuildConfig(capacity=int(total * frac)))
+        dt = time.time() - t0
+        s = res.memgraph.stats()
+        rows.append(dict(frac=frac, verts=s["n_vertices"],
+                         mem_deps=s["mem_deps"],
+                         superfluous=s["superfluous_mem_deps"],
+                         offload_mb=s["offload_bytes"] / 2**20,
+                         reload_mb=s["reload_bytes"] / 2**20,
+                         build_s=dt, verts_per_s=n / dt))
+        emit(f"memgraph_build/frac{frac:g}", dt / n * 1e6,
+             f"verts={s['n_vertices']};mem_deps={s['mem_deps']};"
+             f"reload_mb={s['reload_bytes']/2**20:.0f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

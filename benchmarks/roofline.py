@@ -1,0 +1,94 @@
+"""§Roofline: derive the three-term model per (arch × shape × mesh) from the
+dry-run artifacts (deliverable g).
+
+    compute    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = collective_bytes_per_device / link_bw
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (all-reduce counted once per the ring ≈ 2·(N-1)/N ≈ 2× factor noted in
+EXPERIMENTS.md). HLO FLOPs/bytes come from the trip-folded HLO cost model
+(XLA's cost_analysis counts scan bodies once — see launch/hlo_analysis.py).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+SHAPE_TOKENS = {
+    "train_4k": 256 * 4096,
+    "prefill_32k": 32 * 32768,
+    "decode_32k": 128,           # one token per sequence
+    "long_500k": 1,
+}
+
+
+def analyze(record: dict) -> dict:
+    n = record["n_devices"]
+    flops = record["cost"]["flops"]               # per device (trip-folded)
+    byts = record["cost"]["bytes_accessed"]
+    coll = record["collectives"]["total_bytes"]   # per device
+    t_c = flops / PEAK_FLOPS
+    t_m = byts / HBM_BW
+    t_x = coll / ICI_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+    toks = SHAPE_TOKENS[record["shape"]] if record["kind"] != "train" \
+        else SHAPE_TOKENS["train_4k"]
+    mult = 6 if record["kind"] == "train" else 2
+    model_flops = mult * record["model"]["active_params"] * toks / n
+    bound = max(t_c, t_m, t_x)
+    return {
+        "arch": record["arch"], "shape": record["shape"],
+        "mesh": record["mesh"],
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dom,
+        "model_flops": model_flops,
+        "useful_ratio": model_flops / flops if flops else 0.0,
+        "roofline_frac": (model_flops / PEAK_FLOPS) / bound if bound else 0.0,
+        "peak_gib": record["memory"]["peak_bytes_per_device"] / 2**30,
+        "fits_v5e": record["memory"]["peak_bytes_per_device"] < 16 * 2**30,
+        "tag": record.get("tag", ""),
+    }
+
+
+def run(art_dir: str = "experiments/dryrun_v3", pod: str = "single",
+        quick: bool = False) -> list[dict]:
+    from .common import emit
+    rows = []
+    for f in sorted(glob.glob(f"{art_dir}/*__{pod}.json")):
+        r = analyze(json.load(open(f)))
+        rows.append(r)
+        emit(f"roofline/{r['arch']}/{r['shape']}/{pod}",
+             max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6,
+             f"dom={r['dominant']};frac={r['roofline_frac']:.3f};"
+             f"useful={r['useful_ratio']:.2f};fits={r['fits_v5e']}")
+    return rows
+
+
+def table(art_dir: str = "experiments/dryrun_v3",
+          pod: str = "single") -> str:
+    rows = run(art_dir, pod)
+    hdr = ("| arch | shape | compute s | memory s | coll s | dominant | "
+           "MODEL/HLO | roofline frac | GiB/dev | fits v5e |")
+    sep = "|" + "---|" * 10
+    out = [hdr, sep]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_frac']:.3f} | {r['peak_gib']:.2f} | "
+            f"{'✓' if r['fits_v5e'] else '✗'} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print(table())

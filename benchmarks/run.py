@@ -1,0 +1,41 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (scaffold contract). Paper artifacts:
+
+* fig10  — LLaMA prefill latency vs sequence length, constrained RAM
+* fig11  — LoRA training time per batch
+* ablation — fixed-execution slowdown (§8) + victim policies (§C)
+* memgraph_build — compiler throughput/dependency statistics
+* roofline — three-term model per dry-run cell (skipped when no artifacts)
+
+``QUICK=0`` env var runs the full sweeps; default is the quick profile so
+``python -m benchmarks.run`` completes in a few minutes on one CPU core.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    quick = os.environ.get("QUICK", "1") != "0"
+    from . import fig10_prefill, fig11_lora, stall_ablation, memgraph_build
+    print("name,us_per_call,derived")
+    fig10_prefill.run(quick=quick)
+    fig11_lora.run(quick=quick)
+    stall_ablation.run(quick=quick)
+    memgraph_build.run(quick=quick)
+    # roofline (requires dry-run artifacts)
+    art = "experiments/dryrun_v4"
+    if os.path.isdir(art) and any(f.endswith(".json")
+                                  for f in os.listdir(art)):
+        from . import roofline
+        roofline.run(art)
+    else:
+        print("roofline,0.0,skipped(no dryrun artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""TURNIP core: TASKGRAPH → MEMGRAPH compilation and nondeterministic
+execution (the paper's primary contribution)."""
+from .taskgraph import OpKind, TaskGraph, TaskVertex, TensorSpec
+from .memgraph import DepKind, Loc, MemGraph, MemOp, MemVertex, RaceError
+from .build import BuildConfig, BuildResult, MemgraphOOM, build_memgraph
+
+__all__ = [
+    "OpKind", "TaskGraph", "TaskVertex", "TensorSpec",
+    "DepKind", "Loc", "MemGraph", "MemOp", "MemVertex", "RaceError",
+    "BuildConfig", "BuildResult", "MemgraphOOM", "build_memgraph",
+]

@@ -1,0 +1,466 @@
+"""BUILDMEMGRAPH — compile a TASKGRAPH into a MEMGRAPH (paper §6, Fig. 8/9).
+
+The compiler performs a *simulated execution* of the TASKGRAPH over per-device
+:class:`~repro.core.policies.Arena` objects, maintaining two horizons through
+the serialized vertex list ``V``:
+
+* ``allocHzn`` — every vertex before it has an output location reserved. The
+  compiler greedily pushes this as far ahead of ``execHzn`` as free memory
+  allows, so the runtime gains freedom to reorder (paper §6);
+* ``execHzn`` — every vertex before it has been "run" in simulation.
+
+Four malloc/free variants (paper Fig. 9):
+
+* ``simMalloc``       — free-space-only placement; on reuse of freed bytes it
+  adds the safe-overwrite memory dependencies (readers of the previous writer
+  → new writer);
+* ``simMallocOffld``  — eviction placement: picks victims (Belady §C), emits
+  ``victim → offload → reload`` chains, renames all future uses of the victim
+  to its reload, adds ``offload → tenant`` plus executed-reader deps;
+* ``simMallocForceReld`` — places an evicted input's reload right before its
+  consumer runs (cannot fail short of a genuine OOM);
+* ``simFree``         — returns an extent when its tensor's last consumer has
+  executed in simulation.
+
+Correctness (paper §7) holds by construction: every dependency edge is created
+from an already-simulated vertex to a not-yet-simulated one, so the MEMGRAPH
+is acyclic; and safe-overwrite edges are added for every byte of every reuse,
+so it is race-free. Both properties are re-checked explicitly by the tests.
+
+Beyond-paper extensions (flagged; documented in DESIGN.md §7):
+
+* ``reuse_host_copy`` (default on) — re-evicting bytes that already exist in
+  the host store (graph inputs; previously offloaded tensors) skips the
+  redundant offload copy: tensors are immutable, so the first copy stays
+  valid. ``False`` gives the paper-faithful always-offload behaviour.
+* reservation *cancellation* — when eviction would otherwise have to victimize
+  an unexecuted reservation (allocHzn ran ahead), the reservation is cancelled
+  and re-made at execution time rather than "offloading" data that does not
+  exist yet (which could deadlock the plan).
+* terminal outputs evicted to host simply stay there (no orphan reload); the
+  runtime serves results from the host store.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Any, Callable
+
+from .memgraph import DepKind, Loc, MemGraph, MemOp
+from .policies import Arena, EvictionDecision, PlacementDecision, INF
+from .taskgraph import OpKind, TaskGraph, TaskVertex
+
+__all__ = ["BuildConfig", "BuildResult", "MemgraphOOM", "build_memgraph"]
+
+_HOST_STORE = None  # sentinel: host source is the immutable input store
+
+
+class MemgraphOOM(RuntimeError):
+    """A single task's working set cannot fit in device memory."""
+
+
+@dataclasses.dataclass
+class BuildConfig:
+    """Configuration for BUILDMEMGRAPH."""
+
+    capacity: int | dict[int, int]              # arena size per device, units
+    size_fn: Callable[[TaskVertex], int] | None = None  # default: out.nbytes
+    reuse_host_copy: bool = True
+    victim_policy: str = "belady"                # belady | lru | random  (§C)
+    rng_seed: int = 0
+
+    def size_of(self, v: TaskVertex) -> int:
+        return (self.size_fn or (lambda u: u.out.nbytes))(v)
+
+    def cap_of(self, device: int) -> int:
+        if isinstance(self.capacity, dict):
+            return self.capacity[device]
+        return self.capacity
+
+
+@dataclasses.dataclass
+class BuildResult:
+    memgraph: MemGraph
+    mid_of: dict[int, int]                      # taskgraph tid -> memgraph mid
+    order: list[int]                            # serialized V (tids)
+    peak_used: dict[int, int]                   # per device
+    terminal_host: dict[int, int | None]        # outputs resting in host store
+    n_offloads: int = 0
+    n_reloads: int = 0
+    n_cancelled: int = 0
+
+    def final_value_location(self, tid: int) -> tuple[str, int]:
+        """Where the runtime finds a terminal output: ('host', mid-or-tid) or
+        ('device', mid)."""
+        if tid in self.terminal_host:
+            ref = self.terminal_host[tid]
+            return ("host", ref if ref is not None else tid)
+        return ("device", self.mid_of[tid])
+
+
+def build_memgraph(
+    tg: TaskGraph,
+    config: BuildConfig,
+    order: list[int] | None = None,
+) -> BuildResult:
+    """Compile ``tg`` under ``config``. ``order`` is the serialized vertex
+    list V (defaults to a topological order of ``tg``)."""
+    return _Builder(tg, config, order).run()
+
+
+class _Builder:
+    def __init__(self, tg: TaskGraph, config: BuildConfig,
+                 order: list[int] | None) -> None:
+        tg.validate()
+        self.tg = tg
+        self.cfg = config
+        # default V = insertion order: a valid topological order by
+        # construction (TaskGraph.add requires inputs to exist) that follows
+        # natural program order — far better prefetch locality than an
+        # arbitrary Kahn order.
+        self.V = list(order) if order is not None else sorted(tg.vertices)
+        if sorted(self.V) != sorted(tg.vertices):
+            raise ValueError("order must be a permutation of the vertices")
+        self.pos = {tid: i for i, tid in enumerate(self.V)}
+        _check_order(tg, self.pos)
+
+        self.mg = MemGraph()
+        self.rng = random.Random(config.rng_seed)
+        self.executed_mids: set[int] = set()
+        self.arenas: dict[int, Arena] = {}
+        for d in tg.devices():
+            self.arenas[d] = Arena(d, config.cap_of(d))
+            self.arenas[d].bind_executed_set(self.executed_mids)
+
+        # consumer positions per tid, for Belady next-use and simFree
+        self.cons_pos: dict[int, list[int]] = {
+            t: sorted(self.pos[c] for c in tg.consumers(t)) for t in tg.vertices}
+        self.cons_ptr: dict[int, int] = {t: 0 for t in tg.vertices}
+
+        self.mid_of: dict[int, int] = {}         # tid -> primary mem vertex
+        self.alias: dict[int, int] = {}           # tid -> mid of live value
+        self.tid_of: dict[int, int] = {}          # mid -> tid (incl. reloads)
+        self.evicted: set[int] = set()            # tids pending reload
+        self.host_src: dict[int, int | None] = {}  # mid -> offload mid | None(=store)
+        self.unallocated: set[int] = set()         # cancelled reservations (tids)
+        self.terminal_host: dict[int, int | None] = {}
+        # streaming-reduce groups: tid -> (alloc0_mid, join_mid)
+        self.groups: dict[int, tuple[int, int]] = {}
+
+        self.seq = 0
+        self.n_offloads = self.n_reloads = self.n_cancelled = 0
+
+    # ------------------------------------------------------------------ utils
+    def _mark_executed(self, mid: int) -> None:
+        self.mg.vertices[mid].seq = self.seq
+        self.seq += 1
+        self.executed_mids.add(mid)
+
+    def next_use(self, mid: int) -> float:
+        """Belady metric: position in V of the next simulated use of the
+        tensor occupying ``mid``'s extent. An unexecuted reservation's next
+        use is its own position (it still must run)."""
+        tid = self.tid_of[mid]
+        ptr = self.cons_ptr[tid]
+        cp = self.cons_pos[tid]
+        nxt: float = cp[ptr] if ptr < len(cp) else INF
+        if mid not in self.executed_mids:
+            nxt = min(nxt, self.pos[tid])
+        return nxt
+
+    def _arena(self, device: int) -> Arena:
+        return self.arenas[device]
+
+    # ------------------------------------- safe-overwrite deps (simMalloc)
+    def _overwrite_deps(self, dec, tenant_mid: int) -> None:
+        """Safe-overwrite: every reader of the bytes' previous writers must
+        precede the new tenant (paper Fig. 9, simMalloc). ``direct_deps`` are
+        ordering-only obligations (a pending offload of evicted bytes, the
+        victim's executed readers) and get edges without reader expansion —
+        expanding them would pull in *reload* vertices, which read the host
+        copy, not the overwritten device bytes."""
+        for w in dec.prev_writers:
+            self.mg.add_dep(w, tenant_mid, DepKind.MEM)
+            for r in self.mg.data_succs(w):
+                self.mg.add_dep(r, tenant_mid, DepKind.MEM)
+        for d in dec.direct_deps:
+            self.mg.add_dep(d, tenant_mid, DepKind.MEM)
+
+    # ------------------------------------------------------- allocation paths
+    def _try_alloc(self, tid: int) -> bool:
+        """simMalloc for the vertex at allocHzn: free space only."""
+        v = self.tg.vertices[tid]
+        size = self.cfg.size_of(v)
+        arena = self._arena(v.device)
+        if size > arena.capacity:
+            raise MemgraphOOM(
+                f"tensor of {size} units for task {tid} exceeds device "
+                f"{v.device} capacity {arena.capacity}")
+        dec = arena.place_free(size)
+        if dec is None:
+            return False
+        self._commit_vertex(tid, arena, dec)
+        return True
+
+    def _alloc_offld(self, tid: int) -> None:
+        """simMallocOffld: eviction placement; cannot fail short of OOM."""
+        v = self.tg.vertices[tid]
+        arena = self._arena(v.device)
+        dec = self._evict_place(arena, self.cfg.size_of(v), f"output of {tid}")
+        self._commit_vertex(tid, arena, dec)
+
+    def _evict_place(self, arena: Arena, size: int, why: Any) -> PlacementDecision:
+        evd = arena.place_evict(size, self.next_use,
+                                victim_policy=self.cfg.victim_policy,
+                                rng=self.rng)
+        if evd is None:
+            evd = arena.place_evict(size, self.next_use, allow_cancel=True,
+                                    victim_policy=self.cfg.victim_policy,
+                                    rng=self.rng)
+        if evd is None:
+            raise MemgraphOOM(
+                f"device {arena.device}: cannot place {size} units for {why}; "
+                f"capacity {arena.capacity}, pinned working set too large")
+        extra = self._apply_eviction(arena, evd)
+        dec = arena.evict_and_carve(evd, self.seq)
+        dec.direct_deps |= extra   # ordering-only deps: no reader expansion
+        return dec
+
+    def _apply_eviction(self, arena: Arena, evd: EvictionDecision) -> set[int]:
+        """Emit offload/reload chains for victims; cancel reservations.
+        Returns extra mids the new tenant must wait on."""
+        tenant_deps: set[int] = set()
+        for mid in evd.victims:
+            tenant_deps |= self._evict_one(arena.device, mid)
+        for mid in evd.cancelled:
+            tid = self.tid_of[mid]
+            self.mg.vertices[mid].loc = None
+            self.unallocated.add(tid)
+            self.n_cancelled += 1
+            # stale safe-overwrite deps on the reservation remain: they are
+            # forward edges and merely conservative.
+        return tenant_deps
+
+    def _evict_one(self, device: int, victim_mid: int) -> set[int]:
+        """victim → offload → reload chain (paper Fig. 9, simMallocOffld)."""
+        vv = self.mg.vertices[victim_mid]
+        tid = self.tid_of[victim_mid]
+        deps: set[int] = {victim_mid}
+        deps.update(self.mg.data_succs(victim_mid))  # readers-so-far
+
+        have_host = (self.cfg.reuse_host_copy
+                     and victim_mid in self.host_src)
+        if have_host:
+            off_mid = self.host_src[victim_mid]   # may be None (input store)
+            if off_mid is not None:
+                deps.add(off_mid)
+        else:
+            off_mid = self.mg.add_vertex(
+                MemOp.OFFLOAD, device, src_tid=tid, loc=None,
+                size=vv.size, nbytes=vv.nbytes, operands=[victim_mid],
+                name=f"offload:{vv.name or tid}")
+            self.tid_of[off_mid] = tid
+            self.mg.add_dep(victim_mid, off_mid, DepKind.DATA)
+            self._mark_executed(off_mid)
+            self.n_offloads += 1
+            deps.add(off_mid)
+
+        has_future = self.cons_ptr[tid] < len(self.cons_pos[tid])
+        if not has_future:
+            # terminal output: the host copy is its final resting place
+            self.terminal_host[tid] = off_mid
+            self.alias[tid] = off_mid if off_mid is not None else victim_mid
+            self.evicted.discard(tid)
+            return deps
+
+        # rename all future uses of the victim to its reload
+        rel_mid = self.mg.add_vertex(
+            MemOp.RELOAD, device, src_tid=tid, loc=None,
+            size=vv.size, nbytes=vv.nbytes,
+            operands=[off_mid] if off_mid is not None else [],
+            name=f"reload:{vv.name or tid}")
+        self.tid_of[rel_mid] = tid
+        if off_mid is not None:
+            self.mg.add_dep(off_mid, rel_mid, DepKind.DATA)
+        self.n_reloads += 1
+        self.alias[tid] = rel_mid
+        self.evicted.add(tid)
+        self.host_src[rel_mid] = off_mid
+        return deps
+
+    def _commit_vertex(self, tid: int, arena: Arena,
+                       dec: PlacementDecision) -> None:
+        """Create (or re-place, if cancelled) the mem vertex for ``tid`` and
+        bind its extent; wire safe-overwrite deps."""
+        v = self.tg.vertices[tid]
+        mid = self.mid_of.get(tid)
+        loc = Loc(arena.device, dec.offset, dec.size)
+        if mid is None:
+            op = {OpKind.INPUT: MemOp.INPUT, OpKind.COMPUTE: MemOp.COMPUTE,
+                  OpKind.TRANSFER: MemOp.TRANSFER,
+                  OpKind.REDUCE: MemOp.COMPUTE}[v.kind]
+            if v.kind == OpKind.REDUCE and v.streaming:
+                op = MemOp.JOIN
+            mid = self.mg.add_vertex(
+                op, v.device, src_tid=tid, loc=loc, op_name=v.op,
+                params=v.params, flops=v.flops, size=dec.size,
+                nbytes=v.out.nbytes, name=v.name or str(tid))
+            self.mid_of[tid] = mid
+            self.tid_of[mid] = tid
+            self.alias[tid] = mid
+            if v.kind == OpKind.INPUT:
+                self.host_src[mid] = _HOST_STORE  # input store holds it
+        else:
+            self.mg.vertices[mid].loc = loc
+            self.unallocated.discard(tid)
+        tenant = mid
+        if v.kind == OpKind.REDUCE and v.streaming:
+            # zero-init is the first writer; extent pinned until JOIN runs
+            a0 = self.mg.add_vertex(
+                MemOp.ALLOC0, v.device, src_tid=tid, loc=loc,
+                op_name="zeros", size=dec.size, nbytes=v.out.nbytes,
+                lock_group=loc.key, name=f"alloc0:{v.name or tid}")
+            self.tid_of[a0] = tid
+            self.mg.vertices[mid].lock_group = loc.key
+            self.groups[tid] = (a0, mid)
+            self._mark_executed(a0)
+            self.mg.add_dep(a0, mid, DepKind.DATA)
+            tenant = a0
+        self._overwrite_deps(dec, tenant)
+        arena.commit(dec, mid)
+        if v.kind == OpKind.REDUCE and v.streaming:
+            arena.pin(mid)
+
+    # -------------------------------------------------- execution simulation
+    def _advance_and_free(self, t: int, mypos: int) -> None:
+        """simFree: advance ``t``'s consumer pointer past ``mypos``; free its
+        extent once no future consumer remains."""
+        cp, ptr = self.cons_pos[t], self.cons_ptr[t]
+        while ptr < len(cp) and cp[ptr] <= mypos:
+            ptr += 1
+        self.cons_ptr[t] = ptr
+        if (ptr >= len(cp) and t not in self.evicted
+                and t not in self.terminal_host):
+            m = self.alias[t]
+            if self.mg.vertices[m].loc is not None:
+                self._arena(self.mg.vertices[m].loc.device).free(m, self.seq)
+
+    def _force_reload(self, tid: int) -> int:
+        """simMallocForceReld: place the pending reload of ``tid``."""
+        mid = self.alias[tid]
+        vv = self.mg.vertices[mid]
+        arena = self._arena(vv.device)
+        dec = arena.place_free(vv.size)
+        if dec is None:
+            dec = self._evict_place(arena, vv.size, f"reload of {tid}")
+        vv.loc = Loc(arena.device, dec.offset, dec.size)
+        arena.commit(dec, mid)
+        self._overwrite_deps(dec, mid)
+        self._mark_executed(mid)
+        self.evicted.discard(tid)
+        return mid
+
+    def _execute(self, tid: int) -> None:
+        v = self.tg.vertices[tid]
+        vmid = self.mid_of.get(tid)
+        pins: list[tuple[Arena, int]] = []
+
+        def pin(arena: Arena, mid: int) -> None:
+            arena.pin(mid)
+            pins.append((arena, mid))
+
+        try:
+            # output extent: re-place if the reservation was cancelled
+            if vmid is None or self.mg.vertices[vmid].loc is None:
+                arena = self._arena(v.device)
+                dec = arena.place_free(self.cfg.size_of(v))
+                if dec is None:
+                    dec = self._evict_place(arena, self.cfg.size_of(v),
+                                            f"output of {tid}")
+                self._commit_vertex(tid, arena, dec)
+                vmid = self.mid_of[tid]
+            out_arena = self._arena(v.device)
+            streaming = v.kind == OpKind.REDUCE and v.streaming
+            if not streaming:
+                pin(out_arena, vmid)
+
+            uniq_inputs = list(dict.fromkeys(v.inputs))
+            mypos = self.pos[tid]
+            if streaming:
+                # §B: n partial sums stream into a locked accumulator one at
+                # a time; each input is consumed — and its extent freed —
+                # immediately, so at most one partial plus the accumulator
+                # must be resident. This is what lets TURNIP "force them to
+                # be run in sequence and offloaded" (paper §8).
+                a0, join = self.groups[tid]
+                loc = self.mg.vertices[join].loc
+                join_ops: list[int] = []
+                for t in uniq_inputs:
+                    m = self._force_reload(t) if t in self.evicted else self.alias[t]
+                    src_arena = self._arena(self.mg.vertices[m].loc.device)
+                    src_arena.pin(m)
+                    g = self.mg.add_vertex(
+                        MemOp.ADD_INTO, v.device, src_tid=tid, loc=loc,
+                        op_name="add_into", size=loc.size,
+                        nbytes=v.out.nbytes, lock_group=loc.key,
+                        operands=[m], name=f"add_into:{v.name or tid}")
+                    self.tid_of[g] = tid
+                    self.mg.add_dep(m, g, DepKind.DATA)
+                    self.mg.add_dep(a0, g, DepKind.DATA)
+                    self.mg.add_dep(g, join, DepKind.DATA)
+                    self._mark_executed(g)
+                    join_ops.append(g)
+                    src_arena.unpin(m)
+                    self._advance_and_free(t, mypos)
+                self.mg.vertices[vmid].operands = join_ops
+            else:
+                resolved: dict[int, int] = {}
+                for t in uniq_inputs:
+                    m = self._force_reload(t) if t in self.evicted else self.alias[t]
+                    resolved[t] = m
+                    pin(self._arena(self.mg.vertices[m].loc.device), m)
+                    self.mg.add_dep(m, vmid, DepKind.DATA)
+                self.mg.vertices[vmid].operands = [resolved[t] for t in v.inputs]
+        finally:
+            for arena, mid in pins:
+                arena.unpin(mid)
+
+        # simFree: dead inputs give their extents back
+        if not (v.kind == OpKind.REDUCE and v.streaming):
+            for t in dict.fromkeys(v.inputs):
+                self._advance_and_free(t, self.pos[tid])
+
+        if v.kind == OpKind.REDUCE and v.streaming:
+            out_arena.unpin(vmid)   # group pin taken at alloc time
+        self._mark_executed(vmid)
+
+    # ------------------------------------------- main loop (paper Fig. 8)
+    def run(self) -> BuildResult:
+        n = len(self.V)
+        alloc_i = exec_i = 0
+        while exec_i < n:
+            if alloc_i < n and self._try_alloc(self.V[alloc_i]):
+                alloc_i += 1            # allocated space for a future result
+            elif alloc_i == exec_i:
+                self._alloc_offld(self.V[alloc_i])  # must evict to proceed
+                alloc_i += 1
+            else:
+                self._execute(self.V[exec_i])
+                exec_i += 1
+        return BuildResult(
+            memgraph=self.mg,
+            mid_of=dict(self.mid_of),
+            order=list(self.V),
+            peak_used={d: a.peak_used for d, a in self.arenas.items()},
+            terminal_host=dict(self.terminal_host),
+            n_offloads=self.n_offloads,
+            n_reloads=self.n_reloads,
+            n_cancelled=self.n_cancelled,
+        )
+
+
+def _check_order(tg: TaskGraph, pos: dict[int, int]) -> None:
+    for v in tg.vertices.values():
+        for i in v.inputs:
+            if pos[i] >= pos[v.tid]:
+                raise ValueError(f"order violates dataflow: {i} !< {v.tid}")

@@ -1,0 +1,322 @@
+"""Simulated device arenas + the paper's "unobtrusiveness" policies (§C).
+
+The BUILDMEMGRAPH compiler never allocates real memory: it maintains, per
+device, an :class:`Arena` — an interval map of ``[0, capacity)`` in abstract
+units — through special malloc/free variants (paper Fig. 9). The arena tracks,
+for every byte range, who owns it now and who wrote it last, so the builder
+can emit the safe-overwrite memory dependencies.
+
+Two policy hooks (paper §C):
+
+* **placement** — among free regions able to hold an allocation, prefer the
+  one whose last use is furthest in the past (maximizes the chance that the
+  safe-overwrite dependencies are already satisfied when the runtime wants to
+  dispatch the new writer);
+* **eviction** — among candidate regions requiring eviction, prefer the one
+  maximizing the *minimum* next-use distance of any evicted tensor (Belady;
+  the paper's generalization to variable-size tensors). ``lru`` and ``random``
+  victims are provided for the §C ablation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Callable, Iterable
+
+__all__ = ["Extent", "Arena", "PlacementDecision", "EvictionDecision"]
+
+INF = float("inf")
+
+
+@dataclasses.dataclass
+class Extent:
+    """A maximal run of bytes with uniform ownership state."""
+
+    offset: int
+    size: int
+    owner: int | None = None          # memgraph vertex occupying it; None = free
+    last_writers: set[int] = dataclasses.field(default_factory=set)
+    last_use: int = -1                # seq when last freed/read (free extents)
+    pinned: int = 0                   # pin refcount (eviction-exempt)
+    # Writers/direct-deps of these bytes *before* the current owner. If the
+    # owner's reservation is cancelled before it ever writes, these (not the
+    # owner!) are what the next tenant must order against.
+    carried_writers: set[int] = dataclasses.field(default_factory=set)
+    carried_direct: set[int] = dataclasses.field(default_factory=set)
+    # for FREE extents: non-writer ordering obligations (e.g. a pending
+    # offload still reading the stale bytes) inherited by the next tenant
+    last_direct: set[int] = dataclasses.field(default_factory=set)
+
+    @property
+    def end(self) -> int:
+        return self.offset + self.size
+
+    @property
+    def free(self) -> bool:
+        return self.owner is None
+
+
+@dataclasses.dataclass
+class PlacementDecision:
+    offset: int
+    size: int
+    prev_writers: set[int]            # real byte-writers: expand to their readers
+    direct_deps: set[int] = dataclasses.field(default_factory=set)  # no expansion
+
+
+@dataclasses.dataclass
+class EvictionDecision:
+    offset: int
+    size: int
+    prev_writers: set[int]            # writers of covered *free* bytes
+    victims: list[int]                # owner mids to offload (executed)
+    cancelled: list[int]              # owner mids whose reservation is cancelled
+
+
+class Arena:
+    """Interval map over ``[0, capacity)`` for one device."""
+
+    def __init__(self, device: int, capacity: int) -> None:
+        if capacity <= 0:
+            raise ValueError("arena capacity must be positive")
+        self.device = device
+        self.capacity = capacity
+        self.extents: list[Extent] = [Extent(0, capacity)]
+        self._by_owner: dict[int, Extent] = {}
+        self.peak_used = 0
+        self._used = 0
+
+    # -- bookkeeping --------------------------------------------------------
+    def _coalesce(self) -> None:
+        out: list[Extent] = []
+        for e in self.extents:
+            if out and out[-1].free and e.free:
+                prev = out[-1]
+                prev.size += e.size
+                prev.last_writers |= e.last_writers
+                prev.last_direct |= e.last_direct
+                prev.last_use = max(prev.last_use, e.last_use)
+            else:
+                out.append(e)
+        self.extents = out
+
+    def owner_extent(self, mid: int) -> Extent:
+        return self._by_owner[mid]
+
+    def used(self) -> int:
+        return self._used
+
+    def pin(self, mid: int) -> None:
+        self._by_owner[mid].pinned += 1
+
+    def unpin(self, mid: int) -> None:
+        e = self._by_owner[mid]
+        if e.pinned <= 0:
+            raise AssertionError(f"unbalanced unpin of {mid}")
+        e.pinned -= 1
+
+    def set_owner(self, old_mid: int, new_mid: int) -> None:
+        """Transfer ownership (e.g. streaming-reduce JOIN takes over)."""
+        e = self._by_owner.pop(old_mid)
+        e.owner = new_mid
+        self._by_owner[new_mid] = e
+
+    # -- free ---------------------------------------------------------------
+    def free(self, mid: int, seq: int, *, wrote: bool = True) -> None:
+        """Return an extent. ``wrote=False`` releases a reservation that never
+        produced data: the bytes' true last writers are the carried-forward
+        ones, not the (cancelled) owner."""
+        e = self._by_owner.pop(mid)
+        if e.pinned:
+            raise AssertionError(f"freeing pinned extent of {mid}")
+        e.owner = None
+        e.last_writers = {mid} if wrote else set(e.carried_writers)
+        e.last_direct = set() if wrote else set(e.carried_direct)
+        e.carried_writers = set()
+        e.carried_direct = set()
+        e.last_use = seq
+        self._used -= e.size
+        self._coalesce()
+
+    # -- allocation from free space only (simMalloc) -------------------------
+    def place_free(self, size: int) -> PlacementDecision | None:
+        """Place in free space only (may span several adjacent free extents).
+        §C policy: prefer the window whose last use is furthest in the past."""
+        if size > self.capacity:
+            return None
+        best: tuple[tuple, int] | None = None  # (score, start extent index)
+        n = len(self.extents)
+        i = 0
+        while i < n:
+            if not self.extents[i].free:
+                i += 1
+                continue
+            # maximal free run starting at i
+            run = 0
+            last_use = -1
+            j = i
+            while j < n and self.extents[j].free:
+                run += self.extents[j].size
+                j += 1
+            if run >= size:
+                # recency of the covered window only
+                cov = 0
+                k = i
+                while cov < size:
+                    last_use = max(last_use, self.extents[k].last_use)
+                    cov += self.extents[k].size
+                    k += 1
+                score = (last_use, self.extents[i].offset)
+                if best is None or score < best[0]:
+                    best = (score, i)
+            i = j
+        if best is None:
+            return None
+        return self._carve(self.extents[best[1]].offset, size)
+
+    # -- allocation with eviction (simMallocOffld) ----------------------------
+    def place_evict(
+        self,
+        size: int,
+        next_use: Callable[[int], float],
+        *,
+        allow_cancel: bool = False,
+        victim_policy: str = "belady",
+        rng: random.Random | None = None,
+    ) -> EvictionDecision | None:
+        """Pick a window ``[a, a+size)`` minimizing eviction damage.
+
+        Every extent overlapping the window must be free, or owned by an
+        executed+unpinned vertex (→ offload victim), or — when
+        ``allow_cancel`` — an unexecuted+unpinned reservation (→ cancel).
+        """
+        if size > self.capacity:
+            return None
+        n = len(self.extents)
+        best: tuple[tuple, int] | None = None  # (score key, anchor index)
+        for i in range(n):
+            a = self.extents[i].offset
+            if a + size > self.capacity:
+                break
+            victims, cancels, ok = self._window_victims(i, a, size, allow_cancel)
+            if not ok:
+                continue
+            if victim_policy == "belady":
+                # maximize the minimum next use over evicted tensors (§C)
+                mn = min((next_use(e.owner) for e in victims + cancels),
+                         default=INF)
+                score = (-mn,)
+            elif victim_policy == "lru":
+                mx = max((e.last_use for e in victims + cancels), default=-1)
+                score = (mx,)
+            elif victim_policy == "random":
+                score = ((rng or random).random(),)
+            else:
+                raise ValueError(f"unknown victim policy {victim_policy!r}")
+            evict_bytes = sum(e.size for e in victims + cancels)
+            key = (score, len(cancels), evict_bytes, a)
+            if best is None or key < best[0]:
+                best = (key, i)
+        if best is None:
+            return None
+        i = best[1]
+        a = self.extents[i].offset
+        victims, cancels, _ = self._window_victims(i, a, size, allow_cancel)
+        victim_mids = [e.owner for e in victims]
+        cancel_mids = [e.owner for e in cancels]
+        return EvictionDecision(a, size, set(), victim_mids, cancel_mids)
+
+    def _window_victims(self, i: int, a: int, size: int, allow_cancel: bool):
+        victims: list[Extent] = []
+        cancels: list[Extent] = []
+        for j in range(i, len(self.extents)):
+            e = self.extents[j]
+            if e.offset >= a + size:
+                break
+            if e.free:
+                continue
+            if e.pinned:
+                return [], [], False
+            if e.owner in self._executed_set:
+                victims.append(e)
+            elif allow_cancel:
+                cancels.append(e)
+            else:
+                return [], [], False
+        return victims, cancels, True
+
+    # The builder tells the arena which owners are executed (have data) so
+    # eviction can distinguish offload victims from cancellable reservations.
+    _executed_set: set[int] = set()
+
+    def bind_executed_set(self, executed: set[int]) -> None:
+        self._executed_set = executed
+
+    # -- carving --------------------------------------------------------------
+    def evict_and_carve(self, dec: EvictionDecision, seq: int) -> PlacementDecision:
+        """Free whole victim/cancelled extents, then carve the window."""
+        for mid in dec.victims:
+            self.free(mid, seq, wrote=True)
+        for mid in dec.cancelled:
+            self.free(mid, seq, wrote=False)
+        return self._carve(dec.offset, dec.size)
+
+    def _carve(self, offset: int, size: int) -> PlacementDecision:
+        """Carve ``[offset, offset+size)`` out of free extents (must be free)."""
+        writers: set[int] = set()
+        direct: set[int] = set()
+        i = 0
+        while i < len(self.extents):
+            e = self.extents[i]
+            if e.end <= offset:
+                i += 1
+                continue
+            if e.offset >= offset + size:
+                break
+            if not e.free:
+                raise AssertionError("carve over non-free extent")
+            writers |= e.last_writers
+            direct |= e.last_direct
+            # split head
+            if e.offset < offset:
+                head = Extent(e.offset, offset - e.offset, None,
+                              set(e.last_writers), e.last_use,
+                              last_direct=set(e.last_direct))
+                e.offset, e.size = offset, e.end - offset
+                self.extents.insert(i, head)
+                i += 1
+                continue
+            # split tail
+            if e.end > offset + size:
+                tail = Extent(offset + size, e.end - (offset + size), None,
+                              set(e.last_writers), e.last_use,
+                              last_direct=set(e.last_direct))
+                e.size = offset + size - e.offset
+                self.extents.insert(i + 1, tail)
+            # consume e
+            i += 1
+        # merge the covered free extents into a single placeholder
+        covered = [e for e in self.extents
+                   if e.offset >= offset and e.end <= offset + size]
+        assert covered and covered[0].offset == offset \
+            and covered[-1].end == offset + size, "carve window not covered"
+        keep = covered[0]
+        keep.size = size
+        keep.last_writers = set()
+        keep.last_direct = set()
+        for e in covered[1:]:
+            self.extents.remove(e)
+        return PlacementDecision(offset, size, writers, direct)
+
+    def commit(self, dec: PlacementDecision, mid: int) -> Extent:
+        for e in self.extents:
+            if e.offset == dec.offset and e.size == dec.size and e.free:
+                e.owner = mid
+                e.pinned = 0
+                e.carried_writers = set(dec.prev_writers)
+                e.carried_direct = set(dec.direct_deps)
+                self._by_owner[mid] = e
+                self._used += e.size
+                self.peak_used = max(self.peak_used, self._used)
+                return e
+        raise AssertionError("commit target extent not found")

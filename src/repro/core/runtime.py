@@ -1,0 +1,405 @@
+"""The TURNIP execution engine (paper §5, §B).
+
+Executes a compiled MEMGRAPH with a *nondeterministic, event-driven* loop:
+whenever a vertex's dependencies are complete and a stream on its device is
+free, it may be launched — in any order. Memory management is entirely
+static: every vertex reads/writes the extents assigned at compile time; there
+are no malloc/free calls during execution (paper §5).
+
+Components:
+
+* :class:`HostStore` — the pinned host arena (paper §B ``cudaHostAlloc``):
+  holds graph inputs before execution and offloaded tensors during it.
+* memory backends — :class:`SlotTable` (validating: reads require the exact
+  planned extent to hold live data, so *any* race or planning bug surfaces as
+  a hard error; used by the property tests) and :class:`ByteArena` (a real
+  preallocated byte buffer per device, demonstrating static placement).
+* :func:`run_in_order` — single-threaded reference interpreter executing an
+  arbitrary caller-supplied topological order (the property-test workhorse:
+  every valid order must give identical outputs).
+* :class:`TurnipRuntime` — the threaded event loop with per-device stream
+  pools, ``add_into`` write-locks (§B), optional latency injection (to create
+  real transfer/compute races on this CPU container), and per-device
+  busy/stall timelines. ``mode='fixed'`` reproduces the paper's ablation:
+  vertices are *issued* strictly in the compile-time simulation order.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import random
+import threading
+import time
+from typing import Any, Callable
+
+import numpy as np
+
+from .build import BuildResult
+from .memgraph import Loc, MemGraph, MemOp, MemVertex, RaceError
+from .ops import get_op
+from .taskgraph import OpKind, TaskGraph
+
+__all__ = ["HostStore", "SlotTable", "ByteArena", "run_in_order",
+           "TurnipRuntime", "RunResult"]
+
+
+class HostStore:
+    """Host (CPU-RAM) storage: graph inputs + offloaded tensors."""
+
+    def __init__(self, inputs: dict[int, np.ndarray]) -> None:
+        self.inputs = {t: np.asarray(v) for t, v in inputs.items()}
+        self.offloaded: dict[int, np.ndarray] = {}
+        self.offload_bytes = 0
+        self.reload_bytes = 0
+        self._lock = threading.Lock()
+
+    def put_offload(self, off_mid: int, value: np.ndarray) -> None:
+        with self._lock:
+            self.offloaded[off_mid] = value
+            self.offload_bytes += value.nbytes
+
+    def get_for_reload(self, v: MemVertex) -> np.ndarray:
+        with self._lock:
+            if v.operands:
+                val = self.offloaded[v.operands[0]]
+            else:
+                val = self.inputs[v.src_tid]   # immutable input store
+            self.reload_bytes += val.nbytes
+        return val
+
+
+# --------------------------------------------------------------------------
+# memory backends
+# --------------------------------------------------------------------------
+class SlotTable:
+    """Validating memory model: an extent holds a value only between a write
+    and the next overlapping write. Reading a missing/clobbered extent raises
+    :class:`RaceError` — this is how the tests prove race-freedom."""
+
+    def __init__(self) -> None:
+        self._mem: dict[int, dict[tuple[int, int], np.ndarray]] = {}
+        self._lock = threading.Lock()
+
+    def write(self, loc: Loc, value: np.ndarray) -> None:
+        with self._lock:
+            dev = self._mem.setdefault(loc.device, {})
+            span = (loc.offset, loc.size)
+            for (o, s) in list(dev):
+                if o < loc.offset + loc.size and loc.offset < o + s \
+                        and (o, s) != span:
+                    del dev[(o, s)]
+            dev[span] = value
+
+    def read(self, loc: Loc) -> np.ndarray:
+        with self._lock:
+            dev = self._mem.get(loc.device, {})
+            try:
+                return dev[(loc.offset, loc.size)]
+            except KeyError:
+                raise RaceError(
+                    f"read of dead/clobbered extent {loc} — racy order or "
+                    f"bad memory plan") from None
+
+    def drop(self, loc: Loc) -> None:
+        with self._lock:
+            self._mem.get(loc.device, {}).pop((loc.offset, loc.size), None)
+
+
+class ByteArena:
+    """Real static placement: one preallocated buffer per device; extents are
+    byte ranges (requires the MEMGRAPH to have been built with byte sizes)."""
+
+    def __init__(self, capacities: dict[int, int]) -> None:
+        self.bufs = {d: np.zeros(c, np.uint8) for d, c in capacities.items()}
+        self.specs: dict[tuple[int, int, int], tuple] = {}
+        self._lock = threading.Lock()
+
+    def write(self, loc: Loc, value: np.ndarray) -> None:
+        raw = np.ascontiguousarray(value).view(np.uint8).reshape(-1)
+        if raw.nbytes > loc.size:
+            raise RaceError(f"value of {raw.nbytes}B exceeds extent {loc}")
+        buf = self.bufs[loc.device]
+        buf[loc.offset:loc.offset + raw.nbytes] = raw
+        with self._lock:
+            self.specs[(loc.device, loc.offset, loc.size)] = \
+                (value.shape, value.dtype, raw.nbytes)
+
+    def read(self, loc: Loc) -> np.ndarray:
+        with self._lock:
+            shape, dtype, nbytes = self.specs[(loc.device, loc.offset, loc.size)]
+        raw = self.bufs[loc.device][loc.offset:loc.offset + nbytes]
+        return raw.view(dtype).reshape(shape)
+
+    def drop(self, loc: Loc) -> None:
+        pass
+
+
+# --------------------------------------------------------------------------
+# vertex execution (shared by interpreter and threaded runtime)
+# --------------------------------------------------------------------------
+def _exec_vertex(v: MemVertex, mg: MemGraph, tg: TaskGraph, mem,
+                 host: HostStore) -> None:
+    if v.op == MemOp.INPUT:
+        mem.write(v.loc, host.inputs[v.src_tid])
+    elif v.op in (MemOp.COMPUTE, MemOp.TRANSFER):
+        vals = [mem.read(mg.vertices[m].loc) for m in v.operands]
+        fn = get_op(v.op_name or ("copy" if v.op == MemOp.TRANSFER else ""))
+        out = fn(*vals, **v.params)
+        mem.write(v.loc, np.asarray(out))
+    elif v.op == MemOp.OFFLOAD:
+        val = mem.read(mg.vertices[v.operands[0]].loc)
+        host.put_offload(v.mid, np.array(val, copy=True))
+    elif v.op == MemOp.RELOAD:
+        mem.write(v.loc, host.get_for_reload(v))
+    elif v.op == MemOp.ALLOC0:
+        spec = tg.vertices[v.src_tid].out
+        mem.write(v.loc, np.zeros(spec.shape, spec.np_dtype))
+    elif v.op == MemOp.ADD_INTO:
+        acc = mem.read(v.loc)
+        val = mem.read(mg.vertices[v.operands[0]].loc)
+        mem.write(v.loc, acc + val)
+    elif v.op == MemOp.JOIN:
+        pass  # completion marker: the accumulator already holds the value
+    else:  # pragma: no cover
+        raise AssertionError(f"unknown op {v.op}")
+
+
+def _collect_outputs(tg: TaskGraph, res: BuildResult, mem,
+                     host: HostStore) -> dict[int, np.ndarray]:
+    outs: dict[int, np.ndarray] = {}
+    for tid in tg.vertices:
+        if not tg.consumers(tid):
+            kind, ref = res.final_value_location(tid)
+            if kind == "host":
+                outs[tid] = (host.offloaded[ref] if ref in host.offloaded
+                             else host.inputs[tid])
+            else:
+                outs[tid] = mem.read(res.memgraph.vertices[ref].loc)
+    return outs
+
+
+def eval_taskgraph(tg: TaskGraph,
+                   inputs: dict[int, np.ndarray]) -> dict[int, np.ndarray]:
+    """Direct dataflow evaluation of a TASKGRAPH (no memory plan) — the
+    ground-truth oracle the MEMGRAPH runtime must match in any order."""
+    vals: dict[int, np.ndarray] = {}
+    for tid in tg.topo_order():
+        v = tg.vertices[tid]
+        if v.kind == OpKind.INPUT:
+            vals[tid] = np.asarray(inputs[tid])
+        elif v.kind == OpKind.TRANSFER:
+            vals[tid] = vals[v.inputs[0]]
+        elif v.kind == OpKind.REDUCE:
+            out = vals[v.inputs[0]]
+            for i in v.inputs[1:]:
+                out = out + vals[i]
+            vals[tid] = out
+        else:
+            vals[tid] = np.asarray(
+                get_op(v.op)(*[vals[i] for i in v.inputs], **v.params))
+    return {t: vals[t] for t in tg.vertices if not tg.consumers(t)}
+
+
+def run_in_order(tg: TaskGraph, res: BuildResult,
+                 inputs: dict[int, np.ndarray],
+                 order: list[int] | None = None) -> dict[int, np.ndarray]:
+    """Reference interpreter: execute ``order`` (any topological order of the
+    MEMGRAPH; defaults to the compile-time simulation order) sequentially.
+    Raises :class:`RaceError` if the order violates the plan's memory safety
+    — which, for orders respecting the dependencies, must never happen."""
+    mg = res.memgraph
+    if order is None:
+        order = sorted(mg.vertices, key=lambda m: mg.vertices[m].seq)
+    done: set[int] = set()
+    for m in order:
+        if any(p not in done for p in mg.preds[m]):
+            raise ValueError(f"order is not topological at vertex {m}")
+        done.add(m)
+    host = HostStore(inputs)
+    mem = SlotTable()
+    for m in order:
+        _exec_vertex(mg.vertices[m], mg, tg, mem, host)
+    return _collect_outputs(tg, res, mem, host)
+
+
+# --------------------------------------------------------------------------
+# threaded, event-driven runtime
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class RunResult:
+    outputs: dict[int, np.ndarray]
+    makespan: float
+    busy: dict[int, float]               # per device: seconds doing work
+    stall: dict[int, float]              # makespan - busy (per device)
+    offload_bytes: int
+    reload_bytes: int
+    timeline: list[tuple[float, float, int, str]]  # (t0, t1, device, name)
+
+
+class TurnipRuntime:
+    """Event-driven nondeterministic executor (paper §5/§B).
+
+    ``mode='nondet'`` — any ready vertex may launch on any free stream of its
+    device (the paper's design). ``mode='fixed'`` — the ablation: vertices
+    are issued in the compile-time simulation order (still asynchronous once
+    issued, matching the paper's "mostly removed" nondeterminism).
+
+    ``latency`` — optional ``fn(vertex) -> seconds`` injected as a sleep
+    before the op runs; used to emulate slow PCIe transfers on this CPU-only
+    container so the two modes actually diverge.
+    """
+
+    def __init__(self, tg: TaskGraph, res: BuildResult, *,
+                 n_streams: int = 5, mode: str = "nondet",
+                 latency: Callable[[MemVertex], float] | None = None,
+                 backend: str = "slots",
+                 capacities: dict[int, int] | None = None,
+                 seed: int | None = None) -> None:
+        if mode not in ("nondet", "fixed"):
+            raise ValueError(mode)
+        self.tg, self.res, self.mg = tg, res, res.memgraph
+        self.n_streams = n_streams
+        self.mode = mode
+        self.latency = latency
+        self.backend = backend
+        self.capacities = capacities
+        self.rng = random.Random(seed)
+
+    def run(self, inputs: dict[int, np.ndarray]) -> RunResult:
+        mg = self.mg
+        host = HostStore(inputs)
+        if self.backend == "bytes":
+            if self.capacities is None:
+                raise ValueError("ByteArena backend needs capacities")
+            mem: Any = ByteArena(self.capacities)
+        else:
+            mem = SlotTable()
+
+        remaining = {m: len(mg.preds[m]) for m in mg.vertices}
+        ready: "queue.PriorityQueue[tuple[float, int]]" = queue.PriorityQueue()
+        locks: dict[tuple[int, int], threading.Lock] = {}
+        for m, v in mg.vertices.items():
+            if v.lock_group is not None:
+                locks.setdefault(v.lock_group, threading.Lock())
+        state_lock = threading.Lock()
+        n_done = 0
+        total = len(mg.vertices)
+        done_evt = threading.Event()
+        errors: list[BaseException] = []
+        timeline: list[tuple[float, float, int, str]] = []
+        t0 = time.perf_counter()
+
+        def priority(m: int) -> float:
+            if self.mode == "fixed":
+                return float(mg.vertices[m].seq)
+            return self.rng.random()   # any order: stress nondeterminism
+
+        def on_complete(m: int) -> None:
+            nonlocal n_done
+            with state_lock:
+                n_done += 1
+                if n_done == total:
+                    done_evt.set()
+                for s in mg.succs[m]:
+                    remaining[s] -= 1
+                    if remaining[s] == 0:
+                        ready.put((priority(s), s))
+
+        def work(m: int) -> None:
+            v = mg.vertices[m]
+            t_start = time.perf_counter() - t0
+            try:
+                if self.latency is not None:
+                    d = self.latency(v)
+                    if d > 0:
+                        time.sleep(d)
+                lk = locks.get(v.lock_group) if v.lock_group else None
+                if lk is not None and v.op == MemOp.ADD_INTO:
+                    with lk:   # §B: write-protected sum-into
+                        _exec_vertex(v, mg, self.tg, mem, host)
+                else:
+                    _exec_vertex(v, mg, self.tg, mem, host)
+            except BaseException as e:   # surface in the caller
+                errors.append(e)
+                done_evt.set()
+                return
+            t_end = time.perf_counter() - t0
+            timeline.append((t_start, t_end, v.device, v.name or str(m)))
+            on_complete(m)
+
+        # per-device stream pools (paper: 5 CUDA streams per GPU)
+        devices = sorted({v.device for v in mg.vertices.values()})
+        stop = threading.Event()
+        dev_queues: dict[int, "queue.Queue[int]"] = {d: queue.Queue()
+                                                     for d in devices}
+
+        def stream_worker(dev: int) -> None:
+            q = dev_queues[dev]
+            while not stop.is_set():
+                try:
+                    m = q.get(timeout=0.01)
+                except queue.Empty:
+                    continue
+                work(m)
+
+        threads = [threading.Thread(target=stream_worker, args=(d,),
+                                    daemon=True)
+                   for d in devices for _ in range(self.n_streams)]
+        for th in threads:
+            th.start()
+
+        # the central event loop: move ready vertices to device queues.
+        # in 'fixed' mode, issue strictly in simulation order.
+        with state_lock:
+            for m, r in remaining.items():
+                if r == 0:
+                    ready.put((priority(m), m))
+        issued = 0
+        next_seq = 0
+        seq_of = {mg.vertices[m].seq: m for m in mg.vertices}
+        pending_fixed: dict[int, int] = {}
+        while not done_evt.is_set() and not errors:
+            try:
+                _, m = ready.get(timeout=0.01)
+            except queue.Empty:
+                continue
+            if self.mode == "fixed":
+                pending_fixed[mg.vertices[m].seq] = m
+                while next_seq in pending_fixed:
+                    mm = pending_fixed.pop(next_seq)
+                    dev_queues[mg.vertices[mm].device].put(mm)
+                    next_seq += 1
+                    issued += 1
+            else:
+                dev_queues[mg.vertices[m].device].put(m)
+                issued += 1
+        stop.set()
+        for th in threads:
+            th.join(timeout=2.0)
+        if errors:
+            raise errors[0]
+
+        makespan = time.perf_counter() - t0
+        busy = {d: 0.0 for d in devices}
+        by_dev: dict[int, list[tuple[float, float]]] = {d: [] for d in devices}
+        for (a, b, d, _name) in timeline:
+            by_dev[d].append((a, b))
+        for d, spans in by_dev.items():   # union of stream intervals
+            spans.sort()
+            cur_a, cur_b = None, None
+            for a, b in spans:
+                if cur_b is None or a > cur_b:
+                    if cur_b is not None:
+                        busy[d] += cur_b - cur_a
+                    cur_a, cur_b = a, b
+                else:
+                    cur_b = max(cur_b, b)
+            if cur_b is not None:
+                busy[d] += cur_b - cur_a
+        stall = {d: makespan - busy[d] for d in devices}
+        return RunResult(
+            outputs=_collect_outputs(self.tg, self.res, mem, host),
+            makespan=makespan, busy=busy, stall=stall,
+            offload_bytes=host.offload_bytes, reload_bytes=host.reload_bytes,
+            timeline=sorted(timeline),
+        )

@@ -1,0 +1,108 @@
+"""Fault tolerance: heartbeat supervision, straggler mitigation, restart.
+
+Scope note (DESIGN.md §5): on a real fleet, per-step collectives are XLA's
+job; what the *framework* owns is (a) detecting dead/slow hosts, (b)
+checkpoint/restart with elastic re-mesh, and (c) straggler mitigation for
+host-side work — which TURNIP's nondeterministic dispatch makes natural:
+a vertex assigned to a slow worker can simply be re-dispatched elsewhere,
+because any dependency-respecting executor is valid (paper §5).
+
+Components:
+
+* :class:`Heartbeat` — worker liveness with configurable timeout.
+* :class:`Supervisor` — drives a train loop: run step → on failure, restore
+  the latest complete checkpoint (ckpt.store guarantees atomicity) and
+  continue, optionally on a different worker count (the data pipeline is
+  topology-independent, so the stream is unaffected).
+* :func:`speculative_redispatch` — TURNIP-side straggler mitigation: when a
+  vertex's runtime exceeds ``factor``× the median for its op type, a clone
+  is dispatched on another free stream; first completion wins (results are
+  idempotent writes to the planned extent).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+__all__ = ["Heartbeat", "Supervisor", "speculative_redispatch"]
+
+
+class Heartbeat:
+    def __init__(self, timeout_s: float = 30.0) -> None:
+        self.timeout_s = timeout_s
+        self.last_beat: dict[str, float] = {}
+
+    def beat(self, worker: str, now: float | None = None) -> None:
+        self.last_beat[worker] = time.monotonic() if now is None else now
+
+    def dead_workers(self, now: float | None = None) -> list[str]:
+        now = time.monotonic() if now is None else now
+        return [w for w, t in self.last_beat.items()
+                if now - t > self.timeout_s]
+
+
+@dataclasses.dataclass
+class SupervisorReport:
+    steps_run: int
+    restarts: int
+    final_step: int
+    history: list[str]
+
+
+class Supervisor:
+    """Run-to-completion driver with checkpoint/restart.
+
+    ``step_fn(state, batch) -> (state, metrics)`` may raise — any exception
+    triggers restore-from-latest + resume. ``save_every`` controls the
+    checkpoint cadence; the data stream is addressed purely by step index.
+    """
+
+    def __init__(self, *, ckpt_dir: str, save_every: int = 10,
+                 max_restarts: int = 5) -> None:
+        self.ckpt_dir = ckpt_dir
+        self.save_every = save_every
+        self.max_restarts = max_restarts
+
+    def run(self, state: Any, step_fn: Callable, batch_fn: Callable,
+            n_steps: int, *, start_step: int = 0) -> tuple[Any, SupervisorReport]:
+        from ..ckpt.store import latest_step, restore_checkpoint, \
+            save_checkpoint
+        history: list[str] = []
+        restarts = 0
+        step = start_step
+        steps_run = 0
+        while step < n_steps:
+            try:
+                state, metrics = step_fn(state, batch_fn(step))
+                steps_run += 1
+                step += 1
+                if step % self.save_every == 0 or step == n_steps:
+                    save_checkpoint(self.ckpt_dir, step, state)
+                    history.append(f"ckpt@{step}")
+            except Exception as e:   # noqa: BLE001 — any failure → restart
+                restarts += 1
+                history.append(f"fail@{step}:{type(e).__name__}")
+                if restarts > self.max_restarts:
+                    raise
+                last = latest_step(self.ckpt_dir)
+                if last is None:
+                    raise
+                state, step = restore_checkpoint(self.ckpt_dir, state)
+                history.append(f"restored@{step}")
+        return state, SupervisorReport(steps_run, restarts, step, history)
+
+
+def speculative_redispatch(durations: dict[int, float], op_medians:
+                           dict[str, float], vertex_ops: dict[int, str],
+                           *, factor: float = 3.0) -> list[int]:
+    """Straggler rule: vertices running ≥ factor× the median duration of
+    their op class are candidates for speculative re-dispatch. Pure policy
+    function (unit-tested; the threaded runtime consults it per event-loop
+    wakeup)."""
+    out = []
+    for mid, dur in durations.items():
+        med = op_medians.get(vertex_ops.get(mid, ""), None)
+        if med is not None and med > 0 and dur >= factor * med:
+            out.append(mid)
+    return out

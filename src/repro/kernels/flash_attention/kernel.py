@@ -1,0 +1,112 @@
+"""Flash attention Pallas TPU kernel (causal, GQA).
+
+TPU-native tiling: the grid is (batch, q_head, q_blocks, kv_blocks) with the
+kv dimension innermost — TPU grids execute sequentially over the last axis,
+so the online-softmax running state (m, l, acc) lives in VMEM scratch and
+carries across kv blocks while the ``pallas_call`` pipeline double-buffers
+the next K/V tiles from HBM (the intra-kernel mirror of TURNIP's
+transfer/compute overlap — DESIGN.md §2). Block shapes default to MXU-
+aligned (128, 128) tiles.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 scale: float, causal: bool, block_q: int, block_kv: int,
+                 seq_kv: int, q_offset: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # [bq, d]
+    k = k_ref[0, 0].astype(jnp.float32)                  # [bk, d]
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 0) + q_offset
+    kv_pos = ik * block_kv + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 1)
+    mask = kv_pos < seq_kv
+    if causal:
+        mask = mask & (kv_pos <= q_pos)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                                   # [bq, 128]
+    m_cur = jnp.max(s, axis=1, keepdims=True)             # [bq, 1]
+    m_new = jnp.maximum(m_prev, jnp.broadcast_to(m_cur, m_prev.shape))
+    corr = jnp.exp(m_prev[:, :1] - m_new[:, :1])          # [bq, 1]
+    p = jnp.exp(s - m_new[:, :1])                         # [bq, bk]
+    l_new = l_scr[...] * corr + jnp.broadcast_to(
+        jnp.sum(p, axis=1, keepdims=True), l_scr.shape)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ik == nk - 1)
+    def _fin():
+        l = l_scr[:, :1]
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q, k, v, *, causal: bool = True,
+                           q_offset: int = 0, block_q: int = 128,
+                           block_kv: int = 128, interpret: bool = False,
+                           true_skv: int | None = None):
+    """q: [B, Hq, Sq, Dh]; k/v: [B, Hkv, Skv, Dh]; returns [B, Hq, Sq, Dh].
+    ``true_skv``: unpadded KV length (padding tail is masked out)."""
+    B, Hq, Sq, Dh = q.shape
+    _, Hkv, Skv, _ = k.shape
+    assert Hq % Hkv == 0
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(Dh)
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Skv)
+    nq = pl.cdiv(Sq, block_q)
+    nk = pl.cdiv(Skv, block_kv)
+
+    from jax.experimental.pallas import tpu as pltpu
+    grid = (B, Hq, nq, nk)
+    return pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale, causal=causal,
+                          block_q=block_q, block_kv=block_kv,
+                          seq_kv=true_skv if true_skv is not None else Skv,
+                          q_offset=q_offset),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, Dh),
+                         lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_kv, Dh),
+                         lambda b, h, iq, ik, G=G: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, block_kv, Dh),
+                         lambda b, h, iq, ik, G=G: (b, h // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, Dh),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 128), jnp.float32),   # running max
+            pltpu.VMEM((block_q, 128), jnp.float32),   # running sum
+            pltpu.VMEM((block_q, Dh), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

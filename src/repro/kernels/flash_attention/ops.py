@@ -1,0 +1,40 @@
+"""jit'd public wrapper for the flash attention kernel.
+
+Accepts model-layout tensors ([B, S, H, Dh]) and handles padding to block
+multiples; ``interpret=True`` runs the kernel body in Python on CPU (the
+validation mode used by the test suite on this container)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_kernel
+from .ref import attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_kv",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_kv: int = 128, interpret: bool = False):
+    """q: [B, Sq, Hq, Dh]; k/v: [B, Skv, Hkv, Dh] → [B, Sq, Hq, Dh]."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    Sq, Skv = qt.shape[2], kt.shape[2]
+    bq = min(block_q, Sq)
+    bk = min(block_kv, Skv)
+    pq = (-Sq) % bq
+    pk = (-Skv) % bk
+    if pq:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    o = flash_attention_kernel(qt, kt, vt, causal=causal, block_q=bq,
+                               block_kv=bk, interpret=interpret,
+                               true_skv=Skv)
+    if pq:
+        o = o[:, :, :Sq]
+    return o.transpose(0, 2, 1, 3)

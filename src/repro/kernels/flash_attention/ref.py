@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, q_offset: int = 0):
+    """q: [B, Hq, Sq, Dh]; k/v: [B, Hkv, Skv, Dh] — materializes the full
+    score matrix (f32), the correctness oracle for the Pallas kernel."""
+    B, Hq, Sq, Dh = q.shape
+    _, Hkv, Skv, _ = k.shape
+    G = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, Sq, Dh)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf) / math.sqrt(Dh)
+    if causal:
+        qpos = jnp.arange(Sq) + q_offset
+        kpos = jnp.arange(Skv)
+        mask = kpos[None, :] <= qpos[:, None]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    return o.reshape(B, Hq, Sq, Dh).astype(q.dtype)

@@ -1,0 +1,57 @@
+"""Grouped expert matmul (MegaBlocks-style) Pallas TPU kernel.
+
+Computes ``out[e] = x[e] @ w[e]`` for E experts with MXU-aligned tiles:
+grid (E, C/bc, F/bf, D/bd), contraction innermost with an f32 VMEM
+accumulator. This is the dense-grouped form matching the capacity-dispatch
+MoE layer (buffers [E, C, D]); on TPU one kernel instance per expert tile
+avoids E separate XLA dots and keeps the weight tile resident in VMEM across
+the C dimension.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gmm_kernel(x_ref, w_ref, o_ref, acc_scr):
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    acc_scr[...] += jax.lax.dot_general(
+        x_ref[0].astype(jnp.float32), w_ref[0].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ik == nk - 1)
+    def _fin():
+        o_ref[0] = acc_scr[...].astype(o_ref.dtype)
+
+
+def moe_gmm_kernel(x, w, *, block_c: int = 128, block_f: int = 128,
+                   block_d: int = 512, interpret: bool = False):
+    """x: [E, C, D]; w: [E, D, F] → [E, C, F]."""
+    E, C, D = x.shape
+    _, _, F = w.shape
+    bc = min(block_c, C)
+    bf = min(block_f, F)
+    bd = min(block_d, D)
+    assert C % bc == 0 and F % bf == 0 and D % bd == 0
+    from jax.experimental.pallas import tpu as pltpu
+    return pl.pallas_call(
+        _gmm_kernel,
+        grid=(E, C // bc, F // bf, D // bd),
+        in_specs=[
+            pl.BlockSpec((1, bc, bd), lambda e, ic, jf, kd: (e, ic, kd)),
+            pl.BlockSpec((1, bd, bf), lambda e, ic, jf, kd: (e, kd, jf)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bf), lambda e, ic, jf, kd: (e, ic, jf)),
+        out_shape=jax.ShapeDtypeStruct((E, C, F), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

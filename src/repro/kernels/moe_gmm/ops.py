@@ -1,0 +1,26 @@
+"""jit'd wrapper: pads C/F/D up to tile multiples."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import moe_gmm_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_f", "block_d",
+                                             "interpret"))
+def moe_gmm(x, w, *, block_c: int = 128, block_f: int = 128,
+            block_d: int = 512, interpret: bool = False):
+    E, C, D = x.shape
+    _, _, F = w.shape
+    bc, bf, bd = min(block_c, C), min(block_f, F), min(block_d, D)
+    pc, pf, pd = (-C) % bc, (-F) % bf, (-D) % bd
+    if pc or pd:
+        x = jnp.pad(x, ((0, 0), (0, pc), (0, pd)))
+    if pd or pf:
+        w = jnp.pad(w, ((0, 0), (0, pd), (0, pf)))
+    o = moe_gmm_kernel(x, w, block_c=bc, block_f=bf, block_d=bd,
+                       interpret=interpret)
+    return o[:, :C, :F]

@@ -1,0 +1,26 @@
+"""jit'd wrapper: accepts [..., D], flattens to rows, pads to block size."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import rmsnorm_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(x, g, *, eps: float = 1e-6, block_rows: int = 256,
+            interpret: bool = False):
+    shape = x.shape
+    D = shape[-1]
+    x2 = x.reshape(-1, D)
+    N = x2.shape[0]
+    br = min(block_rows, N)
+    pad = (-N) % br
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    o = rmsnorm_kernel(x2, g, eps=eps, block_rows=br, interpret=interpret)
+    if pad:
+        o = o[:N]
+    return o.reshape(shape)

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the fused RMSNorm kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x, g, *, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+            * g.astype(jnp.float32)).astype(x.dtype)

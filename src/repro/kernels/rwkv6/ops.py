@@ -1,0 +1,23 @@
+"""jit'd wrapper: pads S to a chunk multiple (decay padding = 0 log-decay,
+which leaves the state untouched for padded steps... actually padded k rows
+contribute 0 via zero k/v; lw padding of 0 keeps exp terms bounded)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import wkv6_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r, k, v, lw, u, *, chunk: int = 32, interpret: bool = False):
+    B, S, H, P = r.shape
+    c = min(chunk, S)
+    pad = (-S) % c
+    if pad:
+        z = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v, lw = z(r), z(k), z(v), z(lw)
+    y = wkv6_kernel(r, k, v, lw, u, chunk=c, interpret=interpret)
+    return y[:, :S] if pad else y

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle: the model's chunked WKV6 (itself validated against a
+naive per-token recurrence in the test suite)."""
+from repro.models.rwkv import wkv6_chunked
+
+
+def wkv6_ref(r, k, v, lw, u, chunk: int = 32):
+    y, _ = wkv6_chunked(r, k, v, lw, u, chunk=chunk)
+    return y

@@ -1,0 +1,24 @@
+"""jit'd wrapper: pads S to a chunk multiple, dispatches the kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_scan_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(xh, dt, A, Bm, Cm, *, chunk: int = 128,
+             interpret: bool = False):
+    B, S, H, P = xh.shape
+    c = min(chunk, S)
+    pad = (-S) % c
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    y = ssd_scan_kernel(xh, dt, A, Bm, Cm, chunk=c, interpret=interpret)
+    return y[:, :S] if pad else y

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle: the model's own chunked SSD (validated against a naive
+per-token recurrence in tests)."""
+from repro.models.ssm import _ssd_chunked
+
+
+def ssd_scan_ref(xh, dt, A, Bm, Cm, chunk: int = 128):
+    y, _ = _ssd_chunked(xh, dt, A, Bm, Cm, chunk=chunk)
+    return y

@@ -1,0 +1,245 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST precede any jax-importing import: jax locks the device count on
+# first backend init. Only the dry-run gets 512 placeholder devices.
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape) cell, build the pjit'd step function
+(train_step for ``train`` shapes, serve prefill/decode for the others),
+``.lower().compile()`` it against the production mesh, and record:
+
+* ``compiled.memory_analysis()``  — proves the plan fits per-device HBM;
+* ``compiled.cost_analysis()``   — HLO FLOPs / bytes for §Roofline;
+* collective bytes parsed from the optimized HLO (all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute), with while-loop trip
+  counts folded in.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-3b \
+        --shape train_4k [--multipod] [--out experiments/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multipod]
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import (SHAPES, ARCHS, ASSIGNED, applicable_shapes, get_arch,
+                       input_specs)
+from ..models import build_model
+from ..sharding.rules import (batch_sharding, cache_sharding, param_sharding,
+                              scalar_sharding)
+from ..train.optim import AdamW
+from ..train.step import make_train_step
+from .mesh import make_production_mesh
+from .hlo_analysis import collective_bytes_from_hlo, hlo_cost_with_trips
+
+
+def _sds_tree(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def lower_cell(arch_name: str, shape_name: str, *, multi_pod: bool = False,
+               remat: str = "full", block_kv: int = 1024,
+               kv_cache_dtype: str = "bf16", extra_tag: str = "",
+               dump_hlo: str | None = None,
+               mesh_shape: tuple[int, ...] | None = None) -> dict:
+    """Lower + compile one (arch × shape) cell; return the artifact record."""
+    cfg = get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod, shape=mesh_shape)
+    kw = {}
+    if cfg.family in ("dense", "moe"):
+        kw["kv_cache_dtype"] = kv_cache_dtype
+    model = build_model(cfg, remat=remat if shape.kind == "train" else None,
+                        block_kv=block_kv, **kw)
+    key = jax.random.PRNGKey(0)
+
+    specs = input_specs(cfg, shape)
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            opt = AdamW()
+            state_shapes = jax.eval_shape(
+                lambda k: {"params": model.init(k),
+                           "opt": opt.init(jax.eval_shape(model.init, k)),
+                           "step": jnp.zeros((), jnp.int32)}, key)
+            state_sh = {
+                "params": param_sharding(state_shapes["params"], mesh),
+                "opt": {"m": param_sharding(state_shapes["opt"]["m"], mesh),
+                        "v": param_sharding(state_shapes["opt"]["v"], mesh),
+                        "count": scalar_sharding(mesh)},
+                "step": scalar_sharding(mesh),
+            }
+            batch_sh = batch_sharding(specs, mesh)
+            step_fn = make_train_step(model, opt)
+            metric_sh = {"loss": scalar_sharding(mesh),
+                         "grad_norm": scalar_sharding(mesh)}
+            jitted = jax.jit(step_fn, in_shardings=(state_sh, batch_sh),
+                             out_shardings=(state_sh, metric_sh),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_shapes, specs)
+        elif shape.kind == "prefill":
+            params_shapes = jax.eval_shape(model.init, key)
+            params_sh = param_sharding(params_shapes, mesh)
+            batch_sh = batch_sharding(specs, mesh)
+
+            if cfg.family == "encdec":
+                def prefill(params, batch):
+                    return model.apply(params, batch["tokens"],
+                                       encoder_embeds=batch["encoder_embeds"])
+            elif cfg.frontend == "vit":
+                def prefill(params, batch):
+                    return model.apply(params, batch["tokens"],
+                                       vision_embeds=batch["vision_embeds"])
+            else:
+                def prefill(params, batch):
+                    return model.apply(params, batch["tokens"])
+            jitted = jax.jit(prefill, in_shardings=(params_sh, batch_sh))
+            lowered = jitted.lower(params_shapes, specs)
+        else:  # decode
+            params_shapes = jax.eval_shape(model.init, key)
+            params_sh = param_sharding(params_shapes, mesh)
+            B, S = shape.global_batch, shape.seq_len
+            if cfg.family == "encdec":
+                cache_shapes = jax.eval_shape(
+                    lambda: model.init_cache(B, S, S))
+            else:
+                cache_shapes = jax.eval_shape(
+                    lambda: model.init_cache(B, S))
+            cache_sh = cache_sharding(cache_shapes, mesh)
+            tok_sh = batch_sharding(
+                {"token": specs["token"]}, mesh)["token"]
+
+            def serve_step(params, cache, token, cache_len):
+                return model.decode_step(params, cache, token, cache_len)
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            logits_sh = NamedSharding(mesh, P(None, "model"))
+            jitted = jax.jit(
+                serve_step,
+                in_shardings=(params_sh, cache_sh, tok_sh,
+                              scalar_sharding(mesh)),
+                out_shardings=(logits_sh, cache_sh),
+                donate_argnums=(1,))
+            lowered = jitted.lower(params_shapes, cache_shapes,
+                                   specs["token"], specs["cache_len"])
+
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    if dump_hlo:
+        import gzip
+        with gzip.open(dump_hlo, "wt") as fh:
+            fh.write(hlo)
+    hc = hlo_cost_with_trips(hlo)   # XLA cost_analysis counts scan bodies
+    coll = hc["collectives"]         # once; this folds loop trip counts
+    n_dev = mesh.devices.size
+    record = {
+        "arch": arch_name,
+        "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "n_devices": int(n_dev),
+        "kind": shape.kind,
+        "tag": extra_tag,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_bytes_per_device": (mem.argument_size_in_bytes
+                                      + mem.output_size_in_bytes
+                                      + mem.temp_size_in_bytes
+                                      - mem.alias_size_in_bytes),
+            "host_temp_bytes": mem.host_temp_size_in_bytes,
+        },
+        "cost": {
+            "flops": hc["flops"],
+            "bytes_accessed": hc["bytes_accessed"],
+            "xla_raw_flops": cost.get("flops", 0.0),
+            "xla_raw_bytes": cost.get("bytes accessed", 0.0),
+        },
+        "collectives": coll,
+        "model": {
+            "params": get_arch(arch_name).param_count,
+            "active_params": get_arch(arch_name).active_param_count,
+        },
+    }
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--block-kv", type=int, default=1024)
+    ap.add_argument("--kv-cache-dtype", default="bf16")
+    ap.add_argument("--dump-hlo", action="store_true")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="override (data,model), e.g. 32x8")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        for a in ASSIGNED:
+            for s in applicable_shapes(get_arch(a)):
+                cells.append((a, s))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape (or --all) required")
+        cells.append((args.arch, args.shape))
+
+    pod = "multi" if args.multipod else "single"
+    failures = 0
+    for a, s in cells:
+        fn = out_dir / f"{a}__{s}__{pod}{args.tag}.json"
+        if args.skip_existing and fn.exists():
+            print(f"SKIP {a:24s} {s:12s} {pod}: exists", flush=True)
+            continue
+        try:
+            ms = (tuple(int(x) for x in args.mesh_shape.split("x"))
+                  if args.mesh_shape else None)
+            rec = lower_cell(a, s, multi_pod=args.multipod,
+                             remat=args.remat, block_kv=args.block_kv,
+                             kv_cache_dtype=args.kv_cache_dtype,
+                             extra_tag=args.tag, mesh_shape=ms,
+                             dump_hlo=(str(fn) + ".hlo.gz"
+                                       if args.dump_hlo else None))
+            fn.write_text(json.dumps(rec, indent=1))
+            m = rec["memory"]["peak_bytes_per_device"] / 2**30
+            print(f"OK   {a:24s} {s:12s} {pod}: peak {m:.2f} GiB/dev, "
+                  f"flops {rec['cost']['flops']:.3e}, "
+                  f"coll {rec['collectives']['total_bytes']:.3e} B "
+                  f"(compile {rec['compile_s']}s)", flush=True)
+        except Exception as e:
+            failures += 1
+            fn.with_suffix(".err").write_text(traceback.format_exc())
+            print(f"FAIL {a:24s} {s:12s} {pod}: {type(e).__name__}: {e}",
+                  flush=True)
+    if failures:
+        raise SystemExit(f"{failures} dry-run cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,325 @@
+"""Collective-bytes accounting from optimized HLO text (§Roofline input).
+
+``cost_analysis()`` does not report collective traffic, so we parse the
+compiled module: sum the *result* bytes of every collective instruction
+(all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute,
+including their async ``-start`` forms), and multiply instructions inside
+``while`` bodies by the loop trip count (scan-over-layers!). Trip counts are
+recovered from the canonical XLA counter pattern (compare against a
+constant in the loop condition).
+
+This is a *model* of traffic, not a measurement: all-reduce is counted once
+(ring cost ≈ 2·bytes·(N-1)/N — noted in the roofline write-up), and
+reduce-scatter/all-gather result bytes match their per-device payload.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one 'dtype[a,b,c]' or a '(t1, t2, ...)' tuple string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        # computation header: `[ENTRY] %name (args...) -> result {`
+        # (args may contain nested parens — match lazily up to `->`)
+        m = re.match(r"\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$", line)
+        if m:
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if cur is not None:
+            if line.strip().startswith("}"):
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+def collective_bytes_from_hlo(hlo: str) -> dict:
+    comps = _split_computations(hlo)
+
+    # trip count per while body: find `while` instrs, map body comp -> count
+    # canonical counter: condition compares s32 iterator to constant.
+    def find_const(comp_lines: list[str]) -> int | None:
+        consts = [int(m.group(1)) for ln in comp_lines
+                  for m in [re.search(r"constant\((\d+)\)", ln)] if m]
+        return max(consts) if consts else None
+
+    while_info: list[tuple[str, str, str]] = []   # (comp, body, cond)
+    for cname, lines in comps.items():
+        for ln in lines:
+            m = re.search(r"while\(.*?\).*?condition=%?([\w.\-]+).*?"
+                          r"body=%?([\w.\-]+)", ln)
+            if not m:
+                m2 = re.search(r"while\(.*?\).*?body=%?([\w.\-]+).*?"
+                               r"condition=%?([\w.\-]+)", ln)
+                if not m2:
+                    continue
+                cond, body = m2.group(2), m2.group(1)
+            else:
+                cond, body = m.group(1), m.group(2)
+            while_info.append((cname, body, cond))
+
+    trip: dict[str, int] = {}
+    for _c, body, cond in while_info:
+        n = find_const(comps.get(cond, []))
+        trip[body] = n if n and n > 0 else 1
+
+    # direct collective bytes per computation
+    direct: dict[str, dict[str, int]] = defaultdict(lambda: defaultdict(int))
+    counts: dict[str, int] = defaultdict(int)
+    for cname, lines in comps.items():
+        for ln in lines:
+            for kind in _COLL_KINDS:
+                if re.search(rf"\b{kind}(-start)?\(", ln):
+                    lhs = ln.split("=", 1)
+                    if len(lhs) != 2:
+                        continue
+                    shape_part = lhs[1].strip().split(f" {kind}")[0]
+                    b = _shape_bytes(shape_part)
+                    direct[cname][kind] += b
+                    counts[kind] += 1
+                    break
+
+    # fold while multipliers: bytes(comp) = direct + Σ trip(body)*bytes(body)
+    children: dict[str, list[str]] = defaultdict(list)
+    for cname, body, _cond in while_info:
+        children[cname].append(body)
+
+    memo: dict[str, dict[str, int]] = {}
+
+    def total(comp: str, stack=()) -> dict[str, int]:
+        if comp in memo:
+            return memo[comp]
+        if comp in stack:
+            return defaultdict(int)
+        out: dict[str, int] = defaultdict(int)
+        for k, v in direct.get(comp, {}).items():
+            out[k] += v
+        for body in children.get(comp, []):
+            sub = total(body, stack + (comp,))
+            for k, v in sub.items():
+                out[k] += v * trip.get(body, 1)
+        memo[comp] = out
+        return out
+
+    # entry computation = the one containing ENTRY, else the largest
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w.\-]+)", line)
+            if m:
+                entry = m.group(1)
+        if entry:
+            break
+    if entry is None or entry not in comps:
+        # fallback: sum everything without multipliers
+        agg: dict[str, int] = defaultdict(int)
+        for c in comps:
+            for k, v in direct.get(c, {}).items():
+                agg[k] += v
+        by_kind = dict(agg)
+    else:
+        by_kind = dict(total(entry))
+
+    return {
+        "by_kind": {k: int(v) for k, v in by_kind.items()},
+        "counts": {k: int(v) for k, v in counts.items()},
+        "total_bytes": int(sum(by_kind.values())),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Full HLO cost model with while-trip folding.
+#
+# XLA's ``compiled.cost_analysis()`` counts a while body ONCE — under
+# scan-over-layers that understates FLOPs/bytes by ~n_layers. We re-derive
+# both from the optimized HLO text: dot FLOPs from result × contracted dims,
+# bytes as result+operand bytes per instruction, folding loop trip counts
+# exactly like the collective accounting above.
+# ---------------------------------------------------------------------------
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^=]*?\))|(?:\w+\[[\d,]*\]"
+    r"(?:\{[^}]*\})?))\s*([\w\-]+)\((.*)$")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_NO_BYTES_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+                 "bitcast", "reshape", "copy-start", "copy-done",
+                 "after-all", "partition-id", "replica-id", "iota",
+                 "custom-call"}
+
+
+def _parse_dims(shape_str: str) -> list[int]:
+    m = re.search(r"\[([\d,]*)\]", shape_str)
+    if not m or not m.group(1):
+        return []
+    return [int(d) for d in m.group(1).split(",")]
+
+
+def hlo_cost_with_trips(hlo: str) -> dict:
+    """Returns {'flops', 'bytes_accessed', 'collectives': {...}} with while
+    bodies multiplied by their trip counts."""
+    comps = _split_computations(hlo)
+
+    # symbol tables: per computation, instr name -> shape string
+    shapes: dict[str, dict[str, str]] = {}
+    for cname, lines in comps.items():
+        tab: dict[str, str] = {}
+        for ln in lines:
+            m = _INSTR_RE.match(ln)
+            if m:
+                tab[m.group(1)] = m.group(2)
+        shapes[cname] = tab
+
+    def comp_cost(cname: str, *, fusion_body: bool = False
+                  ) -> tuple[float, float]:
+        """flops: all dots/elementwise. bytes: HBM-touching instructions
+        only — inside fusion bodies intermediates live in registers/VMEM, so
+        a fusion body contributes flops but no bytes (the fusion *call*
+        accounts for its operands+result at the caller's level)."""
+        flops = 0.0
+        byts = 0.0
+        tab = shapes.get(cname, {})
+        for ln in comps.get(cname, []):
+            m = _INSTR_RE.match(ln)
+            if not m:
+                continue
+            name, rshape, op, rest = m.groups()
+            if op in _NO_BYTES_OPS:
+                continue
+            if not fusion_body:
+                rbytes = _shape_bytes(rshape)
+                obytes = 0
+                for on in _OPERAND_RE.findall(rest.split(")")[0]):
+                    if on in tab:
+                        obytes += _shape_bytes(tab[on])
+                byts += rbytes + obytes
+            if op == "dot":
+                cd = _CDIMS_RE.search(rest)
+                k = 1
+                ops = _OPERAND_RE.findall(rest.split(")")[0])
+                if cd and ops and ops[0] in tab:
+                    ldims = _parse_dims(tab[ops[0]])
+                    for d in (cd.group(1).split(",") if cd.group(1) else []):
+                        di = int(d)
+                        if di < len(ldims):
+                            k *= ldims[di]
+                n = 1
+                for d in _parse_dims(rshape):
+                    n *= d
+                flops += 2.0 * n * k
+            elif op in ("add", "multiply", "subtract", "divide", "exponential",
+                        "tanh", "rsqrt", "maximum", "minimum", "compare",
+                        "select", "convert", "negate", "power", "log",
+                        "reduce", "sqrt"):
+                n = 1
+                for d in _parse_dims(rshape):
+                    n *= d
+                flops += float(n)
+        return flops, byts
+
+    # while structure (reuse the collective machinery's discovery)
+    while_info = []
+    for cname, lines in comps.items():
+        for ln in lines:
+            m = re.search(r"while\(.*?\).*?condition=%?([\w.\-]+).*?"
+                          r"body=%?([\w.\-]+)", ln)
+            if not m:
+                m2 = re.search(r"while\(.*?\).*?body=%?([\w.\-]+).*?"
+                               r"condition=%?([\w.\-]+)", ln)
+                if not m2:
+                    continue
+                cond, body = m2.group(2), m2.group(1)
+            else:
+                cond, body = m.group(1), m.group(2)
+            while_info.append((cname, body, cond))
+    trip: dict[str, int] = {}
+    for _c, body, cond in while_info:
+        consts = [int(mm.group(1)) for ln in comps.get(cond, [])
+                  for mm in [re.search(r"constant\((\d+)\)", ln)] if mm]
+        trip[body] = max(consts) if consts else 1
+    children: dict[str, list[str]] = defaultdict(list)
+    called: set[str] = set()
+    for cname, body, cond in while_info:
+        children[cname].append(body)
+        called.add(body)
+        called.add(cond)
+    # computations invoked via fusion/call/reduce run inline — their cost
+    # must attach to the caller. Approximation: attribute fusion bodies to
+    # whichever computation references them by name.
+    ref_children: dict[str, list[str]] = defaultdict(list)
+    for cname, lines in comps.items():
+        for ln in lines:
+            for ref in re.findall(r"(?:calls=|to_apply=|fusion\s*=?)%?"
+                                  r"([\w.\-]+)", ln):
+                if ref in comps and ref != cname:
+                    ref_children[cname].append(ref)
+                    called.add(ref)
+
+    memo: dict[tuple[str, bool], tuple[float, float]] = {}
+
+    def total(comp: str, stack=(), fusion_body: bool = False
+              ) -> tuple[float, float]:
+        key = (comp, fusion_body)
+        if key in memo:
+            return memo[key]
+        if comp in stack:
+            return (0.0, 0.0)
+        f, b = comp_cost(comp, fusion_body=fusion_body)
+        for body in children.get(comp, []):   # while bodies: real HBM loops
+            sf, sb = total(body, stack + (comp,), fusion_body)
+            t = trip.get(body, 1)
+            f += sf * t
+            b += sb * t
+        for sub in ref_children.get(comp, []):  # fusion/call/reduce bodies
+            sf, _sb = total(sub, stack + (comp,), True)
+            f += sf
+        memo[key] = (f, b)
+        return f, b
+
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            mm = re.match(r"ENTRY\s+%?([\w.\-]+)", line)
+            if mm:
+                entry = mm.group(1)
+            break
+    if entry is None or entry not in comps:
+        roots = [c for c in comps if c not in called]
+        f = b = 0.0
+        for c in roots:
+            cf, cb = total(c)
+            f += cf
+            b += cb
+    else:
+        f, b = total(entry)
+    return {"flops": f, "bytes_accessed": b,
+            "collectives": collective_bytes_from_hlo(hlo)}

@@ -1,0 +1,30 @@
+"""Production mesh builders.
+
+A function, not a module-level constant: importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before any jax import)."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False,
+                         shape: tuple[int, ...] | None = None):
+    """16×16 = 256 chips per pod; 2 pods = 512 chips for the multi-pod
+    dry-run. Axes: ('pod',) 'data', 'model'. ``shape`` overrides the
+    per-pod (data, model) factorization — e.g. (32, 8) suits archs whose
+    head counts divide 8 but not 16 (§Perf iteration A4)."""
+    if shape is None:
+        shape = (2, 16, 16) if multi_pod else (16, 16)
+    elif multi_pod and len(shape) == 2:
+        shape = (2, *shape)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    assert len(shape) == len(axes)
+    return jax.make_mesh(tuple(shape), axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_smoke_mesh():
+    """Single-device mesh with the production axis names (CPU tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))

@@ -1,0 +1,15 @@
+"""Model zoo: unified decoder LM (dense / MoE / RWKV6 / Zamba2) + enc-dec."""
+from ..configs.base import ArchConfig
+from .lm import LM
+from .encdec import EncDec
+
+
+def build_model(cfg: ArchConfig, **kw):
+    """Factory: the right model class for an architecture config."""
+    if cfg.family == "encdec":
+        return EncDec(cfg, **{k: v for k, v in kw.items()
+                              if k in ("block_kv", "remat")})
+    return LM(cfg, **kw)
+
+
+__all__ = ["LM", "EncDec", "build_model"]

@@ -1,0 +1,208 @@
+"""Encoder-decoder backbone for seamless-m4t-large-v2 (text/unit enc-dec).
+
+Assignment rule: the audio frontend (conformer speech encoder) is a STUB —
+``input_specs`` provides precomputed frame embeddings [B, S_enc, D]; this
+module implements the transformer backbone: a bidirectional encoder over the
+frame embeddings and a causal decoder with cross-attention.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.ad_checkpoint
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..sharding.rules import constrain
+from . import layers as L
+from .lm import _norm, _norm_init, _with_prefix
+
+Array = jax.Array
+
+
+class EncDec:
+    def __init__(self, cfg: ArchConfig, *, block_kv: int = 1024,
+                 remat: str | None = None) -> None:
+        assert cfg.family == "encdec"
+        self.cfg = cfg
+        self.dtype = jnp.dtype(cfg.dtype)
+        self.block_kv = block_kv
+        self.remat = remat
+
+    def _wrap_remat(self, body):
+        if self.remat is None:
+            return body
+        if self.remat == "offload":
+            pol = jax.checkpoint_policies.save_and_offload_only_these_names(
+                names_which_can_be_saved=[],
+                names_which_can_be_offloaded=["residual"],
+                offload_src="device", offload_dst="pinned_host")
+            return jax.checkpoint(body, policy=pol)
+        return jax.checkpoint(body)
+
+    # ------------------------------------------------------------- params
+    def _enc_layer_init(self, key: Array) -> dict:
+        cfg, dt = self.cfg, self.dtype
+        k1, k2 = jax.random.split(key)
+        spec = L.AttnParamsSpec(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                cfg.d_head, cfg.qkv_bias)
+        p = {"attn": spec.init(k1, dt),
+             "mlp": L.mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.mlp, dt,
+                               bias=(cfg.mlp == "gelu"))}
+        p.update(_with_prefix("ln1", _norm_init(cfg, cfg.d_model, dt)))
+        p.update(_with_prefix("ln2", _norm_init(cfg, cfg.d_model, dt)))
+        return p
+
+    def _dec_layer_init(self, key: Array) -> dict:
+        cfg, dt = self.cfg, self.dtype
+        k1, k2, k3 = jax.random.split(key, 3)
+        spec = L.AttnParamsSpec(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                cfg.d_head, cfg.qkv_bias)
+        p = {"self_attn": spec.init(k1, dt), "cross_attn": spec.init(k2, dt),
+             "mlp": L.mlp_init(k3, cfg.d_model, cfg.d_ff, cfg.mlp, dt,
+                               bias=(cfg.mlp == "gelu"))}
+        for nm in ("ln1", "ln2", "ln3"):
+            p.update(_with_prefix(nm, _norm_init(cfg, cfg.d_model, dt)))
+        return p
+
+    def init(self, key: Array) -> dict:
+        cfg, dt = self.cfg, self.dtype
+        kE, kEnc, kDec, kF = jax.random.split(key, 4)
+        Vp, D = cfg.padded_vocab, cfg.d_model
+        params: dict[str, Any] = {
+            "embed": jax.random.normal(kE, (Vp, D), dt) * 0.02,
+            "unembed": jax.random.normal(kF, (D, Vp), dt) / math.sqrt(D),
+            "enc_layers": jax.vmap(self._enc_layer_init)(
+                jax.random.split(kEnc, cfg.n_layers)),
+            "dec_layers": jax.vmap(self._dec_layer_init)(
+                jax.random.split(kDec, cfg.n_decoder_layers)),
+        }
+        params.update(_with_prefix("ln_enc", _norm_init(cfg, D, dt)))
+        params.update(_with_prefix("ln_f", _norm_init(cfg, D, dt)))
+        return params
+
+    # -------------------------------------------------------------- apply
+    def encode(self, params: dict, encoder_embeds: Array) -> Array:
+        cfg = self.cfg
+        h = encoder_embeds.astype(self.dtype)
+        B, S, _ = h.shape
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+        def body(hh, lp):
+            x = _norm(cfg, lp, "ln1", hh)
+            hh = hh + L.attention_block(
+                lp["attn"], x, n_heads=cfg.n_heads,
+                n_kv_heads=cfg.n_kv_heads, d_head=cfg.d_head, positions=pos,
+                causal=False, rope_theta=cfg.rope_theta,
+                block_kv=self.block_kv)
+            x = _norm(cfg, lp, "ln2", hh)
+            hh = hh + (L.swiglu_mlp(lp["mlp"], x) if cfg.mlp == "swiglu"
+                       else L.gelu_mlp(lp["mlp"], x))
+            hh = constrain(hh, ("pod", "data"), "model", None)  # SP
+            hh = jax.ad_checkpoint.checkpoint_name(hh, "residual")
+            return hh, None
+
+        h, _ = jax.lax.scan(self._wrap_remat(body), h, params["enc_layers"])
+        return _norm(cfg, params, "ln_enc", h)
+
+    def decode(self, params: dict, enc_out: Array, tokens: Array) -> Array:
+        cfg = self.cfg
+        h = jnp.take(params["embed"], tokens, axis=0)
+        B, S, _ = h.shape
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+        def body(hh, lp):
+            x = _norm(cfg, lp, "ln1", hh)
+            hh = hh + L.attention_block(
+                lp["self_attn"], x, n_heads=cfg.n_heads,
+                n_kv_heads=cfg.n_kv_heads, d_head=cfg.d_head, positions=pos,
+                causal=True, rope_theta=cfg.rope_theta,
+                block_kv=self.block_kv)
+            x = _norm(cfg, lp, "ln2", hh)
+            hh = hh + L.attention_block(
+                lp["cross_attn"], x, n_heads=cfg.n_heads,
+                n_kv_heads=cfg.n_kv_heads, d_head=cfg.d_head, positions=pos,
+                causal=False, rope_theta=0.0, kv=enc_out,
+                block_kv=self.block_kv)
+            x = _norm(cfg, lp, "ln3", hh)
+            hh = hh + (L.swiglu_mlp(lp["mlp"], x) if cfg.mlp == "swiglu"
+                       else L.gelu_mlp(lp["mlp"], x))
+            hh = constrain(hh, ("pod", "data"), "model", None)  # SP
+            hh = jax.ad_checkpoint.checkpoint_name(hh, "residual")
+            return hh, None
+
+        h, _ = jax.lax.scan(self._wrap_remat(body), h, params["dec_layers"])
+        h = _norm(cfg, params, "ln_f", h)
+        logits = h @ params["unembed"]
+        return constrain(logits, ("pod", "data"), None, "model")
+
+    def apply(self, params: dict, tokens: Array, *,
+              encoder_embeds: Array) -> Array:
+        enc = self.encode(params, encoder_embeds)
+        return self.decode(params, enc, tokens)
+
+    def loss(self, params: dict, batch: dict) -> Array:
+        cfg = self.cfg
+        logits = self.apply(params, batch["tokens"],
+                            encoder_embeds=batch["encoder_embeds"])
+        logits = logits.astype(jnp.float32)
+        iota = jax.lax.broadcasted_iota(jnp.int32, (cfg.padded_vocab,), 0)
+        logits = logits + jnp.where(iota < cfg.vocab_size, 0.0, -1e30)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, batch["labels"][..., None], axis=-1)
+        return jnp.mean(nll)
+
+    # ------------------------------------------------------------- decode
+    def init_cache(self, batch: int, max_len: int, enc_len: int) -> dict:
+        cfg, dt = self.cfg, self.dtype
+        K, Dh = cfg.n_kv_heads, cfg.d_head
+        nd = cfg.n_decoder_layers
+        return {
+            "enc_out": jnp.zeros((batch, enc_len, cfg.d_model), dt),
+            "k": jnp.zeros((nd, batch, max_len, K, Dh), dt),
+            "v": jnp.zeros((nd, batch, max_len, K, Dh), dt),
+        }
+
+    def decode_step(self, params: dict, cache: dict, token: Array,
+                    cache_len: Array) -> tuple[Array, dict]:
+        cfg = self.cfg
+        B = token.shape[0]
+        h = jnp.take(params["embed"], token, axis=0)
+        enc_out = cache["enc_out"]
+        pos = jnp.full((B, 1), cache_len, jnp.int32)
+
+        def body(hh, xs):
+            lp, kc, vc = xs
+            x = _norm(cfg, lp, "ln1", hh)
+            pa = lp["self_attn"]
+            q = (x @ pa["wq"] + pa.get("bq", 0)).reshape(
+                B, 1, cfg.n_heads, cfg.d_head)
+            k = (x @ pa["wk"] + pa.get("bk", 0)).reshape(
+                B, 1, cfg.n_kv_heads, cfg.d_head)
+            v = (x @ pa["wv"] + pa.get("bv", 0)).reshape(
+                B, 1, cfg.n_kv_heads, cfg.d_head)
+            if cfg.rope_theta:
+                q = L.rope(q, pos, cfg.rope_theta)
+                k = L.rope(k, pos, cfg.rope_theta)
+            kc = jax.lax.dynamic_update_slice(kc, k, (0, cache_len, 0, 0))
+            vc = jax.lax.dynamic_update_slice(vc, v, (0, cache_len, 0, 0))
+            o = L.decode_attention(q, kc, vc, cache_len + 1)
+            hh = hh + o.reshape(B, 1, -1) @ pa["wo"]
+            x = _norm(cfg, lp, "ln2", hh)
+            hh = hh + L.attention_block(
+                lp["cross_attn"], x, n_heads=cfg.n_heads,
+                n_kv_heads=cfg.n_kv_heads, d_head=cfg.d_head,
+                positions=pos, causal=False, rope_theta=0.0, kv=enc_out,
+                block_kv=self.block_kv)
+            x = _norm(cfg, lp, "ln3", hh)
+            hh = hh + (L.swiglu_mlp(lp["mlp"], x) if cfg.mlp == "swiglu"
+                       else L.gelu_mlp(lp["mlp"], x))
+            return hh, (kc, vc)
+
+        h, (ks, vs) = jax.lax.scan(
+            body, h, (params["dec_layers"], cache["k"], cache["v"]))
+        h = _norm(cfg, params, "ln_f", h)
+        logits = (h @ params["unembed"])[:, 0]
+        return logits, {"enc_out": enc_out, "k": ks, "v": vs}

@@ -1,0 +1,456 @@
+"""Unified decoder LM covering the dense / MoE / RWKV6 / Zamba2-hybrid
+families (enc-dec lives in :mod:`repro.models.encdec`).
+
+Design: pure-functional params pytrees, per-layer params stacked along a
+leading L axis and consumed by ``lax.scan`` (small HLO even at 81 layers;
+remat policy applied by the trainer). Decode keeps KV caches / SSM states as
+explicit pytrees so ``serve_step`` is a pure function suitable for pjit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.ad_checkpoint
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..sharding.rules import constrain
+from . import layers as L
+from . import rwkv as R
+from . import ssm as S
+
+Array = jax.Array
+
+
+def _norm(cfg: ArchConfig, p: dict, key: str, x: Array) -> Array:
+    if cfg.norm == "rmsnorm":
+        return L.rmsnorm(x, p[key + "_g"])
+    if cfg.norm == "layernorm":
+        return L.layernorm(x, p[key + "_g"], p[key + "_b"])
+    return L.layernorm(x, None, None)       # layernorm_np (OLMo)
+
+
+def _norm_init(cfg: ArchConfig, d: int, dtype) -> dict:
+    if cfg.norm == "rmsnorm":
+        return {"_g": jnp.ones((d,), dtype)}
+    if cfg.norm == "layernorm":
+        return {"_g": jnp.ones((d,), dtype), "_b": jnp.zeros((d,), dtype)}
+    return {}
+
+
+def _with_prefix(prefix: str, d: dict) -> dict:
+    return {prefix + k: v for k, v in d.items()}
+
+
+def _quant_int8(x: Array) -> tuple[Array, Array]:
+    """Per-(token, head) symmetric int8 quantization: x [B,1,K,Dh]."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)   # [B,1,K]
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+class LM:
+    """Decoder-only LM for families: dense, moe, rwkv, zamba."""
+
+    def __init__(self, cfg: ArchConfig, *, block_kv: int = 1024,
+                 use_pallas: bool = False,
+                 moe_capacity_factor: float | None = 1.25,
+                 remat: str | None = None,
+                 kv_cache_dtype: str = "bf16") -> None:
+        self.cfg = cfg
+        self.block_kv = block_kv
+        self.use_pallas = use_pallas
+        self.moe_capacity_factor = moe_capacity_factor
+        self.remat = remat            # None | 'full' | 'dots' | 'offload'
+        self.kv_cache_dtype = kv_cache_dtype    # 'bf16' | 'int8' (KIVI-style)
+        self.dtype = jnp.dtype(cfg.dtype)
+
+    def _wrap_remat(self, body):
+        """Apply the activation-checkpoint policy to a scan body.
+        'offload' realizes the TURNIP idea inside XLA: saved residuals are
+        annotated for device→pinned_host offload instead of recompute."""
+        if self.remat is None:
+            return body
+        if self.remat == "full":
+            return jax.checkpoint(body)
+        if self.remat == "dots":
+            return jax.checkpoint(
+                body,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        if self.remat == "offload":
+            pol = jax.checkpoint_policies.save_and_offload_only_these_names(
+                names_which_can_be_saved=[],
+                names_which_can_be_offloaded=["residual"],
+                offload_src="device", offload_dst="pinned_host")
+            return jax.checkpoint(body, policy=pol)
+        raise ValueError(f"unknown remat mode {self.remat!r}")
+
+    # ------------------------------------------------------------- params
+    def init(self, key: Array) -> dict:
+        cfg = self.cfg
+        dt = self.dtype
+        kE, kL, kS, kF = jax.random.split(key, 4)
+        Vp, D = cfg.padded_vocab, cfg.d_model
+        params: dict[str, Any] = {
+            "embed": (jax.random.normal(kE, (Vp, D), dt) * 0.02),
+            "unembed": (jax.random.normal(kF, (D, Vp), dt)
+                        / math.sqrt(D)),
+        }
+        params.update(_with_prefix("ln_f", _norm_init(cfg, D, dt)))
+        if cfg.family in ("dense", "moe"):
+            keys = jax.random.split(kL, cfg.n_layers)
+            params["layers"] = jax.vmap(
+                lambda k: self._layer_init(k))(keys)
+        elif cfg.family == "rwkv":
+            keys = jax.random.split(kL, cfg.n_layers)
+            params["layers"] = jax.vmap(
+                lambda k: self._rwkv_layer_init(k))(keys)
+        elif cfg.family == "zamba":
+            ng, grp, tail = self._zamba_split()
+            kG, kT, kSh, kAd = jax.random.split(kS, 4)
+            gkeys = jax.random.split(kG, ng * grp).reshape(ng, grp, 2)
+            params["mamba"] = jax.vmap(jax.vmap(
+                lambda k: S.ssd_init(
+                    k, cfg.d_model, d_state=cfg.ssm_state,
+                    headdim=cfg.ssm_headdim, expand=cfg.ssm_expand,
+                    dtype=dt)))(gkeys)
+            if tail:
+                tkeys = jax.random.split(kT, tail)
+                params["mamba_tail"] = jax.vmap(
+                    lambda k: S.ssd_init(
+                        k, cfg.d_model, d_state=cfg.ssm_state,
+                        headdim=cfg.ssm_headdim, expand=cfg.ssm_expand,
+                        dtype=dt))(tkeys)
+            params["shared"] = self._layer_init(kSh)
+            # per-invocation adapter: input-norm gains (Zamba2's per-call
+            # LoRA simplified to per-call scale; DESIGN.md §7)
+            params["shared_adapters"] = jnp.ones((ng, D), dt)
+        else:
+            raise ValueError(cfg.family)
+        return params
+
+    def _layer_init(self, key: Array) -> dict:
+        cfg = self.cfg
+        dt = self.dtype
+        k1, k2 = jax.random.split(key)
+        spec = L.AttnParamsSpec(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                cfg.d_head, cfg.qkv_bias)
+        p = {"attn": spec.init(k1, dt)}
+        p.update(_with_prefix("ln1", _norm_init(cfg, cfg.d_model, dt)))
+        p.update(_with_prefix("ln2", _norm_init(cfg, cfg.d_model, dt)))
+        if cfg.family == "moe" :
+            p["moe"] = L.moe_init(k2, cfg.d_model, cfg.d_ff, cfg.n_experts, dt)
+        else:
+            p["mlp"] = L.mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.mlp, dt,
+                                  bias=(cfg.mlp == "gelu"))
+        return p
+
+    def _rwkv_layer_init(self, key: Array) -> dict:
+        cfg = self.cfg
+        p = R.rwkv6_init(key, cfg.d_model, headdim=cfg.rwkv_headdim,
+                         d_ff=cfg.d_ff, dtype=self.dtype)
+        p.update(_with_prefix("ln1", _norm_init(cfg, cfg.d_model, self.dtype)))
+        p.update(_with_prefix("ln2", _norm_init(cfg, cfg.d_model, self.dtype)))
+        return p
+
+    def _zamba_split(self) -> tuple[int, int, int]:
+        grp = self.cfg.zamba_group
+        ng = self.cfg.n_layers // grp
+        tail = self.cfg.n_layers - ng * grp
+        return ng, grp, tail
+
+    # ------------------------------------------------------------ blocks
+    def _attn_mlp_block(self, p: dict, h: Array, positions: Array,
+                        adapter_g: Array | None = None) -> Array:
+        cfg = self.cfg
+        x = _norm(cfg, p, "ln1", h)
+        if adapter_g is not None:
+            x = x * adapter_g
+        h = h + L.attention_block(
+            p["attn"], x, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            d_head=cfg.d_head, positions=positions,
+            rope_theta=cfg.rope_theta, block_kv=self.block_kv)
+        x = _norm(cfg, p, "ln2", h)
+        if "moe" in p:
+            y, aux = L.moe_block(p["moe"], x, n_experts=cfg.n_experts,
+                                 top_k=cfg.top_k,
+                                 capacity_factor=self.moe_capacity_factor)
+            self._aux = self._aux + aux
+        else:
+            y = (L.swiglu_mlp(p["mlp"], x) if cfg.mlp == "swiglu"
+                 else L.gelu_mlp(p["mlp"], x))
+        return h + y
+
+    # ------------------------------------------------------------- apply
+    def apply(self, params: dict, tokens: Array, *,
+              vision_embeds: Array | None = None) -> Array:
+        """Full forward: [B, S_text] (+ optional prepended frontend embeds)
+        → logits [B, S, padded_vocab]. Also sets ``self._aux`` (MoE)."""
+        cfg = self.cfg
+        self._aux = jnp.zeros((), jnp.float32)
+        h = jnp.take(params["embed"], tokens, axis=0)
+        if vision_embeds is not None:
+            h = jnp.concatenate([vision_embeds.astype(h.dtype), h], axis=1)
+        h = constrain(h, ("pod", "data"), None, None)
+        B, Stot, D = h.shape
+        positions = jnp.broadcast_to(jnp.arange(Stot)[None], (B, Stot))
+
+        if cfg.family in ("dense", "moe"):
+            def body(carry, lp):
+                hh, aux = carry
+                self._aux = jnp.zeros((), jnp.float32)
+                hh = self._attn_mlp_block(lp, hh, positions)
+                hh = constrain(hh, ("pod", "data"), "model", None)  # SP
+                hh = jax.ad_checkpoint.checkpoint_name(hh, "residual")
+                return (hh, aux + self._aux), None
+            (h, aux), _ = jax.lax.scan(self._wrap_remat(body),
+                                       (h, self._aux), params["layers"])
+            self._aux = aux
+        elif cfg.family == "rwkv":
+            def body(hh, lp):
+                x = _norm(cfg, lp, "ln1", hh)
+                hh = hh + R.rwkv6_time_mix(lp, x, headdim=cfg.rwkv_headdim)
+                x = _norm(cfg, lp, "ln2", hh)
+                hh = hh + R.rwkv6_channel_mix(lp, x)
+                hh = constrain(hh, ("pod", "data"), "model", None)  # SP
+                hh = jax.ad_checkpoint.checkpoint_name(hh, "residual")
+                return hh, None
+            h, _ = jax.lax.scan(self._wrap_remat(body), h, params["layers"])
+        elif cfg.family == "zamba":
+            ng, grp, tail = self._zamba_split()
+            def mamba_body(hh, lp):
+                hh = hh + S.ssd_block(
+                    lp, hh, d_state=cfg.ssm_state, headdim=cfg.ssm_headdim,
+                    expand=cfg.ssm_expand)
+                hh = constrain(hh, ("pod", "data"), "model", None)  # SP
+                hh = jax.ad_checkpoint.checkpoint_name(hh, "residual")
+                return hh, None
+            mamba_body = self._wrap_remat(mamba_body)
+            shared_block = self._attn_mlp_block
+            if self.remat is not None:
+                shared_block = jax.checkpoint(
+                    shared_block, static_argnums=())
+            for g in range(ng):
+                gp = jax.tree.map(lambda a: a[g], params["mamba"])
+                h = shared_block(
+                    params["shared"], h, positions,
+                    adapter_g=params["shared_adapters"][g])
+                h, _ = jax.lax.scan(mamba_body, h, gp)
+            if tail:
+                h, _ = jax.lax.scan(mamba_body, h, params["mamba_tail"])
+        else:
+            raise ValueError(cfg.family)
+
+        h = _norm(cfg, params, "ln_f", h)
+        logits = h @ params["unembed"]
+        return constrain(logits, ("pod", "data"), None, "model")
+
+    # -------------------------------------------------------------- loss
+    def loss(self, params: dict, batch: dict) -> Array:
+        cfg = self.cfg
+        logits = self.apply(params, batch["tokens"],
+                            vision_embeds=batch.get("vision_embeds"))
+        labels = batch["labels"]
+        if logits.shape[1] != labels.shape[1]:     # frontend tokens: no loss
+            logits = logits[:, logits.shape[1] - labels.shape[1]:]
+        logits = logits.astype(jnp.float32)
+        # mask the vocab padding so the softmax is over the true vocab
+        iota = jax.lax.broadcasted_iota(jnp.int32, (cfg.padded_vocab,), 0)
+        logits = logits + jnp.where(iota < cfg.vocab_size, 0.0, -1e30)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)
+        loss = jnp.mean(nll)
+        if cfg.family == "moe":
+            loss = loss + 0.01 * self._aux / cfg.n_layers
+        return loss
+
+    # ------------------------------------------------------------- decode
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        cfg = self.cfg
+        dt = self.dtype
+        Dh, K = cfg.d_head, cfg.n_kv_heads
+        if cfg.family in ("dense", "moe"):
+            if self.kv_cache_dtype == "int8":
+                # per-(token, head) scales — KIVI-style post-RoPE int8 KV;
+                # halves the decode memory term (§Perf iteration A2)
+                return {
+                    "k": jnp.zeros((cfg.n_layers, batch, max_len, K, Dh),
+                                   jnp.int8),
+                    "v": jnp.zeros((cfg.n_layers, batch, max_len, K, Dh),
+                                   jnp.int8),
+                    "k_scale": jnp.zeros((cfg.n_layers, batch, max_len, K),
+                                         jnp.float32),
+                    "v_scale": jnp.zeros((cfg.n_layers, batch, max_len, K),
+                                         jnp.float32),
+                }
+            return {
+                "k": jnp.zeros((cfg.n_layers, batch, max_len, K, Dh), dt),
+                "v": jnp.zeros((cfg.n_layers, batch, max_len, K, Dh), dt),
+            }
+        if cfg.family == "rwkv":
+            H = cfg.d_model // cfg.rwkv_headdim
+            P = cfg.rwkv_headdim
+            Lh = cfg.n_layers
+            return {
+                "tm_shift": jnp.zeros((Lh, batch, 1, cfg.d_model), dt),
+                "cm_shift": jnp.zeros((Lh, batch, 1, cfg.d_model), dt),
+                "wkv": jnp.zeros((Lh, batch, H, P, P), jnp.float32),
+            }
+        if cfg.family == "zamba":
+            ng, grp, tail = self._zamba_split()
+            di = cfg.ssm_expand * cfg.d_model
+            H = di // cfg.ssm_headdim
+            convdim = di + 2 * cfg.ssm_state
+            cache = {
+                "ssm": jnp.zeros((ng, grp, batch, H, cfg.ssm_headdim,
+                                  cfg.ssm_state), jnp.float32),
+                "conv": jnp.zeros((ng, grp, batch, 3, convdim), dt),
+                "k": jnp.zeros((ng, batch, max_len, K, Dh), dt),
+                "v": jnp.zeros((ng, batch, max_len, K, Dh), dt),
+            }
+            if tail:
+                cache["ssm_tail"] = jnp.zeros(
+                    (tail, batch, H, cfg.ssm_headdim, cfg.ssm_state),
+                    jnp.float32)
+                cache["conv_tail"] = jnp.zeros((tail, batch, 3, convdim), dt)
+            return cache
+        raise ValueError(cfg.family)
+
+    def _attn_decode_block(self, p: dict, h: Array, kc: Array, vc: Array,
+                           cache_len: Array, adapter_g: Array | None = None,
+                           k_sc: Array | None = None,
+                           v_sc: Array | None = None):
+        cfg = self.cfg
+        B = h.shape[0]
+        x = _norm(cfg, p, "ln1", h)
+        if adapter_g is not None:
+            x = x * adapter_g
+        pa = p["attn"]
+        q = (x @ pa["wq"] + pa.get("bq", 0)).reshape(
+            B, 1, cfg.n_heads, cfg.d_head)
+        k = (x @ pa["wk"] + pa.get("bk", 0)).reshape(
+            B, 1, cfg.n_kv_heads, cfg.d_head)
+        v = (x @ pa["wv"] + pa.get("bv", 0)).reshape(
+            B, 1, cfg.n_kv_heads, cfg.d_head)
+        pos = jnp.full((B, 1), cache_len, jnp.int32)
+        if cfg.rope_theta:
+            q = L.rope(q, pos, cfg.rope_theta)
+            k = L.rope(k, pos, cfg.rope_theta)
+        if k_sc is not None:
+            kq, ks = _quant_int8(k)
+            vq, vs = _quant_int8(v)
+            kc = jax.lax.dynamic_update_slice(kc, kq, (0, cache_len, 0, 0))
+            vc = jax.lax.dynamic_update_slice(vc, vq, (0, cache_len, 0, 0))
+            k_sc = jax.lax.dynamic_update_slice(k_sc, ks, (0, cache_len, 0))
+            v_sc = jax.lax.dynamic_update_slice(v_sc, vs, (0, cache_len, 0))
+            o = L.decode_attention_q8(q, kc, vc, k_sc, v_sc, cache_len + 1)
+            h = h + o.reshape(B, 1, cfg.n_heads * cfg.d_head) @ pa["wo"]
+            x = _norm(cfg, p, "ln2", h)
+            if "moe" in p:
+                y, _ = L.moe_block(p["moe"], x, n_experts=cfg.n_experts,
+                                   top_k=cfg.top_k, capacity_factor=None)
+            else:
+                y = (L.swiglu_mlp(p["mlp"], x) if cfg.mlp == "swiglu"
+                     else L.gelu_mlp(p["mlp"], x))
+            return h + y, kc, vc, k_sc, v_sc
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, cache_len, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, cache_len, 0, 0))
+        o = L.decode_attention(q, kc, vc, cache_len + 1)
+        h = h + o.reshape(B, 1, cfg.n_heads * cfg.d_head) @ pa["wo"]
+        x = _norm(cfg, p, "ln2", h)
+        if "moe" in p:
+            y, _ = L.moe_block(p["moe"], x, n_experts=cfg.n_experts,
+                               top_k=cfg.top_k, capacity_factor=None)
+        else:
+            y = (L.swiglu_mlp(p["mlp"], x) if cfg.mlp == "swiglu"
+                 else L.gelu_mlp(p["mlp"], x))
+        return h + y, kc, vc
+
+    def decode_step(self, params: dict, cache: dict, token: Array,
+                    cache_len: Array) -> tuple[Array, dict]:
+        """One-token decode. token: [B, 1] → logits [B, padded_vocab]."""
+        cfg = self.cfg
+        h = jnp.take(params["embed"], token, axis=0)       # [B,1,D]
+
+        if cfg.family in ("dense", "moe"):
+            if self.kv_cache_dtype == "int8":
+                def body8(carry, xs):
+                    hh = carry
+                    lp, kc, vc, ksc, vsc = xs
+                    hh, kc, vc, ksc, vsc = self._attn_decode_block(
+                        lp, hh, kc, vc, cache_len, k_sc=ksc, v_sc=vsc)
+                    return hh, (kc, vc, ksc, vsc)
+                h, (ks, vs, kss, vss) = jax.lax.scan(
+                    body8, h, (params["layers"], cache["k"], cache["v"],
+                               cache["k_scale"], cache["v_scale"]))
+                cache = {"k": ks, "v": vs, "k_scale": kss, "v_scale": vss}
+            else:
+                def body(carry, xs):
+                    hh = carry
+                    lp, kc, vc = xs
+                    hh, kc, vc = self._attn_decode_block(lp, hh, kc, vc,
+                                                         cache_len)
+                    return hh, (kc, vc)
+                h, (ks, vs) = jax.lax.scan(
+                    body, h, (params["layers"], cache["k"], cache["v"]))
+                cache = {"k": ks, "v": vs}
+        elif cfg.family == "rwkv":
+            def body(hh, xs):
+                lp, tms, cms, wkv = xs
+                x = _norm(cfg, lp, "ln1", hh)
+                o, (tms2, wkv2) = R.rwkv6_time_mix(
+                    lp, x, headdim=cfg.rwkv_headdim, state=(tms, wkv))
+                hh = hh + o
+                x = _norm(cfg, lp, "ln2", hh)
+                o, cms2 = R.rwkv6_channel_mix(lp, x, state=cms)
+                hh = hh + o
+                return hh, (tms2, cms2, wkv2)
+            h, (tms, cms, wkv) = jax.lax.scan(
+                body, h, (params["layers"], cache["tm_shift"],
+                          cache["cm_shift"], cache["wkv"]))
+            cache = {"tm_shift": tms, "cm_shift": cms, "wkv": wkv}
+        elif cfg.family == "zamba":
+            ng, grp, tail = self._zamba_split()
+
+            def mamba_scan_body(hh, xs):
+                lp, st, cs = xs
+                o, (st2, cs2) = S.ssd_block(
+                    lp, hh, d_state=cfg.ssm_state, headdim=cfg.ssm_headdim,
+                    expand=cfg.ssm_expand, state=st, conv_state=cs)
+                return hh + o, (st2, cs2)
+
+            def group_body(carry, xs):
+                hh = carry
+                gp, adapters, kc, vc, sst, cst = xs
+                hh, kc, vc = self._attn_decode_block(
+                    params["shared"], hh, kc, vc, cache_len,
+                    adapter_g=adapters)
+                hh, (sst2, cst2) = jax.lax.scan(
+                    mamba_scan_body, hh, (gp, sst, cst))
+                return hh, (kc, vc, sst2, cst2)
+
+            h, (ks, vs, sss, css) = jax.lax.scan(
+                group_body, h,
+                (params["mamba"], params["shared_adapters"],
+                 cache["k"], cache["v"], cache["ssm"], cache["conv"]))
+            new_cache = {"ssm": sss, "conv": css, "k": ks, "v": vs}
+            if tail:
+                h, (sst, cst) = jax.lax.scan(
+                    mamba_scan_body, h,
+                    (params["mamba_tail"], cache["ssm_tail"],
+                     cache["conv_tail"]))
+                new_cache["ssm_tail"] = sst
+                new_cache["conv_tail"] = cst
+            cache = new_cache
+        else:
+            raise ValueError(cfg.family)
+
+        h = _norm(cfg, params, "ln_f", h)
+        logits = (h @ params["unembed"])[:, 0]
+        return logits, cache

@@ -1,0 +1,70 @@
+"""LoRA adapters for the JAX model zoo (paper §8 task 2 at framework level).
+
+Wraps a base LM: freezes ``base_params`` and trains rank-r adapters on the
+attention projections (wq/wk/wv) and the FFN up-projections. The adapter
+pytree mirrors the layer stacking, so the same sharding rules apply (A
+replicated — tiny; B sharded like its base weight's output dim).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_TARGETS = ("wq", "wk", "wv", "wi", "wi_gate", "wi_up")
+
+
+def lora_init(key: Array, base_params: Any, *, rank: int = 16,
+              dtype=jnp.float32) -> Any:
+    """Adapter pytree: for each targeted 2-D (or stacked 3-D) weight
+    ``[.., d_in, d_out]`` create A [.., r, d_in] (gaussian) and B
+    [.., d_out, r] (zeros — standard LoRA init)."""
+    leaves = jax.tree_util.tree_flatten_with_path(base_params)[0]
+    flat_adapters: dict[str, dict[str, Array]] = {}
+    k = key
+    for path, leaf in leaves:
+        name = str(getattr(path[-1], "key", path[-1]))
+        if name not in _TARGETS or leaf.ndim < 2:
+            continue
+        k, sub = jax.random.split(k)
+        *stack, d_in, d_out = leaf.shape
+        a = jax.random.normal(sub, (*stack, rank, d_in), dtype) / math.sqrt(d_in)
+        b = jnp.zeros((*stack, d_out, rank), dtype)
+        keystr = "/".join(str(getattr(p, "key", p)) for p in path)
+        flat_adapters[keystr] = {"A": a, "B": b}
+    return flat_adapters
+
+
+def lora_apply(base_params: Any, adapters: dict, *, alpha: float = 16.0,
+               rank: int = 16) -> Any:
+    """Return effective params: W' = W + (alpha/r)·(BA)^T  — merged form so
+    the base model's ``apply`` runs unchanged (merging is exact for linear
+    layers; gradients flow to A/B through the merge)."""
+    scale = alpha / rank
+    flat = jax.tree_util.tree_flatten_with_path(base_params)
+    leaves, treedef = flat
+    out = []
+    for path, leaf in leaves:
+        keystr = "/".join(str(getattr(p, "key", p)) for p in path)
+        ad = adapters.get(keystr)
+        if ad is None:
+            out.append(leaf)
+        else:
+            delta = jnp.einsum("...or,...ri->...io", ad["B"], ad["A"])
+            out.append((leaf + scale * delta).astype(leaf.dtype))
+    tdef = jax.tree_util.tree_structure(base_params)
+    return jax.tree_util.tree_unflatten(tdef, [o for o in out])
+
+
+def make_lora_loss(model, base_params: Any, *, alpha: float = 16.0,
+                   rank: int = 16):
+    """loss(adapters, batch) — differentiates through the merge wrt adapters
+    only (base params are a closure constant)."""
+    def loss(adapters, batch):
+        eff = lora_apply(base_params, adapters, alpha=alpha, rank=rank)
+        return model.loss(eff, batch)
+    return loss

@@ -1,0 +1,166 @@
+"""RWKV-6 "Finch" blocks (for rwkv6-7b) — data-dependent decay linear
+attention (arXiv:2404.05892).
+
+Time-mix: token-shift interpolation with data-dependent mix (via a small
+LoRA), per-channel data-dependent decay ``w_t``, and the WKV linear-attention
+recurrence over per-head state ``S ∈ R^{P×P}``:
+
+    S_t = diag(w_t) S_{t-1} + k_t^T (v_t)        y_t = (r_t S_t) + bonus u
+
+Channel-mix: squared-ReLU gated MLP with token shift. Both are expressed as
+``lax.scan`` recurrences (O(1) state — this is why rwkv6 runs the
+``long_500k`` shape); the chunked-parallel Pallas kernel lives in
+:mod:`repro.kernels.rwkv6`.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def rwkv6_init(key: Array, d_model: int, *, headdim: int = 64,
+               lora_r: int = 32, d_ff: int | None = None,
+               dtype=jnp.float32) -> dict:
+    H = d_model // headdim
+    d_ff = d_ff or int(3.5 * d_model)
+    ks = jax.random.split(key, 12)
+    s = 1.0 / math.sqrt(d_model)
+    return {
+        # time-mix
+        "mix_rkvwg": jnp.zeros((5, d_model), dtype),        # static mix coeffs
+        "mix_lora_A": jax.random.normal(ks[0], (d_model, 5 * lora_r), dtype) * s,
+        "mix_lora_B": jnp.zeros((5, lora_r, d_model), dtype),
+        "w_lora_A": jax.random.normal(ks[1], (d_model, lora_r), dtype) * s,
+        "w_lora_B": jnp.zeros((lora_r, d_model), dtype),
+        "w_base": jnp.full((d_model,), -6.0, jnp.float32),  # decay base
+        "wr": jax.random.normal(ks[2], (d_model, d_model), dtype) * s,
+        "wk": jax.random.normal(ks[3], (d_model, d_model), dtype) * s,
+        "wv": jax.random.normal(ks[4], (d_model, d_model), dtype) * s,
+        "wg": jax.random.normal(ks[5], (d_model, d_model), dtype) * s,
+        "bonus_u": jnp.zeros((H, headdim), jnp.float32),
+        "ln_x_g": jnp.ones((d_model,), dtype),
+        "wo": jax.random.normal(ks[6], (d_model, d_model), dtype) * s,
+        # channel-mix
+        "cmix_k": jnp.zeros((d_model,), dtype),
+        "cmix_r": jnp.zeros((d_model,), dtype),
+        "ck": jax.random.normal(ks[7], (d_model, d_ff), dtype) * s,
+        "cv": jax.random.normal(ks[8], (d_ff, d_model), dtype) / math.sqrt(d_ff),
+        "cr": jax.random.normal(ks[9], (d_model, d_model), dtype) * s,
+    }
+
+
+def _token_shift(x: Array, prev: Array | None = None) -> Array:
+    """x[t-1] (zeros / carried ``prev`` at t=0)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def wkv6_chunked(r: Array, k: Array, v: Array, lw: Array, u: Array, *,
+                 chunk: int = 32,
+                 s0: Array | None = None) -> tuple[Array, Array]:
+    """Chunked WKV6 recurrence (exact; the training-friendly form).
+
+    r/k/v: [B,S,H,P] f32; ``lw`` = log decay (≤ 0); u: [H,P] bonus.
+    Within a chunk all decay factors appear as exp(differences of cumulative
+    log-decays) with non-positive exponents — numerically safe without 1/w
+    divisions. Backward stores only chunk-boundary states (the naive
+    per-token scan would store an [B,H,P,P] residual per token).
+    Returns (y: [B,S,H,P], final state [B,H,P,P])."""
+    B, S, H, Pd = r.shape
+    c = min(chunk, S)
+    n = (S + c - 1) // c
+    pad = n * c - S
+    if pad:
+        z = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v, lw = z(r), z(k), z(v), z(lw)
+    resh = lambda t: jnp.moveaxis(
+        t.reshape(B, n, c, H, Pd), 1, 0)                 # [n,B,c,H,P]
+    rj_, kj_, vj_, lwj_ = resh(r), resh(k), resh(v), resh(lw)
+
+    tri = jnp.tril(jnp.ones((c, c), bool), k=-1)          # strict lower
+
+    def chunk_step(S_in, inp):
+        rj, kj, vj, lwj = inp                             # [B,c,H,P]
+        lcw = jnp.cumsum(lwj, axis=1)                     # inclusive cumsum
+        prev = lcw - lwj                                  # lcw_{t-1}
+        # intra-chunk: A[t,s] = Σ_p r_t k_s e^{prev_t - lcw_s}, s < t.
+        # Mask the exponent INPUT (s ≥ t diffs are positive → exp overflow
+        # → NaN in the where-VJP), not the exp output.
+        diff = prev[:, :, None] - lcw[:, None]            # [B,t,s,H,P]
+        E = jnp.exp(jnp.where(tri[None, :, :, None, None], diff, -1e30))
+        A = jnp.einsum("bthp,btshp,bshp->bths", rj, E, kj)
+        y = jnp.einsum("bths,bshq->bthq", A, vj)
+        # diagonal bonus term: (r_t · u ⊙ k_t) v_t
+        du = jnp.einsum("bthp,hp,bthp->bth", rj, u, kj)
+        y = y + du[..., None] * vj
+        # incoming state
+        y = y + jnp.einsum("bthp,bhpq->bthq", rj * jnp.exp(prev), S_in)
+        # state passing
+        tailw = jnp.exp(lcw[:, -1:] - lcw)                # [B,c,H,P] ≤ 1
+        S_out = (jnp.exp(lcw[:, -1])[..., None] * S_in     # [B,H,P,1]·[B,H,P,Q]
+                 + jnp.einsum("bshp,bshq->bhpq", kj * tailw, vj))
+        return S_out, y
+
+    S_in = (jnp.zeros((B, H, Pd, Pd), jnp.float32) if s0 is None else s0)
+    S_fin, ys = jax.lax.scan(jax.checkpoint(chunk_step), S_in,
+                             (rj_, kj_, vj_, lwj_))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, n * c, H, Pd)[:, :S]
+    return y, S_fin
+
+
+def rwkv6_time_mix(p: dict, x: Array, *, headdim: int = 64, chunk: int = 32,
+                   state: tuple | None = None, return_state: bool = False):
+    """x: [B, S, D]. ``state``: (shift [B,1,D], wkv [B,H,P,P])."""
+    B, S, D = x.shape
+    H = D // headdim
+    Pd = headdim
+    prev = state[0] if state is not None else None
+    xs = _token_shift(x, prev)
+    dx = xs - x
+    # data-dependent mixing coefficients (5 heads of a shared LoRA)
+    lr = jnp.tanh(x @ p["mix_lora_A"]).reshape(B, S, 5, -1)
+    mixes = p["mix_rkvwg"][None, None] + jnp.einsum(
+        "bsfr,frd->bsfd", lr, p["mix_lora_B"])           # [B,S,5,D]
+    xr, xk, xv, xw, xg = [x + dx * mixes[:, :, i] for i in range(5)]
+
+    r = (xr @ p["wr"]).reshape(B, S, H, Pd)
+    k = (xk @ p["wk"]).reshape(B, S, H, Pd)
+    v = (xv @ p["wv"]).reshape(B, S, H, Pd)
+    g = jax.nn.silu(xg @ p["wg"])
+    # data-dependent decay  w ∈ (0,1): log w = -exp(...)  (≤ 0 always)
+    lw = p["w_base"] + (jnp.tanh(xw @ p["w_lora_A"]) @ p["w_lora_B"]
+                        ).astype(jnp.float32)
+    lw = -jnp.exp(lw).reshape(B, S, H, Pd)
+
+    s0 = state[1] if state is not None else None
+    y, sT = wkv6_chunked(r.astype(jnp.float32), k.astype(jnp.float32),
+                         v.astype(jnp.float32), lw, p["bonus_u"],
+                         chunk=chunk, s0=s0)
+    y = y.reshape(B, S, D).astype(x.dtype)
+
+    from .layers import rmsnorm   # GroupNorm≈per-head rmsnorm simplification
+    y = rmsnorm(y, p["ln_x_g"]) * g
+    out = y @ p["wo"]
+    if return_state or state is not None:
+        return out, (x[:, -1:], sT)
+    return out
+
+
+def rwkv6_channel_mix(p: dict, x: Array, *, state: Array | None = None,
+                      return_state: bool = False):
+    prev = state if state is not None else None
+    xs = _token_shift(x, prev)
+    dx = xs - x
+    xk = x + dx * p["cmix_k"]
+    xr = x + dx * p["cmix_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["ck"]))
+    kv = k @ p["cv"]
+    out = jax.nn.sigmoid(xr @ p["cr"]) * kv
+    if return_state or state is not None:
+        return out, x[:, -1:]
+    return out

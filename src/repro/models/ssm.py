@@ -1,0 +1,141 @@
+"""Mamba2 / SSD blocks (for zamba2-7b) — chunked state-space duality scan.
+
+Faithful to Mamba-2 (arXiv:2405.21060) structure: in-proj → short causal
+conv → SSD with scalar-per-head decay A, per-token Δ, B, C of state size N —
+computed with the chunked algorithm (intra-chunk quadratic + inter-chunk
+state passing via ``lax.scan``), which is the TPU-friendly formulation (the
+Pallas kernel in :mod:`repro.kernels.ssd_scan` tiles the same algorithm).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def ssd_init(key: Array, d_model: int, *, d_state: int = 64,
+             headdim: int = 64, expand: int = 2, d_conv: int = 4,
+             dtype=jnp.float32) -> dict:
+    d_inner = expand * d_model
+    n_heads = d_inner // headdim
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d_model)
+    return {
+        # projections: [z (gate), x, B, C, dt]
+        "in_proj": jax.random.normal(
+            ks[0], (d_model, 2 * d_inner + 2 * d_state + n_heads), dtype) * s,
+        "conv_w": jax.random.normal(
+            ks[1], (d_conv, d_inner + 2 * d_state), dtype) * 0.1,
+        "conv_b": jnp.zeros((d_inner + 2 * d_state,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm_g": jnp.ones((d_inner,), dtype),
+        "out_proj": jax.random.normal(
+            ks[2], (d_inner, d_model), dtype) / math.sqrt(d_inner),
+    }
+
+
+def _ssd_chunked(xh: Array, dt: Array, A: Array, Bm: Array, Cm: Array,
+                 chunk: int = 128,
+                 h0: Array | None = None) -> tuple[Array, Array]:
+    """Chunked SSD scan.
+
+    xh: [B, S, H, P] per-head inputs; dt: [B, S, H] (softplus'ed);
+    A: [H] (negative decay rates); Bm/Cm: [B, S, N].
+    Returns (y: [B, S, H, P], final state [B, H, P, N])."""
+    Bsz, S, H, Pd = xh.shape
+    N = Bm.shape[-1]
+    nch = max(1, (S + chunk - 1) // chunk)
+    pad = nch * chunk - S
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    L = nch * chunk
+    xc = xh.reshape(Bsz, nch, chunk, H, Pd)
+    dtc = dt.reshape(Bsz, nch, chunk, H)
+    Bc = Bm.reshape(Bsz, nch, chunk, N)
+    Cc = Cm.reshape(Bsz, nch, chunk, N)
+
+    dA = dtc * A[None, None, None, :]                 # [B,c,l,H] (negative)
+    seg = jnp.cumsum(dA, axis=2)                      # within-chunk cumsum
+
+    def chunk_step(h, inp):
+        xj, dtj, Bj, Cj, dAj, segj = inp              # [B,l,...]
+        # intra-chunk (quadratic in l): y_intra[t] = C_t · Σ_{s<=t} ...
+        # mask the exponent INPUT: upper-triangle diffs are positive and can
+        # overflow exp to inf, which poisons the where-VJP with inf·0 = NaN.
+        diff = segj[:, :, None, :] - segj[:, None, :, :]             # [B,t,s,H]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        decay = jnp.exp(jnp.where(tri[None, :, :, None], diff, -1e30))
+        cb = jnp.einsum("btn,bsn->bts", Cj, Bj)       # [B,t,s]
+        w = cb[..., None] * decay * dtj[:, None, :, :]        # [B,t,s,H]
+        y_intra = jnp.einsum("btsh,bshp->bthp", w, xj)
+        # contribution of incoming state
+        y_state = jnp.einsum("btn,bhpn,bth->bthp", Cj, h,
+                             jnp.exp(segj))
+        # state update: h' = h * exp(sum dA) + Σ_s exp(seg_end - seg_s) dt_s B_s x_s
+        tail = jnp.exp(segj[:, -1:, :] - segj)        # [B,l,H]
+        upd = jnp.einsum("bsh,bsn,bshp->bhpn", tail * dtj, Bj, xj)
+        h_new = h * jnp.exp(dAj.sum(axis=1))[:, :, None, None] + upd
+        return h_new, y_intra + y_state
+
+    h0 = jnp.zeros((Bsz, H, Pd, N), jnp.float32) if h0 is None else h0
+    # checkpoint the chunk body: backward stores only the [B,H,P,N] chunk
+    # boundary states, recomputing the [c,c] decay tensors per chunk.
+    hT, ys = jax.lax.scan(
+        jax.checkpoint(chunk_step), h0,
+        tuple(jnp.moveaxis(t, 1, 0) for t in (xc, dtc, Bc, Cc, dA, seg)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, L, H, Pd)[:, :S]
+    return y, hT
+
+
+def ssd_block(p: dict, x: Array, *, d_state: int = 64, headdim: int = 64,
+              expand: int = 2, chunk: int = 128,
+              state: Array | None = None, conv_state: Array | None = None,
+              return_state: bool = False):
+    """Full Mamba2 mixer. x: [B, S, D]. In decode mode pass ``state``
+    ([B,H,P,N]) and ``conv_state`` ([B, d_conv-1, convdim]) and S may be 1."""
+    Bsz, S, D = x.shape
+    d_inner = expand * D
+    H = d_inner // headdim
+    N = d_state
+    proj = x @ p["in_proj"]
+    z, xr, Bm, Cm, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N],
+        axis=-1)
+    conv_in = jnp.concatenate([xr, Bm, Cm], axis=-1)   # [B,S,convdim]
+    dconv = p["conv_w"].shape[0]
+    if conv_state is not None:
+        conv_in_full = jnp.concatenate([conv_state, conv_in], axis=1)
+        new_conv_state = conv_in_full[:, -(dconv - 1):]
+    else:
+        conv_in_full = jnp.pad(conv_in, ((0, 0), (dconv - 1, 0), (0, 0)))
+        new_conv_state = conv_in_full[:, -(dconv - 1):] if return_state else None
+    # depthwise causal conv as dconv shifted multiply-accumulates — avoids
+    # materializing a [B, S, dconv, convdim] window tensor.
+    conv = jnp.zeros_like(conv_in)
+    for j in range(dconv):
+        conv = conv + conv_in_full[:, j:j + S] * p["conv_w"][j]
+    conv = jax.nn.silu(conv + p["conv_b"])
+    xr, Bm, Cm = jnp.split(conv, [d_inner, d_inner + N], axis=-1)
+
+    A = -jnp.exp(p["A_log"])                            # [H]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    xh = xr.reshape(Bsz, S, H, headdim)
+    y, hT = _ssd_chunked(xh.astype(jnp.float32), dt, A,
+                         Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                         chunk=min(chunk, max(S, 1)), h0=state)
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(Bsz, S, d_inner).astype(x.dtype)
+    from .layers import rmsnorm
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_g"])
+    out = y @ p["out_proj"]
+    if return_state or state is not None:
+        return out, (hT, new_conv_state)
+    return out

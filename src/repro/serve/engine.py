@@ -1,0 +1,90 @@
+"""Batched serving engine: prefill → decode with bucketed static shapes.
+
+The paper's limitation (§9) — TURNIP needs a static graph, so recursive
+generation requires pre-compiled plans — becomes systematic here: decode
+steps are jitted per (batch-bucket, cache-bucket) and requests are batched
+into the smallest bucket that fits (the "naive solution" the paper sketches,
+made production-shaped). The KV cache is preallocated at the bucket size, so
+serving does no allocation per token — the same static-memory discipline as
+the MEMGRAPH runtime.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ServeConfig", "Engine"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_len: int = 512
+    batch_buckets: tuple[int, ...] = (1, 4, 8)
+    temperature: float = 0.0          # 0 = greedy
+
+
+class Engine:
+    def __init__(self, model, params, cfg: ServeConfig = ServeConfig()):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self._steps: dict[int, Any] = {}
+
+    def _bucket(self, n: int) -> int:
+        for b in self.cfg.batch_buckets:
+            if n <= b:
+                return b
+        raise ValueError(f"batch {n} exceeds largest bucket")
+
+    def _step_fn(self, bucket: int):
+        if bucket not in self._steps:
+            self._steps[bucket] = jax.jit(self.model.decode_step)
+        return self._steps[bucket]
+
+    def generate(self, prompts: list[list[int]], *, max_new: int = 32,
+                 seed: int = 0) -> list[list[int]]:
+        """Greedy/temperature decode for a batch of prompts (pad to bucket)."""
+        n = len(prompts)
+        bucket = self._bucket(n)
+        cfg = self.model.cfg
+        max_prompt = max(len(p) for p in prompts)
+        total = max_prompt + max_new
+        if total > self.cfg.max_len:
+            raise ValueError("sequence exceeds max_len")
+        cache = self.model.init_cache(bucket, self.cfg.max_len)
+        step = self._step_fn(bucket)
+        toks = np.zeros((bucket, total), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, :len(p)] = p
+        out: list[list[int]] = [[] for _ in range(bucket)]
+        key = jax.random.PRNGKey(seed)
+        cur = jnp.asarray(toks[:, 0:1])
+        for t in range(total - 1):
+            logits, cache = step(self.params, cache, cur,
+                                 jnp.asarray(t, "int32"))
+            if self.cfg.temperature > 0:
+                key, sub = jax.random.split(key)
+                nxt = jax.random.categorical(
+                    sub, logits / self.cfg.temperature, axis=-1)
+            else:
+                nxt = jnp.argmax(logits, axis=-1)
+            nxt = np.asarray(nxt, np.int32)
+            tpos = t + 1
+            for i in range(bucket):
+                if tpos < len(prompts[i]) if i < n else True:
+                    pass
+            # teacher-force prompt tokens, free-run afterwards
+            forced = toks[:, tpos] if tpos < total else None
+            step_tok = np.where(
+                np.array([tpos < len(prompts[i]) if i < n else True
+                          for i in range(bucket)]),
+                forced, nxt)
+            for i in range(n):
+                if tpos >= len(prompts[i]) and len(out[i]) < max_new:
+                    out[i].append(int(step_tok[i]))
+            cur = jnp.asarray(step_tok[:, None])
+        return [out[i] for i in range(n)]

@@ -1,0 +1,84 @@
+"""Minimal pytree optimizers (AdamW, Lion) — f32 moments, param-dtype
+updates, pjit-friendly (states are plain pytrees that inherit the param
+sharding rules)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+    def init(self, params: Any) -> dict:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads: Any, state: dict, params: Any) -> tuple[Any, dict]:
+        c = state["count"] + 1
+        b1c = 1.0 - self.b1 ** c.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** c.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m2 = self.b1 * m + (1 - self.b1) * g
+            v2 = self.b2 * v + (1 - self.b2) * jnp.square(g)
+            mh = m2 / b1c
+            vh = v2 / b2c
+            step = mh / (jnp.sqrt(vh) + self.eps) \
+                + self.weight_decay * p.astype(jnp.float32)
+            return (-self.lr * step).astype(p.dtype), m2, v2
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_m = tdef.flatten_up_to(state["m"])
+        flat_v = tdef.flatten_up_to(state["v"])
+        flat_p = tdef.flatten_up_to(params)
+        out = [upd(g, m, v, p) for g, m, v, p in
+               zip(flat_g, flat_m, flat_v, flat_p)]
+        updates = tdef.unflatten([o[0] for o in out])
+        new_state = {"m": tdef.unflatten([o[1] for o in out]),
+                     "v": tdef.unflatten([o[2] for o in out]),
+                     "count": c}
+        return updates, new_state
+
+
+@dataclasses.dataclass(frozen=True)
+class Lion:
+    lr: float = 1e-4
+    b1: float = 0.9
+    b2: float = 0.99
+    weight_decay: float = 0.1
+
+    def init(self, params: Any) -> dict:
+        return {"m": jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "count": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads: Any, state: dict, params: Any) -> tuple[Any, dict]:
+        def upd(g, m, p):
+            g = g.astype(jnp.float32)
+            u = jnp.sign(self.b1 * m + (1 - self.b1) * g) \
+                + self.weight_decay * p.astype(jnp.float32)
+            m2 = self.b2 * m + (1 - self.b2) * g
+            return (-self.lr * u).astype(p.dtype), m2
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_m = tdef.flatten_up_to(state["m"])
+        flat_p = tdef.flatten_up_to(params)
+        out = [upd(g, m, p) for g, m, p in zip(flat_g, flat_m, flat_p)]
+        return (tdef.unflatten([o[0] for o in out]),
+                {"m": tdef.unflatten([o[1] for o in out]),
+                 "count": state["count"] + 1})
+
+
+def apply_updates(params: Any, updates: Any) -> Any:
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)

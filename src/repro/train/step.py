@@ -1,0 +1,57 @@
+"""Train-step factory: value_and_grad + optimizer, optional microbatch
+gradient accumulation (scan), remat handled inside the model."""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from .optim import AdamW, apply_updates
+
+
+def init_train_state(model, key, optimizer=None) -> dict:
+    params = model.init(key)
+    opt = (optimizer or AdamW()).init(params)
+    return {"params": params, "opt": opt, "step": jnp.zeros((), jnp.int32)}
+
+
+def make_train_step(model, optimizer=None, *, grad_accum: int = 1,
+                    loss_fn: Callable | None = None) -> Callable:
+    """Returns ``train_step(state, batch) -> (state, metrics)``.
+
+    ``grad_accum > 1`` splits the (local) batch into microbatches and
+    accumulates grads with a ``lax.scan`` — constant memory in the number of
+    microbatches."""
+    opt = optimizer or AdamW()
+    lfn = loss_fn or (lambda params, batch: model.loss(params, batch))
+
+    def compute_grads(params, batch):
+        if grad_accum == 1:
+            return jax.value_and_grad(lfn)(params, batch)
+
+        def micro(c, mb):
+            loss_acc, g_acc = c
+            l, g = jax.value_and_grad(lfn)(params, mb)
+            return (loss_acc + l, jax.tree.map(jnp.add, g_acc, g)), None
+
+        mbs = jax.tree.map(
+            lambda x: x.reshape(grad_accum, x.shape[0] // grad_accum,
+                                *x.shape[1:]), batch)
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, grads), _ = jax.lax.scan(micro, (jnp.zeros((), jnp.float32), g0),
+                                        mbs)
+        scale = 1.0 / grad_accum
+        return loss * scale, jax.tree.map(lambda g: g * scale, grads)
+
+    def train_step(state: dict, batch: dict) -> tuple[dict, dict]:
+        loss, grads = compute_grads(state["params"], batch)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        updates, opt_state = opt.update(grads, state["opt"], state["params"])
+        params = apply_updates(state["params"], updates)
+        new_state = {"params": params, "opt": opt_state,
+                     "step": state["step"] + 1}
+        return new_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step

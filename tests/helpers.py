@@ -1,0 +1,33 @@
+"""Shared test fixtures: the paper's Fig. 3 TASKGRAPH and random graphs."""
+import numpy as np
+
+from repro.core import TaskGraph
+
+
+def fig3_taskgraph(shape=(4, 4)):
+    """The paper's running example: 3-device matmul decomposition."""
+    tg = TaskGraph()
+    A = tg.add_input(0, shape, name="A")
+    B = tg.add_input(0, shape, name="B")
+    C = tg.add_input(1, shape, name="C")
+    D = tg.add_input(1, shape, name="D")
+    v1 = tg.add_compute(0, (A, B), shape, op="matmul", name="1")
+    v2 = tg.add_compute(0, (A, B), shape, op="matmul_t", name="2")
+    v5 = tg.add_compute(1, (C, D), shape, op="matmul", name="5")
+    v6 = tg.add_compute(1, (C, D), shape, op="matmul_t", name="6")
+    t25 = tg.add_transfer(1, v2)
+    t61 = tg.add_transfer(0, v6)
+    v3 = tg.add_compute(0, (v1, t61), shape, op="add", name="3")
+    v7 = tg.add_compute(1, (v5, t25), shape, op="add", name="7")
+    t7 = tg.add_transfer(2, v7)
+    v4 = tg.add_compute(0, (v3, t61), shape, op="mul", name="4")
+    v8 = tg.add_compute(0, (v4, v3), shape, op="mul", name="8")
+    return tg
+
+
+def int_inputs(tg, seed=0, lo=-3, hi=4, dtype=np.float64):
+    """Integer-valued inputs → float ops are exact → bitwise order-invariance."""
+    rng = np.random.default_rng(seed)
+    from repro.core import OpKind
+    return {t: rng.integers(lo, hi, v.out.shape).astype(dtype)
+            for t, v in tg.vertices.items() if v.kind == OpKind.INPUT}

@@ -1,0 +1,54 @@
+"""Collective-bytes HLO parser (roofline input): synthetic HLO fixtures with
+while-loop trip counts and async collective forms."""
+from repro.launch.hlo_analysis import collective_bytes_from_hlo
+
+HLO = """\
+HloModule jit_step
+
+%body.1 (arg.1: (s32[], bf16[128,256])) -> (s32[], bf16[128,256]) {
+  %p = (s32[], bf16[128,256]) parameter(0)
+  %ag.1 = bf16[128,256]{1,0} all-gather(%x), replica_groups={}
+  %ar.1 = f32[64]{0} all-reduce(%y), to_apply=%add
+}
+
+%cond.1 (arg.2: (s32[], bf16[128,256])) -> pred[] {
+  %it = s32[] get-tuple-element(%p), index=0
+  %lim = s32[] constant(16)
+  ROOT %cmp = pred[] compare(%it, %lim), direction=LT
+}
+
+ENTRY %main (a: bf16[128,256]) -> bf16[128,256] {
+  %w = (s32[], bf16[128,256]) while(%init), condition=%cond.1, body=%body.1
+  %rs = bf16[8,256]{1,0} reduce-scatter(%z), dimensions={0}
+  %ags = bf16[512]{0} all-gather-start(%q)
+  %agd = bf16[512]{0} all-gather-done(%ags)
+  %cp = f32[32,32]{1,0} collective-permute(%r)
+}
+"""
+
+
+def test_counts_and_kinds():
+    out = collective_bytes_from_hlo(HLO)
+    assert set(out["by_kind"]) >= {"all-gather", "all-reduce",
+                                   "reduce-scatter", "collective-permute"}
+
+
+def test_while_trip_count_folded():
+    out = collective_bytes_from_hlo(HLO)
+    # body all-gather: 128*256*2 bytes × 16 trips
+    assert out["by_kind"]["all-gather"] >= 128 * 256 * 2 * 16
+    # body all-reduce: 64*4 × 16
+    assert out["by_kind"]["all-reduce"] == 64 * 4 * 16
+
+
+def test_async_start_counted_done_not_double_counted():
+    out = collective_bytes_from_hlo(HLO)
+    ag = out["by_kind"]["all-gather"]
+    assert ag == 128 * 256 * 2 * 16 + 512 * 2   # start counted once
+
+
+def test_entry_level_ops():
+    out = collective_bytes_from_hlo(HLO)
+    assert out["by_kind"]["reduce-scatter"] == 8 * 256 * 2
+    assert out["by_kind"]["collective-permute"] == 32 * 32 * 4
+    assert out["total_bytes"] == sum(out["by_kind"].values())

@@ -1,0 +1,114 @@
+"""Pallas kernel validation: interpret-mode execution vs pure-jnp oracles,
+swept over shapes and dtypes (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+rng = np.random.default_rng(42)
+
+
+def _tol(dtype):
+    return dict(rtol=3e-2, atol=3e-2) if dtype == "bfloat16" \
+        else dict(rtol=2e-4, atol=2e-5)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("B,Sq,Skv,Hq,Hkv,Dh,causal", [
+        (2, 128, 128, 4, 2, 64, True),       # GQA
+        (1, 200, 200, 4, 4, 128, True),      # non-multiple padding
+        (2, 64, 256, 8, 2, 64, False),       # cross-ish, bidir
+        (1, 256, 64, 2, 1, 64, True),        # MQA, short kv
+    ])
+    def test_vs_ref(self, B, Sq, Skv, Hq, Hkv, Dh, causal):
+        from repro.kernels.flash_attention.ops import flash_attention
+        from repro.kernels.flash_attention.ref import attention_ref
+        q = jnp.asarray(rng.normal(size=(B, Sq, Hq, Dh)), "float32")
+        k = jnp.asarray(rng.normal(size=(B, Skv, Hkv, Dh)), "float32")
+        v = jnp.asarray(rng.normal(size=(B, Skv, Hkv, Dh)), "float32")
+        o = flash_attention(q, k, v, causal=causal, interpret=True,
+                            block_q=64, block_kv=64)
+        r = attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                          v.transpose(0, 2, 1, 3),
+                          causal=causal).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                                   **_tol("float32"))
+
+    @pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+    def test_dtypes(self, dtype):
+        from repro.kernels.flash_attention.ops import flash_attention
+        from repro.kernels.flash_attention.ref import attention_ref
+        q = jnp.asarray(rng.normal(size=(1, 128, 4, 64)), dtype)
+        k = jnp.asarray(rng.normal(size=(1, 128, 2, 64)), dtype)
+        v = jnp.asarray(rng.normal(size=(1, 128, 2, 64)), dtype)
+        o = flash_attention(q, k, v, interpret=True)
+        r = attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                          v.transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(
+            np.asarray(o, np.float32), np.asarray(r, np.float32), **_tol(dtype))
+
+
+class TestRMSNorm:
+    @pytest.mark.parametrize("shape", [(7, 128), (3, 33, 256), (1, 512)])
+    @pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+    def test_vs_ref(self, shape, dtype):
+        from repro.kernels.rmsnorm.ops import rmsnorm
+        from repro.kernels.rmsnorm.ref import rmsnorm_ref
+        x = jnp.asarray(rng.normal(size=shape), dtype)
+        g = jnp.asarray(rng.normal(size=shape[-1:]), dtype)
+        o = rmsnorm(x, g, interpret=True, block_rows=16)
+        r = rmsnorm_ref(x, g)
+        np.testing.assert_allclose(np.asarray(o, np.float32),
+                                   np.asarray(r, np.float32), **_tol(dtype))
+
+
+class TestSSDScan:
+    @pytest.mark.parametrize("B,S,H,P,N,chunk", [
+        (2, 100, 3, 32, 16, 32), (1, 64, 2, 64, 64, 16), (2, 33, 1, 16, 8, 64),
+    ])
+    def test_vs_ref(self, B, S, H, P, N, chunk):
+        from repro.kernels.ssd_scan.ops import ssd_scan
+        from repro.kernels.ssd_scan.ref import ssd_scan_ref
+        xh = jnp.asarray(rng.normal(size=(B, S, H, P)), "float32")
+        dt = jnp.asarray(np.abs(rng.normal(size=(B, S, H))), "float32")
+        A = jnp.asarray(-np.abs(rng.normal(size=(H,))), "float32")
+        Bm = jnp.asarray(rng.normal(size=(B, S, N)), "float32")
+        Cm = jnp.asarray(rng.normal(size=(B, S, N)), "float32")
+        y = ssd_scan(xh, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+        r = ssd_scan_ref(xh, dt, A, Bm, Cm, chunk=37)   # different chunking
+        np.testing.assert_allclose(np.asarray(y), np.asarray(r),
+                                   rtol=5e-4, atol=5e-4)
+
+
+class TestWKV6:
+    @pytest.mark.parametrize("B,S,H,P,chunk", [
+        (2, 100, 3, 32, 25), (1, 31, 2, 64, 8), (2, 64, 1, 16, 64),
+    ])
+    def test_vs_ref(self, B, S, H, P, chunk):
+        from repro.kernels.rwkv6.ops import wkv6
+        from repro.kernels.rwkv6.ref import wkv6_ref
+        r = jnp.asarray(rng.normal(size=(B, S, H, P)), "float32")
+        k = jnp.asarray(rng.normal(size=(B, S, H, P)), "float32")
+        v = jnp.asarray(rng.normal(size=(B, S, H, P)), "float32")
+        lw = jnp.clip(jnp.asarray(
+            -np.exp(rng.normal(size=(B, S, H, P))), "float32"), -20, 0)
+        u = jnp.asarray(rng.normal(size=(H, P)), "float32")
+        y = wkv6(r, k, v, lw, u, chunk=chunk, interpret=True)
+        yr = wkv6_ref(r, k, v, lw, u, chunk=19)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                                   rtol=1e-3, atol=1e-3)
+
+
+class TestMoEGMM:
+    @pytest.mark.parametrize("E,C,D,F", [(4, 100, 96, 130), (2, 64, 64, 64),
+                                         (8, 16, 48, 32)])
+    @pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+    def test_vs_ref(self, E, C, D, F, dtype):
+        from repro.kernels.moe_gmm.ops import moe_gmm
+        from repro.kernels.moe_gmm.ref import moe_gmm_ref
+        x = jnp.asarray(rng.normal(size=(E, C, D)), dtype)
+        w = jnp.asarray(rng.normal(size=(E, D, F)), dtype)
+        o = moe_gmm(x, w, block_c=64, block_f=64, block_d=32, interpret=True)
+        r = moe_gmm_ref(x, w)
+        np.testing.assert_allclose(np.asarray(o, np.float32),
+                                   np.asarray(r, np.float32), **_tol(dtype))

@@ -1,0 +1,175 @@
+"""BUILDMEMGRAPH unit tests: the paper's running example + invariants."""
+import numpy as np
+import pytest
+
+from repro.core import (BuildConfig, MemgraphOOM, MemOp, OpKind, TaskGraph,
+                        build_memgraph)
+from repro.core.runtime import eval_taskgraph, run_in_order
+
+from helpers import fig3_taskgraph, int_inputs
+
+SLOT = dict(size_fn=lambda v: 1)
+
+
+class TestFig3:
+    """Paper §4 example: 3 GPUs, shrinking slot budgets."""
+
+    @pytest.mark.parametrize("cap", [5, 4, 3])
+    def test_compiles_and_validates(self, cap):
+        tg = fig3_taskgraph()
+        res = build_memgraph(tg, BuildConfig(capacity=cap, **SLOT))
+        res.memgraph.validate(check_races=True)
+        assert max(res.peak_used.values()) <= cap
+
+    def test_five_slots_needs_no_offload(self):
+        res = build_memgraph(fig3_taskgraph(),
+                             BuildConfig(capacity=5, **SLOT))
+        assert res.n_offloads == 0 and res.n_reloads == 0
+
+    def test_three_slots_offloads(self):
+        res = build_memgraph(fig3_taskgraph(),
+                             BuildConfig(capacity=3, **SLOT))
+        assert res.n_reloads > 0
+
+    def test_two_slots_ooms(self):
+        # v4 needs two live inputs + its output on one device: 3 slots.
+        with pytest.raises(MemgraphOOM):
+            build_memgraph(fig3_taskgraph(), BuildConfig(capacity=2, **SLOT))
+
+    @pytest.mark.parametrize("cap", [5, 4, 3])
+    def test_outputs_match_oracle(self, cap):
+        tg = fig3_taskgraph()
+        inputs = int_inputs(tg)
+        ref = eval_taskgraph(tg, inputs)
+        res = build_memgraph(tg, BuildConfig(capacity=cap, **SLOT))
+        out = run_in_order(tg, res, inputs)
+        for k in ref:
+            np.testing.assert_array_equal(out[k], ref[k])
+
+    @pytest.mark.parametrize("policy", ["belady", "lru", "random"])
+    def test_victim_policies(self, policy):
+        tg = fig3_taskgraph()
+        res = build_memgraph(tg, BuildConfig(
+            capacity=3, victim_policy=policy, **SLOT))
+        res.memgraph.validate(check_races=True)
+        out = run_in_order(tg, res, int_inputs(tg))
+        ref = eval_taskgraph(tg, int_inputs(tg))
+        for k in ref:
+            np.testing.assert_array_equal(out[k], ref[k])
+
+    def test_paper_faithful_mode_offloads_inputs_too(self):
+        """reuse_host_copy=False re-offloads evicted tensors even when a
+        host copy exists (the paper's always-offload behaviour)."""
+        tg = fig3_taskgraph()
+        res_faithful = build_memgraph(tg, BuildConfig(
+            capacity=3, reuse_host_copy=False, **SLOT))
+        res_opt = build_memgraph(tg, BuildConfig(
+            capacity=3, reuse_host_copy=True, **SLOT))
+        assert res_faithful.n_offloads >= res_opt.n_offloads
+        res_faithful.memgraph.validate(check_races=True)
+
+    def test_superfluous_mem_deps_counted(self):
+        """Paper Fig. 5: a mem dep duplicating a data dep is superfluous."""
+        res = build_memgraph(fig3_taskgraph(),
+                             BuildConfig(capacity=5, **SLOT))
+        assert res.memgraph.superfluous_mem_deps >= 1
+
+    def test_every_data_dep_preserved(self):
+        """Correctness requirement (a) of §6: TASKGRAPH data deps appear in
+        the MEMGRAPH, possibly via offload→reload chains."""
+        tg = fig3_taskgraph()
+        res = build_memgraph(tg, BuildConfig(capacity=3, **SLOT))
+        mg = res.memgraph
+        for tid, v in tg.vertices.items():
+            for i in v.inputs:
+                cons_mid = res.mid_of[tid]
+                # walk data preds transitively through reloads
+                frontier = set(mg.data_preds(cons_mid))
+                seen = set(frontier)
+                ok = False
+                while frontier:
+                    m = frontier.pop()
+                    if mg.vertices[m].src_tid == i:
+                        ok = True
+                        break
+                    if mg.vertices[m].op in (MemOp.RELOAD, MemOp.OFFLOAD):
+                        for p in mg.data_preds(m):
+                            if p not in seen:
+                                seen.add(p)
+                                frontier.add(p)
+                assert ok, f"data dep {i}->{tid} lost"
+
+
+class TestStreamingReduce:
+    """§B: n-ary sum lowered to a locked sum-into group."""
+
+    def _graph(self, n=6, width=8):
+        tg = TaskGraph()
+        ws = [tg.add_input(0, (width,), name=f"w{i}") for i in range(n)]
+        ps = [tg.add_compute(0, (w,), (width,), op="relu", name=f"p{i}")
+              for i, w in enumerate(ws)]
+        r = tg.add_reduce(0, ps, streaming=True, name="acc")
+        tg.add_compute(0, (r,), (width,), op="scale", params={"alpha": 2.0})
+        return tg
+
+    @pytest.mark.parametrize("cap_units", [64, 16, 8])
+    def test_streams_under_pressure(self, cap_units):
+        tg = self._graph()
+        res = build_memgraph(tg, BuildConfig(capacity=cap_units * 8))
+        res.memgraph.validate(check_races=True)
+        ops = [v.op for v in res.memgraph.vertices.values()]
+        assert ops.count(MemOp.ADD_INTO) == 6
+        assert ops.count(MemOp.ALLOC0) == 1
+        inputs = int_inputs(tg)
+        out = run_in_order(tg, res, inputs)
+        ref = eval_taskgraph(tg, inputs)
+        for k in ref:
+            np.testing.assert_array_equal(out[k], ref[k])
+
+    def test_two_slots_stream(self):
+        """Accumulator + one partial at a time — the paper's 'run them in
+        sequence and offload' mode (§8)."""
+        tg = self._graph()
+        res = build_memgraph(tg, BuildConfig(capacity=2 * 8 * 8))
+        assert res.n_reloads > 0
+        res.memgraph.validate(check_races=True)
+
+
+class TestVariableSizes:
+    def test_mixed_sizes_fit_exactly(self):
+        tg = TaskGraph()
+        a = tg.add_input(0, (16,), name="a")
+        b = tg.add_compute(0, (a,), (32,), op="concat", name="b")
+        tg.vertices[b].op = "relu"
+        tg.vertices[b].out = tg.vertices[b].out
+        c = tg.add_compute(0, (a,), (8,), op="relu", name="c")
+        d = tg.add_compute(0, (b, c), (8,), op="slice_rows", name="d")
+        res = build_memgraph(
+            tg, BuildConfig(capacity=64 * 8,
+                            size_fn=lambda v: v.out.shape[0] * 8))
+        res.memgraph.validate(check_races=True)
+
+    def test_fragmentation_forces_eviction(self):
+        tg = TaskGraph()
+        h = tg.add_input(0, (4,), name="x0")
+        for i in range(12):
+            h = tg.add_compute(0, (h,), (4 if i % 2 else 6,), op="relu",
+                               name=f"v{i}")
+        res = build_memgraph(
+            tg, BuildConfig(capacity=16, size_fn=lambda v: v.out.shape[0]))
+        res.memgraph.validate(check_races=True)
+        assert max(res.peak_used.values()) <= 16
+
+
+def test_order_must_be_topological():
+    tg = fig3_taskgraph()
+    bad = list(reversed(sorted(tg.vertices)))
+    with pytest.raises(ValueError):
+        build_memgraph(tg, BuildConfig(capacity=5, **SLOT), order=bad)
+
+
+def test_stats_shape():
+    res = build_memgraph(fig3_taskgraph(), BuildConfig(capacity=3, **SLOT))
+    s = res.memgraph.stats()
+    assert s["n_vertices"] == len(res.memgraph)
+    assert s["mem_deps"] > 0 and s["data_deps"] > 0

@@ -1,0 +1,125 @@
+"""Property-based tests (hypothesis): for *random* TASKGRAPHs, memory
+budgets, and execution orders, the compiled MEMGRAPH is acyclic, race-free,
+within budget, and produces outputs identical to direct dataflow evaluation
+— the paper's §7 correctness claims as machine-checked invariants."""
+import random as pyrandom
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import (BuildConfig, MemgraphOOM, OpKind, TaskGraph,
+                        build_memgraph)
+from repro.core.runtime import eval_taskgraph, run_in_order
+
+SHAPE = (4, 4)
+UNARY = ["relu", "transpose", "copy"]
+BINARY = ["add", "mul", "matmul", "matmul_t"]
+
+
+@st.composite
+def taskgraphs(draw):
+    n_dev = draw(st.integers(1, 3))
+    n_inputs = draw(st.integers(1, 3))
+    n_ops = draw(st.integers(3, 18))
+    tg = TaskGraph()
+    tids = []
+    for i in range(n_inputs):
+        for d in range(n_dev):
+            tids.append(tg.add_input(d, SHAPE, name=f"in{d}.{i}"))
+    for i in range(n_ops):
+        d = draw(st.integers(0, n_dev - 1))
+        arity = draw(st.integers(1, 2))
+        if arity == 1:
+            op = draw(st.sampled_from(UNARY))
+            a = draw(st.sampled_from(tids))
+            tids.append(tg.add_compute(d, (a,), SHAPE, op=op, name=f"v{i}"))
+        else:
+            op = draw(st.sampled_from(BINARY))
+            a = draw(st.sampled_from(tids))
+            b = draw(st.sampled_from(tids))
+            tids.append(tg.add_compute(d, (a, b), SHAPE, op=op,
+                                       name=f"v{i}"))
+        # occasionally fold a streaming reduction over recent tensors
+        if i % 7 == 6 and len(tids) >= 4:
+            parts = draw(st.lists(st.sampled_from(tids), min_size=2,
+                                  max_size=4, unique=True))
+            tids.append(tg.add_reduce(d, parts, streaming=True,
+                                      name=f"r{i}"))
+    return tg
+
+
+@st.composite
+def budgets(draw):
+    return draw(st.integers(3, 12))
+
+
+@settings(max_examples=40, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(tg=taskgraphs(), cap=budgets(),
+       policy=st.sampled_from(["belady", "lru", "random"]),
+       reuse=st.booleans(), seed=st.integers(0, 2**16))
+def test_any_order_matches_oracle(tg, cap, policy, reuse, seed):
+    cfg = BuildConfig(capacity=cap, size_fn=lambda v: 1,
+                      victim_policy=policy, reuse_host_copy=reuse,
+                      rng_seed=seed)
+    try:
+        res = build_memgraph(tg, cfg)
+    except MemgraphOOM:
+        return  # infeasible budget for this graph's working set: OK
+    mg = res.memgraph
+    mg.validate(check_races=True)                       # acyclic + race-free
+    assert max(res.peak_used.values()) <= cap            # never over budget
+
+    rng = np.random.default_rng(seed)
+    inputs = {t: rng.integers(-3, 4, v.out.shape).astype(np.float64)
+              for t, v in tg.vertices.items() if v.kind == OpKind.INPUT}
+    ref = eval_taskgraph(tg, inputs)
+
+    # simulation order + three adversarial random topological orders
+    orders = [None]
+    for i in range(3):
+        r = pyrandom.Random(seed + i)
+        orders.append(mg.topo_order(key=lambda m: r.random()))
+    for order in orders:
+        out = run_in_order(tg, res, inputs, order)
+        assert set(out) == set(ref)
+        for k in ref:
+            np.testing.assert_array_equal(out[k], ref[k], err_msg=f"out {k}")
+
+
+@settings(max_examples=20, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(tg=taskgraphs(), seed=st.integers(0, 2**16))
+def test_bytewise_variable_sizes(tg, seed):
+    """Same invariants with byte-granular arenas (nbytes size_fn)."""
+    cap = 6 * 4 * 4 * 8          # six tensors' worth of bytes per device
+    try:
+        res = build_memgraph(tg, BuildConfig(capacity=cap))
+    except MemgraphOOM:
+        return
+    res.memgraph.validate(check_races=True)
+    rng = np.random.default_rng(seed)
+    inputs = {t: rng.integers(-3, 4, v.out.shape).astype(np.float64)
+              for t, v in tg.vertices.items() if v.kind == OpKind.INPUT}
+    ref = eval_taskgraph(tg, inputs)
+    out = run_in_order(tg, res, inputs)
+    for k in ref:
+        np.testing.assert_array_equal(out[k], ref[k])
+
+
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(tg=taskgraphs(), cap=budgets(), seed=st.integers(0, 2**16))
+def test_forward_seq_edges(tg, cap, seed):
+    """Every dependency edge points forward in simulation order — the §7
+    acyclicity argument, checked directly."""
+    try:
+        res = build_memgraph(tg, BuildConfig(
+            capacity=cap, size_fn=lambda v: 1, rng_seed=seed))
+    except MemgraphOOM:
+        return
+    mg = res.memgraph
+    for m, v in mg.vertices.items():
+        for u in mg.preds[m]:
+            assert mg.vertices[u].seq < v.seq, f"backward edge {u}->{m}"

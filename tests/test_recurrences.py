@@ -1,0 +1,90 @@
+"""Chunked recurrences (WKV6 / SSD) vs naive per-token oracles — including
+hypothesis sweeps over shapes/chunk sizes (exactness is what licenses the
+training-memory optimization)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models.rwkv import wkv6_chunked
+from repro.models.ssm import _ssd_chunked
+
+
+def wkv6_naive(r, k, v, lw, u, s0=None):
+    B, S, H, P = r.shape
+    S_ = np.zeros((B, H, P, P), np.float64) if s0 is None \
+        else np.asarray(s0, np.float64)
+    w = np.exp(np.asarray(lw, np.float64))
+    r, k, v = [np.asarray(t, np.float64) for t in (r, k, v)]
+    u = np.asarray(u, np.float64)
+    ys = []
+    for t in range(S):
+        kv = np.einsum("bhp,bhq->bhpq", k[:, t], v[:, t])
+        ys.append(np.einsum("bhp,bhpq->bhq", r[:, t],
+                            S_ + u[None, :, :, None] * kv))
+        S_ = w[:, t][..., None] * S_ + kv
+    return np.stack(ys, 1), S_
+
+
+def ssd_naive(xh, dt, A, Bm, Cm, h0=None):
+    B_, S_, H_, P_ = xh.shape
+    N_ = Bm.shape[-1]
+    h = np.zeros((B_, H_, P_, N_), np.float64) if h0 is None \
+        else np.asarray(h0, np.float64)
+    xh, dt, Bm, Cm = [np.asarray(t, np.float64) for t in (xh, dt, Bm, Cm)]
+    A = np.asarray(A, np.float64)
+    ys = []
+    for t in range(S_):
+        da = np.exp(dt[:, t] * A[None])
+        h = h * da[:, :, None, None] + np.einsum(
+            "bh,bn,bhp->bhpn", dt[:, t], Bm[:, t], xh[:, t])
+        ys.append(np.einsum("bn,bhpn->bhp", Cm[:, t], h))
+    return np.stack(ys, 1), h
+
+
+@settings(max_examples=10, deadline=None)
+@given(S=st.integers(1, 70), chunk=st.integers(1, 80),
+       seed=st.integers(0, 100))
+def test_wkv6_chunked_exact(S, chunk, seed):
+    rng = np.random.default_rng(seed)
+    B, H, P = 2, 2, 8
+    r, k, v = [jnp.asarray(rng.normal(size=(B, S, H, P)).astype(np.float32))
+               for _ in range(3)]
+    lw = jnp.clip(jnp.asarray(
+        -np.exp(rng.normal(size=(B, S, H, P))).astype(np.float32)), -20, 0)
+    u = jnp.asarray(rng.normal(size=(H, P)).astype(np.float32))
+    s0 = jnp.asarray(rng.normal(size=(B, H, P, P)).astype(np.float32))
+    y, sT = wkv6_chunked(r, k, v, lw, u, chunk=chunk, s0=s0)
+    yr, sr = wkv6_naive(r, k, v, lw, u, s0=s0)
+    np.testing.assert_allclose(np.asarray(y), yr, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(sT), sr, rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(S=st.integers(1, 60), chunk=st.integers(1, 70),
+       seed=st.integers(0, 100))
+def test_ssd_chunked_exact(S, chunk, seed):
+    rng = np.random.default_rng(seed)
+    B, H, P, N = 2, 2, 4, 5
+    xh = jnp.asarray(rng.normal(size=(B, S, H, P)).astype(np.float32))
+    dt = jnp.asarray(np.abs(rng.normal(size=(B, S, H))).astype(np.float32))
+    A = jnp.asarray(-np.abs(rng.normal(size=(H,))).astype(np.float32))
+    Bm = jnp.asarray(rng.normal(size=(B, S, N)).astype(np.float32))
+    Cm = jnp.asarray(rng.normal(size=(B, S, N)).astype(np.float32))
+    h0 = jnp.asarray(rng.normal(size=(B, H, P, N)).astype(np.float32))
+    y, hT = _ssd_chunked(xh, dt, A, Bm, Cm, chunk=chunk, h0=h0)
+    yr, hr = ssd_naive(xh, dt, A, Bm, Cm, h0=h0)
+    np.testing.assert_allclose(np.asarray(y), yr, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(hT), hr, rtol=2e-3, atol=2e-3)
+
+
+def test_wkv6_grads_finite():
+    rng = np.random.default_rng(0)
+    B, S, H, P = 1, 40, 2, 8
+    r, k, v = [jnp.asarray(rng.normal(size=(B, S, H, P)).astype(np.float32))
+               for _ in range(3)]
+    lw = jnp.clip(jnp.asarray(
+        -np.exp(rng.normal(size=(B, S, H, P))).astype(np.float32)), -20, 0)
+    u = jnp.asarray(rng.normal(size=(H, P)).astype(np.float32))
+    g = jax.grad(lambda rr: wkv6_chunked(rr, k, v, lw, u, chunk=16)[0].sum())(r)
+    assert bool(jnp.isfinite(g).all())

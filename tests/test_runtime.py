@@ -1,0 +1,79 @@
+"""Threaded event-driven runtime (paper §5/§B): nondet vs fixed, latency
+injection, ByteArena static placement."""
+import numpy as np
+import pytest
+
+from repro.core import BuildConfig, MemOp, build_memgraph
+from repro.core.runtime import (ByteArena, TurnipRuntime, eval_taskgraph,
+                                run_in_order)
+
+from helpers import fig3_taskgraph, int_inputs
+
+
+@pytest.mark.parametrize("mode", ["nondet", "fixed"])
+@pytest.mark.parametrize("cap", [5, 3])
+def test_threaded_matches_oracle(mode, cap):
+    tg = fig3_taskgraph()
+    inputs = int_inputs(tg)
+    ref = eval_taskgraph(tg, inputs)
+    res = build_memgraph(tg, BuildConfig(capacity=cap, size_fn=lambda v: 1))
+    rt = TurnipRuntime(tg, res, mode=mode, seed=0)
+    rr = rt.run(inputs)
+    for k in ref:
+        np.testing.assert_array_equal(rr.outputs[k], ref[k])
+    assert rr.makespan > 0
+    assert set(rr.busy) == {0, 1, 2}
+
+
+def test_latency_injection_still_correct():
+    """Slow transfers (the paper's nondeterminism source) must not change
+    results, only timing."""
+    tg = fig3_taskgraph()
+    inputs = int_inputs(tg)
+    ref = eval_taskgraph(tg, inputs)
+    res = build_memgraph(tg, BuildConfig(capacity=3, size_fn=lambda v: 1))
+
+    def latency(v):
+        return 0.003 if v.op in (MemOp.OFFLOAD, MemOp.RELOAD,
+                                 MemOp.TRANSFER) else 0.0
+
+    rr = TurnipRuntime(tg, res, mode="nondet", latency=latency, seed=1).run(inputs)
+    for k in ref:
+        np.testing.assert_array_equal(rr.outputs[k], ref[k])
+    assert rr.offload_bytes >= 0 and rr.reload_bytes > 0
+
+
+def test_many_seeds_nondet_equivalence():
+    """Dispatch order is randomized by seed; outputs never change."""
+    tg = fig3_taskgraph()
+    inputs = int_inputs(tg)
+    ref = eval_taskgraph(tg, inputs)
+    res = build_memgraph(tg, BuildConfig(capacity=3, size_fn=lambda v: 1))
+    for seed in range(6):
+        rr = TurnipRuntime(tg, res, mode="nondet", seed=seed).run(inputs)
+        for k in ref:
+            np.testing.assert_array_equal(rr.outputs[k], ref[k])
+
+
+def test_bytearena_static_placement():
+    """Real preallocated per-device buffers: byte-accurate extents, no
+    allocation during execution (paper §5)."""
+    tg = fig3_taskgraph()
+    inputs = int_inputs(tg, dtype=np.float32)
+    ref = eval_taskgraph(tg, inputs)
+    cap = 5 * 4 * 4 * 4   # five f32 4x4 tensors per device
+    res = build_memgraph(tg, BuildConfig(capacity=cap))
+    rt = TurnipRuntime(tg, res, backend="bytes",
+                       capacities={d: cap for d in tg.devices()})
+    rr = rt.run(inputs)
+    for k in ref:
+        np.testing.assert_allclose(rr.outputs[k], ref[k], rtol=1e-6)
+
+
+def test_run_in_order_rejects_non_topological():
+    tg = fig3_taskgraph()
+    res = build_memgraph(tg, BuildConfig(capacity=5, size_fn=lambda v: 1))
+    order = sorted(res.memgraph.vertices,
+                   key=lambda m: -res.memgraph.vertices[m].seq)
+    with pytest.raises(ValueError):
+        run_in_order(tg, res, int_inputs(tg), order)

@@ -1,0 +1,75 @@
+"""Discrete-event simulator: modes, determinism, stall accounting."""
+import pytest
+
+from repro.core import BuildConfig, TaskGraph, build_memgraph
+from repro.core.simulate import HardwareModel, simulate
+
+from helpers import fig3_taskgraph
+
+
+def layered_graph(L=6, T=4, D=512, B=256):
+    tg = TaskGraph()
+    x = tg.add_input(0, (B, D), name="x")
+    h = x
+    tile = D // T
+    for l in range(L):
+        tiles = []
+        for t in range(T):
+            w = tg.add_input(0, (D, tile), name=f"w{l}.{t}")
+            tiles.append(tg.add_compute(0, (h, w), (B, tile), op="matmul",
+                                        flops=2 * B * D * tile,
+                                        name=f"mm{l}.{t}"))
+        cat = tg.add_compute(0, tuple(tiles), (B, D), op="concat",
+                             params={"axis": -1}, name=f"cat{l}")
+        h = tg.add_compute(0, (cat,), (B, D), op="gelu", flops=8 * B * D,
+                           name=f"act{l}")
+    return tg
+
+
+def test_simulates_all_vertices():
+    tg = fig3_taskgraph()
+    res = build_memgraph(tg, BuildConfig(capacity=3, size_fn=lambda v: 1))
+    sim = simulate(res.memgraph, HardwareModel())
+    assert sim.n_vertices == len(res.memgraph)
+    assert sim.makespan > 0
+
+
+@pytest.mark.parametrize("mode", ["nondet", "fixed"])
+def test_deterministic_given_seed(mode):
+    tg = layered_graph()
+    res = build_memgraph(tg, BuildConfig(capacity=2 * 512 * 256 * 4))
+    hw = HardwareModel(transfer_jitter=0.7, seed=3)
+    a = simulate(res.memgraph, hw, mode=mode)
+    b = simulate(res.memgraph, hw, mode=mode)
+    assert a.makespan == b.makespan
+
+
+def test_fixed_never_faster_than_nondet_with_jitter():
+    tg = layered_graph(L=8, T=8)
+    res = build_memgraph(tg, BuildConfig(capacity=3 * 512 * 256 * 4))
+    worse = 0
+    for seed in range(5):
+        hw = HardwareModel(transfer_jitter=1.0, seed=seed)
+        nd = simulate(res.memgraph, hw, mode="nondet")
+        fx = simulate(res.memgraph, hw, mode="fixed")
+        assert fx.makespan >= nd.makespan * 0.999
+        worse += fx.makespan > nd.makespan * 1.001
+    assert worse >= 1   # jitter must hurt the fixed order somewhere
+
+
+def test_memory_pressure_increases_makespan():
+    tg = layered_graph(L=8, T=8)
+    big = build_memgraph(tg, BuildConfig(capacity=64 * 512 * 256 * 4))
+    small = build_memgraph(tg, BuildConfig(capacity=int(3 * 512 * 256 * 4)))
+    hw = HardwareModel()
+    assert simulate(small.memgraph, hw).makespan >= \
+        simulate(big.memgraph, hw).makespan
+
+
+def test_timeline_recording():
+    tg = fig3_taskgraph()
+    res = build_memgraph(tg, BuildConfig(capacity=5, size_fn=lambda v: 1))
+    sim = simulate(res.memgraph, HardwareModel(), record_timeline=True)
+    assert len(sim.timeline) == sim.n_vertices
+    for t0, t1, dev, eng, _name in sim.timeline:
+        assert t1 >= t0 >= 0

@@ -4,7 +4,8 @@ Prints ``name,us_per_call,derived`` CSV (scaffold contract). Paper artifacts:
 
 * fig10  — LLaMA prefill latency vs sequence length, constrained RAM
 * fig11  — LoRA training time per batch
-* ablation — fixed-execution slowdown (§8) + victim policies (§C)
+* ablation — fixed-execution slowdown (§8) + victim (§C) + dispatch policies
+* threaded — nondet-vs-fixed on real threads (condition-variable runtime)
 * memgraph_build — compiler throughput/dependency statistics
 * roofline — three-term model per dry-run cell (skipped when no artifacts)
 
@@ -21,11 +22,13 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 def main() -> None:
     quick = os.environ.get("QUICK", "1") != "0"
-    from . import fig10_prefill, fig11_lora, stall_ablation, memgraph_build
+    from . import (fig10_prefill, fig11_lora, stall_ablation,
+                   threaded_runtime, memgraph_build)
     print("name,us_per_call,derived")
     fig10_prefill.run(quick=quick)
     fig11_lora.run(quick=quick)
     stall_ablation.run(quick=quick)
+    threaded_runtime.run(quick=quick)
     memgraph_build.run(quick=quick)
     # roofline (requires dry-run artifacts)
     art = "experiments/dryrun_v4"

@@ -1,12 +1,14 @@
 """Paper §8 ablation: fixed-execution slowdown vs transfer-latency jitter
 (the paper reports up to 3×). Sweeps jitter σ and memory budgets on the
-tiled prefill workload; also the §C victim-policy ablation."""
+tiled prefill workload; also the §C victim-policy ablation and the
+dispatch-policy sweep (which ready vertex an engine launches first)."""
 from __future__ import annotations
 
 import dataclasses
 
 from repro.configs import get_arch
 from repro.core import BuildConfig, build_memgraph
+from repro.core.dispatch import POLICY_NAMES
 from repro.core.simulate import HardwareModel, simulate
 from repro.core.trace import TraceConfig, trace_prefill
 
@@ -35,6 +37,18 @@ def run(quick=False) -> list[dict]:
                              nondet_ms=nd.makespan * 1e3))
             emit(f"ablation/fixed_vs_nondet/mem{budget:g}GB/jit{j:g}",
                  nd.makespan * 1e6, f"fixed/nondet={ratio:.2f}x")
+    # dispatch policies (shared vocabulary with the threaded runtime): same
+    # nondet event loop, different ready-queue ranking, under heavy jitter.
+    # `res` still holds the tightest-budget build from the sweep above.
+    hw = dataclasses.replace(srv["hw"], transfer_jitter=0.6)
+    base = simulate(res.memgraph, hw, mode="fixed").makespan
+    for policy in POLICY_NAMES:
+        sim = simulate(res.memgraph, hw, mode="nondet", policy=policy)
+        rows.append(dict(dispatch=policy, ms=sim.makespan * 1e3,
+                         fixed_ratio=base / sim.makespan))
+        emit(f"ablation/dispatch/{policy}", sim.makespan * 1e6,
+             f"fixed/nondet={base / sim.makespan:.2f}x")
+
     # §C victim policies
     # binding but feasible: the unembed tile alone is ~250 MB on dev 0
     cap = int(2.5 * 2**30 * 4 / cfg.n_layers)

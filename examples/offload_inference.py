@@ -13,7 +13,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core import BuildConfig, MemgraphOOM, build_memgraph
+from repro.core import BuildConfig, MemgraphOOM, POLICY_NAMES, build_memgraph
 from repro.core.runtime import TurnipRuntime, eval_taskgraph
 from repro.core.simulate import HardwareModel, simulate
 from repro.core.trace import TraceConfig, trace_prefill
@@ -34,6 +34,7 @@ def main() -> None:
     print(f"graph: {tr.tg.stats()}")
     print(f"{'budget':>8s} {'offloads':>9s} {'reloads':>8s} "
           f"{'sim ms':>8s} {'exact':>6s}")
+    tightest = None
     for frac in (1.0, 0.5, 0.25, 0.12, 0.05):
         cap = int(total * frac)
         try:
@@ -47,6 +48,19 @@ def main() -> None:
         sim = simulate(res.memgraph, hw)
         print(f"{frac:8.2f} {res.n_offloads:9d} {res.n_reloads:8d} "
               f"{sim.makespan*1e3:8.2f} {str(exact):>6s}")
+        tightest = res
+
+    # dispatch-policy ablation at the tightest feasible budget: same graph,
+    # same memory plan, different ready-queue ranking (simulated makespan —
+    # the threaded analogue lives in benchmarks/threaded_runtime.py).
+    if tightest is not None:
+        print("\ndispatch policies at tightest budget "
+              f"({tightest.n_reloads} reloads):")
+        fixed_ms = simulate(tightest.memgraph, hw, mode="fixed").makespan
+        for policy in POLICY_NAMES:
+            sim = simulate(tightest.memgraph, hw, policy=policy)
+            print(f"  {policy:>14s}: {sim.makespan*1e3:8.2f} ms "
+                  f"(fixed-issue order: {fixed_ms/sim.makespan:.2f}x slower)")
 
 
 if __name__ == "__main__":

@@ -53,9 +53,12 @@ def main() -> None:
     inputs = {t: rng.integers(-3, 4, (64, 64)).astype(np.float64)
               for t in (A, B, C, D)}
     ref = eval_taskgraph(tg, inputs)
-    rr = TurnipRuntime(tg, res, mode="nondet", seed=42).run(inputs)
-    ok = all(np.array_equal(rr.outputs[k], ref[k]) for k in ref)
-    print(f"nondeterministic execution matches dataflow oracle: {ok}")
+    for policy in ("random", "critical-path", "transfer-first"):
+        rr = TurnipRuntime(tg, res, mode="nondet", policy=policy,
+                           seed=42).run(inputs)
+        ok = all(np.array_equal(rr.outputs[k], ref[k]) for k in ref)
+        print(f"nondet ({policy:>14s} dispatch) matches dataflow "
+              f"oracle: {ok}")
 
     # -- 4. the paper's ablation in the simulator ---------------------------
     hw = HardwareModel(transfer_jitter=0.8, seed=7)

@@ -3,9 +3,11 @@ execution (the paper's primary contribution)."""
 from .taskgraph import OpKind, TaskGraph, TaskVertex, TensorSpec
 from .memgraph import DepKind, Loc, MemGraph, MemOp, MemVertex, RaceError
 from .build import BuildConfig, BuildResult, MemgraphOOM, build_memgraph
+from .dispatch import DispatchPolicy, POLICY_NAMES, get_policy
 
 __all__ = [
     "OpKind", "TaskGraph", "TaskVertex", "TensorSpec",
     "DepKind", "Loc", "MemGraph", "MemOp", "MemVertex", "RaceError",
     "BuildConfig", "BuildResult", "MemgraphOOM", "build_memgraph",
+    "DispatchPolicy", "POLICY_NAMES", "get_policy",
 ]

@@ -173,8 +173,9 @@ class MemGraph:
         if check_races:
             self._check_safe_overwrites()
 
-    def _reachable(self, srcs: set[int], dst: int, cache: dict) -> bool:
-        """Is there a path from any of ``srcs`` to ``dst``? (ancestors of dst)"""
+    def _ancestors(self, dst: int, cache: dict) -> set[int]:
+        """The ancestor set of ``dst`` (all vertices with a path to it),
+        memoized in ``cache``."""
         anc = cache.get(dst)
         if anc is None:
             anc = set()
@@ -186,7 +187,11 @@ class MemGraph:
                         anc.add(p)
                         stack.append(p)
             cache[dst] = anc
-        return bool(srcs & anc)
+        return anc
+
+    def _reachable(self, srcs: set[int], dst: int, cache: dict) -> bool:
+        """Is there a path from any of ``srcs`` to ``dst``? (ancestors of dst)"""
+        return bool(srcs & self._ancestors(dst, cache))
 
     def _check_safe_overwrites(self) -> None:
         """For every pair of vertices whose outputs overlap in memory, one
@@ -215,21 +220,7 @@ class MemGraph:
                     # v2 is the later writer: every reader of v1 (and v1
                     # itself) must be an ancestor of v2.
                     readers = set(self.data_succs(m1)) | {m1}
-                    # readers that are themselves later overwrites of the
-                    # same group output (JOIN) read via lock-group; fine.
-                    if not cache.setdefault(m2, None) and True:
-                        pass
-                    anc = cache.get(m2)
-                    if anc is None:
-                        anc = set()
-                        stack = [m2]
-                        while stack:
-                            x = stack.pop()
-                            for p in self.preds[x]:
-                                if p not in anc:
-                                    anc.add(p)
-                                    stack.append(p)
-                        cache[m2] = anc
+                    anc = self._ancestors(m2, cache)
                     bad = {r for r in readers if r != m2 and r not in anc
                            and pos[r] < pos[m2]}
                     # A reader *after* v2 in topo pos but not ordered w.r.t.

@@ -1,7 +1,7 @@
 """The TURNIP execution engine (paper §5, §B).
 
 Executes a compiled MEMGRAPH with a *nondeterministic, event-driven* loop:
-whenever a vertex's dependencies are complete and a stream on its device is
+whenever a vertex's dependencies are complete and an engine on its device is
 free, it may be launched — in any order. Memory management is entirely
 static: every vertex reads/writes the extents assigned at compile time; there
 are no malloc/free calls during execution (paper §5).
@@ -17,17 +17,22 @@ Components:
 * :func:`run_in_order` — single-threaded reference interpreter executing an
   arbitrary caller-supplied topological order (the property-test workhorse:
   every valid order must give identical outputs).
-* :class:`TurnipRuntime` — the threaded event loop with per-device stream
-  pools, ``add_into`` write-locks (§B), optional latency injection (to create
-  real transfer/compute races on this CPU container), and per-device
-  busy/stall timelines. ``mode='fixed'`` reproduces the paper's ablation:
-  vertices are *issued* strictly in the compile-time simulation order.
+* :class:`TurnipRuntime` — the threaded event-driven scheduler. Each device
+  owns a pool of compute streams plus dedicated DMA streams per direction
+  (h2d/d2h/d2d — the copy-engine structure of
+  :mod:`~repro.core.simulate`), so an OFFLOAD never occupies a compute
+  stream. Threads sleep on condition variables and are woken only by
+  dependency-completion events — there is no polling anywhere. Ready
+  vertices are ranked by a pluggable
+  :class:`~repro.core.dispatch.DispatchPolicy`; ``mode='fixed'`` reproduces
+  the paper's ablation: vertices are *issued* strictly in the compile-time
+  simulation order (head-of-line blocking), though still asynchronous once
+  issued.
 """
 from __future__ import annotations
 
 import dataclasses
-import queue
-import random
+import heapq
 import threading
 import time
 from typing import Any, Callable
@@ -35,6 +40,8 @@ from typing import Any, Callable
 import numpy as np
 
 from .build import BuildResult
+from .dispatch import (COMPUTE, DispatchPolicy, ENGINE_KINDS, TRANSFER_KINDS,
+                       engine_of, get_policy)
 from .memgraph import Loc, MemGraph, MemOp, MemVertex, RaceError
 from .ops import get_op
 from .taskgraph import OpKind, TaskGraph
@@ -118,16 +125,17 @@ class ByteArena:
         raw = np.ascontiguousarray(value).view(np.uint8).reshape(-1)
         if raw.nbytes > loc.size:
             raise RaceError(f"value of {raw.nbytes}B exceeds extent {loc}")
-        buf = self.bufs[loc.device]
-        buf[loc.offset:loc.offset + raw.nbytes] = raw
+        # buffer bytes and spec must move together: a reader holding the lock
+        # must never see a new spec over stale bytes (or vice versa).
         with self._lock:
+            self.bufs[loc.device][loc.offset:loc.offset + raw.nbytes] = raw
             self.specs[(loc.device, loc.offset, loc.size)] = \
                 (value.shape, value.dtype, raw.nbytes)
 
     def read(self, loc: Loc) -> np.ndarray:
         with self._lock:
             shape, dtype, nbytes = self.specs[(loc.device, loc.offset, loc.size)]
-        raw = self.bufs[loc.device][loc.offset:loc.offset + nbytes]
+            raw = self.bufs[loc.device][loc.offset:loc.offset + nbytes].copy()
         return raw.view(dtype).reshape(shape)
 
     def drop(self, loc: Loc) -> None:
@@ -229,28 +237,59 @@ def run_in_order(tg: TaskGraph, res: BuildResult,
 class RunResult:
     outputs: dict[int, np.ndarray]
     makespan: float
-    busy: dict[int, float]               # per device: seconds doing work
+    busy: dict[int, float]               # per device: compute-engine seconds
     stall: dict[int, float]              # makespan - busy (per device)
+    transfer_time: dict[str, float]      # per DMA channel: total busy seconds
     offload_bytes: int
     reload_bytes: int
-    timeline: list[tuple[float, float, int, str]]  # (t0, t1, device, name)
+    timeline: list[tuple[float, float, int, str, str]]  # t0,t1,dev,engine,name
+    spans: dict[int, tuple[float, float]]  # mid -> (start, end) wall times
+
+
+class _Engine:
+    """One engine class of one device: a ready heap + its wakeup condition.
+
+    All engines share the scheduler's single state lock; each carries its own
+    condition variable so a completion event wakes only streams that gained
+    work.
+    """
+
+    __slots__ = ("device", "kind", "heap", "cond")
+
+    def __init__(self, device: int, kind: str, lock: threading.Lock) -> None:
+        self.device = device
+        self.kind = kind
+        self.heap: list[tuple[float, int, int]] = []   # (priority, seq, mid)
+        self.cond = threading.Condition(lock)
 
 
 class TurnipRuntime:
     """Event-driven nondeterministic executor (paper §5/§B).
 
     ``mode='nondet'`` — any ready vertex may launch on any free stream of its
-    device (the paper's design). ``mode='fixed'`` — the ablation: vertices
-    are issued in the compile-time simulation order (still asynchronous once
-    issued, matching the paper's "mostly removed" nondeterminism).
+    engine class (the paper's design); the *choice* among ready vertices is
+    delegated to a :class:`~repro.core.dispatch.DispatchPolicy` (``policy``:
+    ``random`` | ``fixed`` | ``critical-path`` | ``transfer-first`` or an
+    instance). ``mode='fixed'`` — the ablation: vertices are issued in the
+    compile-time simulation order with head-of-line blocking (still
+    asynchronous once issued, matching the paper's "mostly removed"
+    nondeterminism).
+
+    Each device runs ``n_streams`` compute streams (paper: 5 CUDA streams
+    per GPU) plus ``n_transfer_streams`` dedicated DMA streams for each of
+    h2d/d2h/d2d — so transfers never occupy, nor wait behind, a compute
+    stream.
 
     ``latency`` — optional ``fn(vertex) -> seconds`` injected as a sleep
-    before the op runs; used to emulate slow PCIe transfers on this CPU-only
-    container so the two modes actually diverge.
+    before the op runs; it occupies the vertex's stream for that long, which
+    emulates slow PCIe transfers on this CPU-only container so scheduling
+    choices have observable timing consequences.
     """
 
     def __init__(self, tg: TaskGraph, res: BuildResult, *,
-                 n_streams: int = 5, mode: str = "nondet",
+                 n_streams: int = 5, n_transfer_streams: int = 1,
+                 mode: str = "nondet",
+                 policy: str | DispatchPolicy | None = None,
                  latency: Callable[[MemVertex], float] | None = None,
                  backend: str = "slots",
                  capacities: dict[int, int] | None = None,
@@ -259,11 +298,12 @@ class TurnipRuntime:
             raise ValueError(mode)
         self.tg, self.res, self.mg = tg, res, res.memgraph
         self.n_streams = n_streams
+        self.n_transfer_streams = n_transfer_streams
         self.mode = mode
+        self.policy = get_policy(policy, seed=seed)
         self.latency = latency
         self.backend = backend
         self.capacities = capacities
-        self.rng = random.Random(seed)
 
     def run(self, inputs: dict[int, np.ndarray]) -> RunResult:
         mg = self.mg
@@ -274,39 +314,69 @@ class TurnipRuntime:
             mem: Any = ByteArena(self.capacities)
         else:
             mem = SlotTable()
+        pol = self.policy
+        pol.prepare(mg)
 
-        remaining = {m: len(mg.preds[m]) for m in mg.vertices}
-        ready: "queue.PriorityQueue[tuple[float, int]]" = queue.PriorityQueue()
+        verts = mg.vertices
+        total = len(verts)
+        devices = sorted({v.device for v in verts.values()})
         locks: dict[tuple[int, int], threading.Lock] = {}
-        for m, v in mg.vertices.items():
+        for v in verts.values():
             if v.lock_group is not None:
                 locks.setdefault(v.lock_group, threading.Lock())
-        state_lock = threading.Lock()
+
+        # ---- scheduler state (all guarded by `lock`) --------------------
+        lock = threading.Lock()
+        engines = {(d, k): _Engine(d, k, lock)
+                   for d in devices for k in ENGINE_KINDS}
+        remaining = {m: len(mg.preds[m]) for m in verts}
         n_done = 0
-        total = len(mg.vertices)
-        done_evt = threading.Event()
+        stop = False                       # success or error: workers exit
         errors: list[BaseException] = []
-        timeline: list[tuple[float, float, int, str]] = []
+        main_cond = threading.Condition(lock)
+        # fixed mode: strict issue order. `ready_fixed` holds dep-complete
+        # vertices keyed by seq; only the head (`next_seq`) may issue.
+        fixed_cond = threading.Condition(lock)
+        ready_fixed: dict[int, int] = {}
+        next_seq = 0
+
+        timeline: list[tuple[float, float, int, str, str]] = []
+        spans: dict[int, tuple[float, float]] = {}
         t0 = time.perf_counter()
 
-        def priority(m: int) -> float:
+        def make_ready(m: int) -> None:
+            """Lock held. Publish a dep-complete vertex to its engine."""
+            v = verts[m]
             if self.mode == "fixed":
-                return float(mg.vertices[m].seq)
-            return self.rng.random()   # any order: stress nondeterminism
+                ready_fixed[v.seq] = m
+                fixed_cond.notify_all()
+            else:
+                eng = engines[(v.device, engine_of(v))]
+                heapq.heappush(eng.heap, (pol.priority(m), v.seq, m))
+                eng.cond.notify()
+
+        def wake_all() -> None:
+            """Lock held. Wake every sleeper so it can observe `stop`."""
+            for eng in engines.values():
+                eng.cond.notify_all()
+            fixed_cond.notify_all()
+            main_cond.notify_all()
 
         def on_complete(m: int) -> None:
-            nonlocal n_done
-            with state_lock:
+            nonlocal n_done, stop
+            with lock:
                 n_done += 1
-                if n_done == total:
-                    done_evt.set()
                 for s in mg.succs[m]:
                     remaining[s] -= 1
                     if remaining[s] == 0:
-                        ready.put((priority(s), s))
+                        make_ready(s)
+                if n_done == total:
+                    stop = True
+                    wake_all()
 
-        def work(m: int) -> None:
-            v = mg.vertices[m]
+        def run_vertex(m: int) -> bool:
+            nonlocal stop
+            v = verts[m]
             t_start = time.perf_counter() - t0
             try:
                 if self.latency is not None:
@@ -319,75 +389,97 @@ class TurnipRuntime:
                         _exec_vertex(v, mg, self.tg, mem, host)
                 else:
                     _exec_vertex(v, mg, self.tg, mem, host)
-            except BaseException as e:   # surface in the caller
-                errors.append(e)
-                done_evt.set()
-                return
+            except BaseException as e:     # surface in the caller
+                with lock:
+                    errors.append(e)
+                    stop = True
+                    wake_all()
+                return False
             t_end = time.perf_counter() - t0
-            timeline.append((t_start, t_end, v.device, v.name or str(m)))
+            timeline.append((t_start, t_end, v.device, engine_of(v),
+                             v.name or str(m)))
+            spans[m] = (t_start, t_end)
             on_complete(m)
+            return True
 
-        # per-device stream pools (paper: 5 CUDA streams per GPU)
-        devices = sorted({v.device for v in mg.vertices.values()})
-        stop = threading.Event()
-        dev_queues: dict[int, "queue.Queue[int]"] = {d: queue.Queue()
-                                                     for d in devices}
+        def worker_nondet(eng: _Engine) -> None:
+            while True:
+                with lock:
+                    while not stop and not eng.heap:
+                        eng.cond.wait()
+                    if stop:
+                        return
+                    _, _, m = heapq.heappop(eng.heap)
+                if not run_vertex(m):
+                    return
 
-        def stream_worker(dev: int) -> None:
-            q = dev_queues[dev]
-            while not stop.is_set():
-                try:
-                    m = q.get(timeout=0.01)
-                except queue.Empty:
-                    continue
-                work(m)
+        def worker_fixed(dev: int, kind: str) -> None:
+            nonlocal next_seq
+            while True:
+                with lock:
+                    while True:
+                        if stop:
+                            return
+                        m = ready_fixed.get(next_seq)
+                        if (m is not None and verts[m].device == dev
+                                and engine_of(verts[m]) == kind):
+                            break
+                        fixed_cond.wait()
+                    del ready_fixed[next_seq]
+                    next_seq += 1
+                    # the new head may belong to any engine: wake everyone.
+                    fixed_cond.notify_all()
+                if not run_vertex(m):
+                    return
 
-        threads = [threading.Thread(target=stream_worker, args=(d,),
-                                    daemon=True)
-                   for d in devices for _ in range(self.n_streams)]
-        for th in threads:
-            th.start()
+        threads: list[threading.Thread] = []
+        for (d, k), eng in engines.items():
+            n = self.n_streams if k == COMPUTE else self.n_transfer_streams
+            for i in range(n):
+                if self.mode == "fixed":
+                    th = threading.Thread(target=worker_fixed, args=(d, k),
+                                          name=f"turnip-{k}{d}.{i}")
+                else:
+                    th = threading.Thread(target=worker_nondet, args=(eng,),
+                                          name=f"turnip-{k}{d}.{i}")
+                threads.append(th)
 
-        # the central event loop: move ready vertices to device queues.
-        # in 'fixed' mode, issue strictly in simulation order.
-        with state_lock:
+        with lock:
+            if total == 0:
+                stop = True
             for m, r in remaining.items():
                 if r == 0:
-                    ready.put((priority(m), m))
-        issued = 0
-        next_seq = 0
-        seq_of = {mg.vertices[m].seq: m for m in mg.vertices}
-        pending_fixed: dict[int, int] = {}
-        while not done_evt.is_set() and not errors:
-            try:
-                _, m = ready.get(timeout=0.01)
-            except queue.Empty:
-                continue
-            if self.mode == "fixed":
-                pending_fixed[mg.vertices[m].seq] = m
-                while next_seq in pending_fixed:
-                    mm = pending_fixed.pop(next_seq)
-                    dev_queues[mg.vertices[mm].device].put(mm)
-                    next_seq += 1
-                    issued += 1
-            else:
-                dev_queues[mg.vertices[m].device].put(m)
-                issued += 1
-        stop.set()
+                    make_ready(m)
         for th in threads:
-            th.join(timeout=2.0)
+            th.start()
+        try:
+            with lock:
+                while not stop:
+                    main_cond.wait()
+        finally:
+            # deterministic drain — also on KeyboardInterrupt: every stream
+            # observes `stop` and exits; no timeout, no leaked threads.
+            with lock:
+                stop = True
+                wake_all()
+            for th in threads:
+                th.join()
         if errors:
             raise errors[0]
 
         makespan = time.perf_counter() - t0
         busy = {d: 0.0 for d in devices}
+        chan = {k: 0.0 for k in TRANSFER_KINDS}
         by_dev: dict[int, list[tuple[float, float]]] = {d: [] for d in devices}
-        for (a, b, d, _name) in timeline:
-            by_dev[d].append((a, b))
-        for d, spans in by_dev.items():   # union of stream intervals
-            spans.sort()
+        for (a, b, d, eng_kind, _name) in timeline:
+            if eng_kind == COMPUTE:
+                by_dev[d].append((a, b))
+            else:
+                chan[eng_kind] += b - a
+        for d, intervals in by_dev.items():   # union of stream intervals
+            intervals.sort()
             cur_a, cur_b = None, None
-            for a, b in spans:
+            for a, b in intervals:
                 if cur_b is None or a > cur_b:
                     if cur_b is not None:
                         busy[d] += cur_b - cur_a
@@ -399,7 +491,7 @@ class TurnipRuntime:
         stall = {d: makespan - busy[d] for d in devices}
         return RunResult(
             outputs=_collect_outputs(self.tg, self.res, mem, host),
-            makespan=makespan, busy=busy, stall=stall,
+            makespan=makespan, busy=busy, stall=stall, transfer_time=chan,
             offload_bytes=host.offload_bytes, reload_bytes=host.reload_bytes,
-            timeline=sorted(timeline),
+            timeline=sorted(timeline), spans=spans,
         )

@@ -10,7 +10,10 @@ DMA engines. Durations come from a :class:`HardwareModel`.
 Two dispatch modes reproduce the paper's ablation (§8, "Fixed execution"):
 
 * ``nondet`` — the TURNIP event loop: any vertex whose deps are complete is
-  launched as soon as its engine frees up;
+  launched as soon as its engine frees up; *which* queued vertex an engine
+  picks is ranked by a :class:`~repro.core.dispatch.DispatchPolicy` — the
+  same vocabulary the threaded :class:`~repro.core.runtime.TurnipRuntime`
+  uses, so simulated and real-thread schedules are comparable;
 * ``fixed``  — vertices are *launched* strictly in the compile-time
   simulation order; a launched vertex still executes asynchronously on its
   engine, but no later vertex may launch before it (head-of-line blocking —
@@ -23,25 +26,13 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Iterable
 
+from .dispatch import (COMPUTE as _COMPUTE, D2D as _D2D, D2H as _D2H,
+                       DispatchPolicy, ENGINE_OF as _ENGINE_OF, H2D as _H2D,
+                       get_policy)
 from .memgraph import MemGraph, MemOp, MemVertex
 
 __all__ = ["HardwareModel", "SimResult", "simulate"]
-
-# engine kinds
-_COMPUTE, _H2D, _D2H, _D2D = "compute", "h2d", "d2h", "d2d"
-
-_ENGINE_OF = {
-    MemOp.INPUT: _H2D,       # weights/activations stream in from host store
-    MemOp.RELOAD: _H2D,
-    MemOp.OFFLOAD: _D2H,
-    MemOp.TRANSFER: _D2D,
-    MemOp.COMPUTE: _COMPUTE,
-    MemOp.ALLOC0: _COMPUTE,
-    MemOp.ADD_INTO: _COMPUTE,
-    MemOp.JOIN: _COMPUTE,
-}
 
 
 @dataclasses.dataclass
@@ -104,11 +95,23 @@ class SimResult:
 
 
 def simulate(mg: MemGraph, hw: HardwareModel | None = None, *,
-             mode: str = "nondet", record_timeline: bool = False) -> SimResult:
-    """Simulate one execution of ``mg`` under ``hw``; see module docstring."""
+             mode: str = "nondet",
+             policy: str | DispatchPolicy | None = "fixed",
+             record_timeline: bool = False) -> SimResult:
+    """Simulate one execution of ``mg`` under ``hw``; see module docstring.
+
+    ``policy`` ranks the ready vertices queued on each engine in ``nondet``
+    mode (default ``fixed`` = compile-order tie-break, the conservative
+    baseline); it is ignored in ``fixed`` mode, which bypasses the ready
+    queues entirely.
+    """
     hw = hw or HardwareModel()
     if mode not in ("nondet", "fixed"):
         raise ValueError(mode)
+    # cost-aware policies rank by *this* machine's durations (jitter
+    # included — it is deterministic per vertex), not the generic estimate.
+    pol = get_policy(policy, seed=hw.seed, cost_fn=hw.duration)
+    pol.prepare(mg)
 
     verts = mg.vertices
     devices = sorted({v.device for v in verts.values()})
@@ -151,7 +154,8 @@ def simulate(mg: MemGraph, hw: HardwareModel | None = None, *,
         if mode == "fixed":
             seq_ready[m] = now
             return
-        heapq.heappush(queue[engine_of(m)], (now, verts[m].seq, m))
+        heapq.heappush(queue[engine_of(m)],
+                       (pol.priority(m), verts[m].seq, m))
 
     def drain(now: float) -> None:
         if mode == "fixed":

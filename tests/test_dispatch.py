@@ -1,0 +1,180 @@
+"""Dispatch policies (paper §5/§8): every policy is a *timing* choice only —
+outputs must match direct dataflow evaluation on offload-heavy graphs in the
+threaded runtime and the simulator — and the event-driven scheduler must
+never issue a vertex before its dependencies complete."""
+import random as pyrandom
+
+import numpy as np
+import pytest
+
+from repro.core import (BuildConfig, MemgraphOOM, OpKind, TaskGraph,
+                        build_memgraph, get_policy)
+from repro.core.dispatch import (COMPUTE, POLICY_NAMES, TRANSFER_KINDS,
+                                 CriticalPathPolicy, TransferFirstPolicy,
+                                 critical_path_lengths, engine_of)
+from repro.core.runtime import TurnipRuntime, eval_taskgraph
+from repro.core.simulate import HardwareModel, simulate
+
+from helpers import fig3_taskgraph, int_inputs
+
+SHAPE = (4, 4)
+UNARY = ["relu", "transpose", "copy"]
+BINARY = ["add", "mul", "matmul", "matmul_t"]
+
+
+def random_taskgraph(rng: pyrandom.Random) -> TaskGraph:
+    """Seeded analogue of test_property_memgraph's hypothesis strategy, so
+    the policy sweep runs without the hypothesis dependency."""
+    n_dev = rng.randint(1, 3)
+    tg = TaskGraph()
+    tids = []
+    for i in range(rng.randint(1, 3)):
+        for d in range(n_dev):
+            tids.append(tg.add_input(d, SHAPE, name=f"in{d}.{i}"))
+    for i in range(rng.randint(6, 18)):
+        d = rng.randrange(n_dev)
+        if rng.random() < 0.5:
+            tids.append(tg.add_compute(d, (rng.choice(tids),), SHAPE,
+                                       op=rng.choice(UNARY), name=f"v{i}"))
+        else:
+            tids.append(tg.add_compute(
+                d, (rng.choice(tids), rng.choice(tids)), SHAPE,
+                op=rng.choice(BINARY), name=f"v{i}"))
+        if i % 7 == 6 and len(tids) >= 4:
+            parts = rng.sample(tids, k=min(len(tids), rng.randint(2, 4)))
+            tids.append(tg.add_reduce(d, parts, streaming=True, name=f"r{i}"))
+    return tg
+
+
+def offload_heavy_build(tg: TaskGraph, cap: int = 3):
+    """Tight per-device budget → the compiler must offload aggressively."""
+    try:
+        res = build_memgraph(tg, BuildConfig(capacity=cap,
+                                             size_fn=lambda v: 1))
+    except MemgraphOOM:
+        return None
+    return res
+
+
+def graph_inputs(tg: TaskGraph, seed: int):
+    rng = np.random.default_rng(seed)
+    return {t: rng.integers(-3, 4, v.out.shape).astype(np.float64)
+            for t, v in tg.vertices.items() if v.kind == OpKind.INPUT}
+
+
+@pytest.mark.parametrize("policy", POLICY_NAMES)
+def test_policy_order_independence_random_graphs(policy):
+    """Property: on random offload-heavy graphs, every dispatch policy (and
+    both issue modes) produces outputs identical to the dataflow oracle."""
+    n_checked = 0
+    for seed in range(8):
+        tg = random_taskgraph(pyrandom.Random(seed))
+        res = offload_heavy_build(tg)
+        if res is None:
+            continue
+        assert res.n_offloads + res.n_reloads > 0, "graph not offload-heavy"
+        inputs = graph_inputs(tg, seed)
+        ref = eval_taskgraph(tg, inputs)
+        for mode in ("nondet", "fixed"):
+            rr = TurnipRuntime(tg, res, mode=mode, policy=policy,
+                               seed=seed).run(inputs)
+            for k in ref:
+                np.testing.assert_array_equal(rr.outputs[k], ref[k])
+        n_checked += 1
+    assert n_checked >= 4   # the sweep must actually exercise builds
+
+
+@pytest.mark.parametrize("policy", POLICY_NAMES)
+def test_policy_matches_oracle_under_latency(policy):
+    """Injected transfer latency creates real compute/transfer races; the
+    outputs still cannot change."""
+    tg = fig3_taskgraph()
+    inputs = int_inputs(tg)
+    ref = eval_taskgraph(tg, inputs)
+    res = build_memgraph(tg, BuildConfig(capacity=3, size_fn=lambda v: 1))
+
+    def latency(v):
+        return 0.002 if engine_of(v) in TRANSFER_KINDS else 0.0005
+
+    rr = TurnipRuntime(tg, res, mode="nondet", policy=policy, seed=3,
+                       latency=latency).run(inputs)
+    for k in ref:
+        np.testing.assert_array_equal(rr.outputs[k], ref[k])
+
+
+def test_no_vertex_starts_before_deps_complete():
+    """Regression: the event-driven scheduler must never hand a vertex to a
+    stream before every dependency has finished executing, even when random
+    latencies shuffle completion order."""
+    rng = pyrandom.Random(7)
+    tg = random_taskgraph(rng)
+    res = offload_heavy_build(tg, cap=4)
+    assert res is not None
+    inputs = graph_inputs(tg, 7)
+
+    def latency(v):
+        return pyrandom.Random(v.mid).uniform(0.0, 0.003)
+
+    rr = TurnipRuntime(tg, res, mode="nondet", policy="random", seed=11,
+                       latency=latency).run(inputs)
+    mg = res.memgraph
+    assert set(rr.spans) == set(mg.vertices)
+    for m, (start, _end) in rr.spans.items():
+        for p in mg.preds[m]:
+            assert rr.spans[p][1] <= start, \
+                f"vertex {m} started before dependency {p} completed"
+
+
+def test_simulator_accepts_policies():
+    """Simulated makespan is finite, deterministic, and complete for every
+    policy — the shared scheduling vocabulary."""
+    tg = fig3_taskgraph()
+    res = build_memgraph(tg, BuildConfig(capacity=3, size_fn=lambda v: 1))
+    hw = HardwareModel(transfer_jitter=0.5, seed=2)
+    for policy in POLICY_NAMES:
+        a = simulate(res.memgraph, hw, policy=policy)
+        b = simulate(res.memgraph, hw, policy=policy)
+        assert a.n_vertices == len(res.memgraph)
+        assert a.makespan == b.makespan > 0
+
+
+def test_critical_path_priorities_decrease_downstream():
+    """cp(pred) >= cp(succ) + cost(succ) ≥ cp(succ): upstream vertices carry
+    longer paths, so they rank at least as urgent as their successors."""
+    tg = fig3_taskgraph()
+    res = build_memgraph(tg, BuildConfig(capacity=3, size_fn=lambda v: 1))
+    mg = res.memgraph
+    cp = critical_path_lengths(mg)
+    for m in mg.vertices:
+        for s in mg.succs[m]:
+            assert cp[m] >= cp[s]
+    pol = CriticalPathPolicy()
+    pol.prepare(mg)
+    ranked = pol.order(list(mg.vertices))
+    assert cp[ranked[0]] == max(cp.values())
+
+
+def test_transfer_first_ranks_dma_work_ahead():
+    """DMA vertices and their direct producers outrank compute that feeds no
+    transfer — the ordering that actually changes compute-queue ranking
+    (transfers themselves never compete with compute for a stream)."""
+    tg = fig3_taskgraph()
+    res = build_memgraph(tg, BuildConfig(capacity=3, size_fn=lambda v: 1))
+    mg = res.memgraph
+    pol = TransferFirstPolicy()
+    pol.prepare(mg)
+    boosted = [m for m, v in mg.vertices.items()
+               if engine_of(v) in TRANSFER_KINDS
+               or any(engine_of(mg.vertices[s]) in TRANSFER_KINDS
+                      for s in mg.succs[m])]
+    plain = [m for m in mg.vertices if m not in set(boosted)]
+    assert boosted and plain
+    assert max(pol.priority(m) for m in boosted) < \
+        min(pol.priority(m) for m in plain)
+
+
+def test_get_policy_rejects_unknown():
+    with pytest.raises(ValueError):
+        get_policy("steepest-descent")
+    assert get_policy(None).name == "random"
+    assert get_policy(get_policy("fixed")).name == "fixed"

@@ -7,6 +7,8 @@ import pytest
 
 rng = np.random.default_rng(42)
 
+pytestmark = pytest.mark.slow
+
 
 def _tol(dtype):
     return dict(rtol=3e-2, atol=3e-2) if dtype == "bfloat16" \

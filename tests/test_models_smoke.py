@@ -9,6 +9,8 @@ import pytest
 from repro.configs import ASSIGNED, get_arch, reduced
 from repro.models import build_model
 
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(0)
 
 

@@ -6,6 +6,8 @@ import random as pyrandom
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import HealthCheck, given, settings, strategies as st
 
 from repro.core import (BuildConfig, MemgraphOOM, OpKind, TaskGraph,

@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV (scaffold contract). Paper artifacts:
 * ablation — fixed-execution slowdown (§8) + victim (§C) + dispatch policies
 * threaded — nondet-vs-fixed on real threads (condition-variable runtime)
 * memgraph_build — compiler throughput/dependency statistics
+* serving — continuous-batching decode with KV offload + reload policies
 * roofline — three-term model per dry-run cell (skipped when no artifacts)
 
 ``QUICK=0`` env var runs the full sweeps; default is the quick profile so
@@ -23,13 +24,14 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 def main() -> None:
     quick = os.environ.get("QUICK", "1") != "0"
     from . import (fig10_prefill, fig11_lora, stall_ablation,
-                   threaded_runtime, memgraph_build)
+                   threaded_runtime, memgraph_build, serving)
     print("name,us_per_call,derived")
     fig10_prefill.run(quick=quick)
     fig11_lora.run(quick=quick)
     stall_ablation.run(quick=quick)
     threaded_runtime.run(quick=quick)
     memgraph_build.run(quick=quick)
+    serving.run(quick=quick)
     # roofline (requires dry-run artifacts)
     art = "experiments/dryrun_v4"
     if os.path.isdir(art) and any(f.endswith(".json")

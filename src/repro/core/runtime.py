@@ -50,27 +50,62 @@ __all__ = ["HostStore", "SlotTable", "ByteArena", "run_in_order",
            "TurnipRuntime", "RunResult"]
 
 
+def _nbytes(value) -> int:
+    """Total bytes of an ndarray or a flat dict of ndarrays (a KV block)."""
+    if isinstance(value, dict):
+        return sum(v.nbytes for v in value.values())
+    return value.nbytes
+
+
 class HostStore:
-    """Host (CPU-RAM) storage: graph inputs + offloaded tensors."""
+    """Host (CPU-RAM) storage: graph inputs + offloaded tensors.
+
+    Keys are opaque hashables: the MEMGRAPH runtime offloads under its
+    OFFLOAD vertex mids, and the serving engine (:mod:`repro.serve`) uses
+    the same arena class with ``(request, block)`` keys (pass one store to
+    both to share a single pinned pool and traffic counters).
+    ``offload_bytes``/``reload_bytes`` count cumulative d2h/h2d traffic;
+    ``resident_bytes`` is current occupancy."""
 
     def __init__(self, inputs: dict[int, np.ndarray]) -> None:
         self.inputs = {t: np.asarray(v) for t, v in inputs.items()}
-        self.offloaded: dict[int, np.ndarray] = {}
+        self.offloaded: dict[Any, Any] = {}
         self.offload_bytes = 0
         self.reload_bytes = 0
+        self.resident_bytes = 0
         self._lock = threading.Lock()
 
-    def put_offload(self, off_mid: int, value: np.ndarray) -> None:
+    def put_offload(self, key, value) -> None:
+        """Store an offloaded tensor (or flat dict of tensors — a serving
+        KV block) under ``key``; counts d2h traffic + occupancy."""
+        n = _nbytes(value)
         with self._lock:
-            self.offloaded[off_mid] = value
-            self.offload_bytes += value.nbytes
+            prev = self.offloaded.get(key)
+            if prev is not None:
+                self.resident_bytes -= _nbytes(prev)
+            self.offloaded[key] = value
+            self.offload_bytes += n
+            self.resident_bytes += n
+
+    def get_offload(self, key):
+        """Fetch an offloaded value for reload; counts h2d traffic."""
+        with self._lock:
+            val = self.offloaded[key]
+            self.reload_bytes += _nbytes(val)
+        return val
+
+    def pop_offload(self, key) -> None:
+        """Free a host copy (no traffic: dead data is simply released)."""
+        with self._lock:
+            val = self.offloaded.pop(key, None)
+            if val is not None:
+                self.resident_bytes -= _nbytes(val)
 
     def get_for_reload(self, v: MemVertex) -> np.ndarray:
+        if v.operands:
+            return self.get_offload(v.operands[0])
         with self._lock:
-            if v.operands:
-                val = self.offloaded[v.operands[0]]
-            else:
-                val = self.inputs[v.src_tid]   # immutable input store
+            val = self.inputs[v.src_tid]       # immutable input store
             self.reload_bytes += val.nbytes
         return val
 
@@ -134,12 +169,25 @@ class ByteArena:
 
     def read(self, loc: Loc) -> np.ndarray:
         with self._lock:
-            shape, dtype, nbytes = self.specs[(loc.device, loc.offset, loc.size)]
+            try:
+                spec = self.specs[(loc.device, loc.offset, loc.size)]
+            except KeyError:
+                raise RaceError(
+                    f"read of unwritten/dropped extent {loc} — racy order "
+                    f"or bad memory plan") from None
+            shape, dtype, nbytes = spec
             raw = self.bufs[loc.device][loc.offset:loc.offset + nbytes].copy()
         return raw.view(dtype).reshape(shape)
 
     def drop(self, loc: Loc) -> None:
-        pass
+        # Audit fix: this was a silent no-op, so a dropped extent stayed
+        # readable and a use-after-free in a plan could never surface under
+        # this backend. Invalidating the spec makes ByteArena match
+        # SlotTable's read-validation contract (reads of dead extents raise
+        # RaceError); the bytes themselves stay in the arena, as on real
+        # hardware.
+        with self._lock:
+            self.specs.pop((loc.device, loc.offset, loc.size), None)
 
 
 # --------------------------------------------------------------------------

@@ -322,12 +322,75 @@ class LM:
             return cache
         raise ValueError(cfg.family)
 
+    def prefill(self, params: dict, tokens: Array, lengths: Array
+                ) -> tuple[Array, dict]:
+        """Batched prompt ingestion: ONE forward over [B, S] instead of
+        token-by-token teacher forcing. Returns ``(last_logits, kv)`` where
+        ``last_logits`` [B, padded_vocab] are the logits at each row's last
+        prompt token (position ``lengths - 1``) and ``kv``'s leaves are
+        stacked [L, B, S, ...] in ``init_cache`` layout over the token
+        slice [0, S) — the serving engine scatters them into its paged
+        cache. Rows may be ragged: positions past a row's length produce
+        junk K/V that later per-row ``cache_len`` masking never attends.
+
+        Attention families only (dense / moe): recurrent families carry
+        per-step state, so their prompt pass *is* the decode loop."""
+        cfg = self.cfg
+        if cfg.family not in ("dense", "moe"):
+            raise ValueError("prefill supports attention families only "
+                             f"(got {cfg.family!r})")
+        B, S = tokens.shape
+        h = jnp.take(params["embed"], tokens, axis=0)
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+        def body(hh, lp):
+            x = _norm(cfg, lp, "ln1", hh)
+            pa = lp["attn"]
+            q = (x @ pa["wq"] + pa.get("bq", 0)).reshape(
+                B, S, cfg.n_heads, cfg.d_head)
+            k = (x @ pa["wk"] + pa.get("bk", 0)).reshape(
+                B, S, cfg.n_kv_heads, cfg.d_head)
+            v = (x @ pa["wv"] + pa.get("bv", 0)).reshape(
+                B, S, cfg.n_kv_heads, cfg.d_head)
+            if cfg.rope_theta:
+                q = L.rope(q, positions, cfg.rope_theta)
+                k = L.rope(k, positions, cfg.rope_theta)
+            o = L.blockwise_attention(q, k, v, causal=True,
+                                      block_kv=self.block_kv)
+            hh = hh + o.reshape(B, S, cfg.n_heads * cfg.d_head) @ pa["wo"]
+            x = _norm(cfg, lp, "ln2", hh)
+            if "moe" in lp:
+                y, _ = L.moe_block(lp["moe"], x, n_experts=cfg.n_experts,
+                                   top_k=cfg.top_k, capacity_factor=None)
+            else:
+                y = (L.swiglu_mlp(lp["mlp"], x) if cfg.mlp == "swiglu"
+                     else L.gelu_mlp(lp["mlp"], x))
+            return hh + y, (k, v)
+
+        h, (ks, vs) = jax.lax.scan(body, h, params["layers"])
+        h = _norm(cfg, params, "ln_f", h)
+        last = h[jnp.arange(B), jnp.maximum(lengths - 1, 0)]      # [B, D]
+        logits = last @ params["unembed"]
+        if self.kv_cache_dtype == "int8":
+            kq, ksc = _quant_int8(ks)
+            vq, vsc = _quant_int8(vs)
+            kv = {"k": kq, "v": vq, "k_scale": ksc, "v_scale": vsc}
+        else:
+            kv = {"k": ks, "v": vs}
+        return logits, kv
+
     def _attn_decode_block(self, p: dict, h: Array, kc: Array, vc: Array,
-                           cache_len: Array, adapter_g: Array | None = None,
+                           lens: Array, adapter_g: Array | None = None,
                            k_sc: Array | None = None,
-                           v_sc: Array | None = None):
+                           v_sc: Array | None = None,
+                           active: Array | None = None):
+        """One-token attention + MLP. ``lens`` is the per-row cache length
+        [B] (each row writes this token at its own position — a serving
+        batch is ragged). ``active`` [B] bool: rows that are False leave
+        their cache extent untouched (inert padding / swapped-out slots)."""
         cfg = self.cfg
         B = h.shape[0]
+        rows = jnp.arange(B)
         x = _norm(cfg, p, "ln1", h)
         if adapter_g is not None:
             x = x * adapter_g
@@ -338,18 +401,29 @@ class LM:
             B, 1, cfg.n_kv_heads, cfg.d_head)
         v = (x @ pa["wv"] + pa.get("bv", 0)).reshape(
             B, 1, cfg.n_kv_heads, cfg.d_head)
-        pos = jnp.full((B, 1), cache_len, jnp.int32)
+        pos = lens[:, None]
         if cfg.rope_theta:
             q = L.rope(q, pos, cfg.rope_theta)
             k = L.rope(k, pos, cfg.rope_theta)
+
+        def put(buf: Array, upd: Array) -> Array:
+            """Scatter ``upd`` [B, 1, ...] at each row's own position;
+            inert rows rewrite their previous cell (a no-op by value)."""
+            u = upd[:, 0]
+            if active is not None:
+                old = buf[rows, lens]
+                u = jnp.where(
+                    active.reshape((B,) + (1,) * (u.ndim - 1)), u, old)
+            return buf.at[rows, lens].set(u)
+
         if k_sc is not None:
             kq, ks = _quant_int8(k)
             vq, vs = _quant_int8(v)
-            kc = jax.lax.dynamic_update_slice(kc, kq, (0, cache_len, 0, 0))
-            vc = jax.lax.dynamic_update_slice(vc, vq, (0, cache_len, 0, 0))
-            k_sc = jax.lax.dynamic_update_slice(k_sc, ks, (0, cache_len, 0))
-            v_sc = jax.lax.dynamic_update_slice(v_sc, vs, (0, cache_len, 0))
-            o = L.decode_attention_q8(q, kc, vc, k_sc, v_sc, cache_len + 1)
+            kc = put(kc, kq)
+            vc = put(vc, vq)
+            k_sc = put(k_sc, ks)
+            v_sc = put(v_sc, vs)
+            o = L.decode_attention_q8(q, kc, vc, k_sc, v_sc, lens + 1)
             h = h + o.reshape(B, 1, cfg.n_heads * cfg.d_head) @ pa["wo"]
             x = _norm(cfg, p, "ln2", h)
             if "moe" in p:
@@ -359,9 +433,9 @@ class LM:
                 y = (L.swiglu_mlp(p["mlp"], x) if cfg.mlp == "swiglu"
                      else L.gelu_mlp(p["mlp"], x))
             return h + y, kc, vc, k_sc, v_sc
-        kc = jax.lax.dynamic_update_slice(kc, k, (0, cache_len, 0, 0))
-        vc = jax.lax.dynamic_update_slice(vc, v, (0, cache_len, 0, 0))
-        o = L.decode_attention(q, kc, vc, cache_len + 1)
+        kc = put(kc, k)
+        vc = put(vc, v)
+        o = L.decode_attention(q, kc, vc, lens + 1)
         h = h + o.reshape(B, 1, cfg.n_heads * cfg.d_head) @ pa["wo"]
         x = _norm(cfg, p, "ln2", h)
         if "moe" in p:
@@ -373,9 +447,24 @@ class LM:
         return h + y, kc, vc
 
     def decode_step(self, params: dict, cache: dict, token: Array,
-                    cache_len: Array) -> tuple[Array, dict]:
-        """One-token decode. token: [B, 1] → logits [B, padded_vocab]."""
+                    cache_len: Array, active: Array | None = None
+                    ) -> tuple[Array, dict]:
+        """One-token decode. token: [B, 1] → logits [B, padded_vocab].
+
+        ``cache_len`` may be a scalar (all rows at the same depth — the
+        simple generate loop) or per-row [B] (a ragged continuous-batching
+        step). ``active`` is an optional [B] bool mask: rows that are False
+        write nothing into the cache, so padding / swapped-out slots cannot
+        perturb live rows; their logits are garbage and the caller must
+        ignore them. The mask is only supported for the attention families
+        — recurrent state (rwkv / zamba SSM) advances unconditionally."""
         cfg = self.cfg
+        B = token.shape[0]
+        lens = jnp.broadcast_to(
+            jnp.asarray(cache_len, jnp.int32).reshape(-1), (B,))
+        if active is not None and cfg.family not in ("dense", "moe"):
+            raise ValueError(
+                "active-row masking requires a KV-cache family (dense/moe)")
         h = jnp.take(params["embed"], token, axis=0)       # [B,1,D]
 
         if cfg.family in ("dense", "moe"):
@@ -384,7 +473,8 @@ class LM:
                     hh = carry
                     lp, kc, vc, ksc, vsc = xs
                     hh, kc, vc, ksc, vsc = self._attn_decode_block(
-                        lp, hh, kc, vc, cache_len, k_sc=ksc, v_sc=vsc)
+                        lp, hh, kc, vc, lens, k_sc=ksc, v_sc=vsc,
+                        active=active)
                     return hh, (kc, vc, ksc, vsc)
                 h, (ks, vs, kss, vss) = jax.lax.scan(
                     body8, h, (params["layers"], cache["k"], cache["v"],
@@ -395,7 +485,7 @@ class LM:
                     hh = carry
                     lp, kc, vc = xs
                     hh, kc, vc = self._attn_decode_block(lp, hh, kc, vc,
-                                                         cache_len)
+                                                         lens, active=active)
                     return hh, (kc, vc)
                 h, (ks, vs) = jax.lax.scan(
                     body, h, (params["layers"], cache["k"], cache["v"]))
@@ -429,7 +519,7 @@ class LM:
                 hh = carry
                 gp, adapters, kc, vc, sst, cst = xs
                 hh, kc, vc = self._attn_decode_block(
-                    params["shared"], hh, kc, vc, cache_len,
+                    params["shared"], hh, kc, vc, lens,
                     adapter_g=adapters)
                 hh, (sst2, cst2) = jax.lax.scan(
                     mamba_scan_body, hh, (gp, sst, cst))

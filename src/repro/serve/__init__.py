@@ -1,0 +1,9 @@
+"""Online serving: continuous batching + block-paged KV-cache CPU offload."""
+from .engine import (Engine, ServeConfig, Request, ServeStats,
+                     ReloadPolicy, RELOAD_POLICY_NAMES, get_reload_policy,
+                     naive_generate)
+from .kv_cache import PagedKVCache
+
+__all__ = ["Engine", "ServeConfig", "Request", "ServeStats", "ReloadPolicy",
+           "RELOAD_POLICY_NAMES", "get_reload_policy", "naive_generate",
+           "PagedKVCache"]

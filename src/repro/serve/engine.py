@@ -1,90 +1,757 @@
-"""Batched serving engine: prefill → decode with bucketed static shapes.
+"""Continuous-batching serving engine with block-paged KV-cache CPU offload.
 
-The paper's limitation (§9) — TURNIP needs a static graph, so recursive
-generation requires pre-compiled plans — becomes systematic here: decode
-steps are jitted per (batch-bucket, cache-bucket) and requests are batched
-into the smallest bucket that fits (the "naive solution" the paper sketches,
-made production-shaped). The KV cache is preallocated at the bucket size, so
-serving does no allocation per token — the same static-memory discipline as
-the MEMGRAPH runtime.
+The paper's §9 limitation — TURNIP executes *static* graphs, so recursive
+generation must run over pre-compiled plans — becomes the design here
+rather than a caveat:
+
+* **Request queue → bucketed static batches.** Requests are submitted to a
+  queue and admitted into fixed batch *slots*; decode is jitted once per
+  batch bucket, so every step executes the same compiled program over
+  ``[bucket, 1]`` tokens with per-row cache positions. Rows at different
+  depths share one plan (continuous batching); slots without a live request
+  are *inert* — ``decode_step``'s ``active`` mask keeps them from writing
+  to the cache, and their logits are never sampled.
+* **Real batched prefill.** A prompt enters the cache through ONE forward
+  (:meth:`~repro.models.lm.LM.prefill`) instead of token-by-token teacher
+  forcing; the request's first token samples from the prefill logits.
+* **MEMGRAPH memory discipline.** The KV cache is a
+  :class:`~repro.serve.kv_cache.PagedKVCache`: block-granular static
+  extents over a preallocated cache. Cold blocks are *mirrored* to the
+  TURNIP :class:`~repro.core.runtime.HostStore` on a dedicated d2h stream,
+  and swapped-out requests are restored on an h2d stream — transfers run on
+  their own engine classes (:data:`~repro.core.dispatch.D2H` /
+  :data:`~repro.core.dispatch.H2D`) and overlap under decode, so steps
+  never block on a transfer (paper §5). The main loop owns all cache
+  mutation; DMA threads only snapshot blocks and post completion events.
+* **Nondeterministic reload order.** Which pending transfer a DMA stream
+  services next is a :class:`~repro.core.dispatch.DispatchPolicy` decision:
+  ``fixed`` replays block-creation order (the compile-time-order ablation —
+  blocks of concurrently decoding requests interleave, so no request
+  resumes until nearly all transfers finish: §8's head-of-line pathology),
+  while ``critical-path`` completes the request that can resume soonest.
+
+Sampling uses a per-``(seed, request, position)`` key schedule, so a
+request's tokens are independent of batch composition, padding, offload,
+and reload order — :func:`naive_generate` is the unbatched oracle any
+engine configuration must match.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+import random
+import threading
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["ServeConfig", "Engine"]
+from ..core.dispatch import D2H, H2D, DispatchPolicy
+from ..core.runtime import HostStore
+from .kv_cache import PagedKVCache
+
+__all__ = ["ServeConfig", "Engine", "Request", "ServeStats",
+           "ReloadPolicy", "RELOAD_POLICY_NAMES", "get_reload_policy",
+           "naive_generate"]
+
+# request lifecycle
+QUEUED, RUNNING, SWAPPING, SWAPPED, RELOADING, DONE = (
+    "queued", "running", "swapping-out", "swapped", "reloading", "done")
 
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
     max_len: int = 512
+    # the cache grows to the smallest bucket covering demand and stays
+    # there (no shrink/compaction): after a burst, decode keeps running
+    # the largest-bucket plan with inert rows masked
     batch_buckets: tuple[int, ...] = (1, 4, 8)
     temperature: float = 0.0          # 0 = greedy
+    block_size: int = 32              # tokens per KV block (offload extent)
+    # ---- offload / swapping ------------------------------------------
+    offload: bool = False             # mirror cold KV blocks to host RAM
+    hot_window: int = 32              # trailing tokens that never offload
+    offload_fraction: float = 1.0     # cap: mirrored fraction of a request
+    preempt_every: int = 0            # decode quantum before a running
+    #                                   request may be swapped out for a
+    #                                   waiter (0 = never preempt)
+    reload_policy: str = "critical-path"   # fixed|random|critical-path
+    # simulated PCIe (the container has no accelerator; wire time is slept
+    # on the DMA thread, exactly like TurnipRuntime's `latency` injection)
+    h2d_bw: float = 12e9
+    d2h_bw: float = 12e9
+    dma_latency: float = 10e-6
+    seed: int = 0
 
 
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int
+    out: list[int] = dataclasses.field(default_factory=list)
+    state: str = QUEUED
+    slot: int = -1
+    pos: int = 0                      # tokens resident in the cache
+    last: int = 0                     # last sampled token (next decode feed)
+    quantum: int = 0                  # decode steps since (re)admission
+    mirrored: set[int] = dataclasses.field(default_factory=set)
+    inflight: set[int] = dataclasses.field(default_factory=set)
+    pending_reload: set[int] = dataclasses.field(default_factory=set)
+    reload_data: dict[int, dict] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class ServeStats:
+    tokens: int = 0                   # all emitted (incl. prefill-sampled)
+    decode_tokens: int = 0            # emitted by decode steps only
+    prefill_tokens: int = 0
+    decode_steps: int = 0
+    decode_time: float = 0.0
+    prefill_time: float = 0.0
+    stall_time: float = 0.0           # wall time with no resident row to step
+    swaps: int = 0
+    offload_bytes: int = 0
+    reload_bytes: int = 0
+    kv_bytes_written: int = 0
+
+    @property
+    def offloaded_fraction(self) -> float:
+        return self.offload_bytes / max(self.kv_bytes_written, 1)
+
+    @property
+    def decode_tok_s(self) -> float:
+        """Decode-step throughput: first tokens (sampled from prefill
+        logits during prefill_time) are excluded from the numerator."""
+        return self.decode_tokens / max(self.decode_time + self.stall_time,
+                                        1e-9)
+
+
+# --------------------------------------------------------------------------
+# DMA transfers + reload-order policies
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class _Transfer:
+    kind: str                         # dispatch.D2H | dispatch.H2D
+    rid: int
+    blk: int
+    seq: int                          # block-creation order (see below)
+    nbytes: int
+
+
+class ReloadPolicy(DispatchPolicy):
+    """DispatchPolicy over pending serve transfers.
+
+    Unlike the MEMGRAPH policies (static priorities per graph), urgency
+    here is *dynamic*: it depends on which requests are currently blocked,
+    so ``priority`` is evaluated at pop time under the engine lock."""
+
+    name = "serve-base"
+
+    def prepare(self, engine) -> None:              # type: ignore[override]
+        self.engine = engine
+
+    def priority(self, tr: _Transfer) -> float:     # type: ignore[override]
+        raise NotImplementedError
+
+    def pick(self, pending: list[_Transfer]) -> _Transfer:
+        best = min(range(len(pending)),
+                   key=lambda i: (self.priority(pending[i]), pending[i].seq))
+        return pending.pop(best)
+
+
+class FixedReloadPolicy(ReloadPolicy):
+    """Strict block-creation order — the predetermined schedule.
+
+    Block seq numbers are assigned as blocks turn cold, which happens in
+    lockstep across concurrently decoding slots, so two swapped requests'
+    reloads interleave: neither resumes until nearly every transfer is done
+    — the head-of-line pathology of the paper's fixed mode (§8)."""
+
+    name = "fixed"
+
+    def priority(self, tr: _Transfer) -> float:
+        return float(tr.seq)
+
+
+class RandomReloadPolicy(ReloadPolicy):
+    """Seeded uniform-random priority (the any-order-must-work stance)."""
+
+    name = "random"
+
+    def __init__(self, seed: int | None = None) -> None:
+        self.seed = random.randrange(2**31) if seed is None else seed
+
+    def priority(self, tr: _Transfer) -> float:
+        # integer-only mixing: builtin hash() of strings is salted per
+        # process (PYTHONHASHSEED), which would defeat the seed
+        ident = tr.rid * 2654435761 + tr.blk * 40503 + (tr.kind == H2D)
+        return random.Random(
+            (self.seed * 1000003 + 0x9E3779B9) ^ ident).random()
+
+
+class CriticalPathReloadPolicy(ReloadPolicy):
+    """Complete the request that can resume soonest: fewest outstanding
+    transfers first, most remaining decode work as tie-break — the serving
+    analogue of longest-path-first list scheduling."""
+
+    name = "critical-path"
+
+    def priority(self, tr: _Transfer) -> float:
+        req = self.engine.reqs.get(tr.rid)
+        if req is None:                    # released mid-flight: drain first
+            return -1e12
+        remaining_work = req.max_new - len(req.out)
+        return len(req.inflight) * 1e6 - remaining_work
+
+
+RELOAD_POLICY_NAMES = ("fixed", "random", "critical-path")
+
+
+def get_reload_policy(policy: str | ReloadPolicy | None, *,
+                      seed: int | None = None) -> ReloadPolicy:
+    if isinstance(policy, ReloadPolicy):
+        return policy
+    if policy is None or policy == "critical-path":
+        return CriticalPathReloadPolicy()
+    if policy == "fixed":
+        return FixedReloadPolicy()
+    if policy == "random":
+        return RandomReloadPolicy(seed)
+    raise ValueError(f"unknown reload policy {policy!r}; "
+                     f"expected one of {RELOAD_POLICY_NAMES}")
+
+
+class _DmaStream(threading.Thread):
+    """A dedicated transfer engine for one DMA direction.
+
+    Pops the best-ranked pending transfer (policy choice = the runtime's
+    nondeterministic dispatch), sleeps the simulated wire time *off* the
+    engine lock so transfers overlap under decode, then runs the service
+    callback (a short memcpy / completion event under the lock)."""
+
+    def __init__(self, kind: str, bw: float, latency: float,
+                 policy: ReloadPolicy, service, lock: threading.Lock) -> None:
+        super().__init__(name=f"serve-dma-{kind}")
+        self.kind = kind
+        self.bw = bw
+        self.latency = latency
+        self.policy = policy
+        self.service = service
+        self.pending: list[_Transfer] = []
+        self.cond = threading.Condition(lock)
+        self.stopped = False
+        self.error: BaseException | None = None
+
+    def submit(self, tr: _Transfer) -> None:
+        """Engine lock held."""
+        self.pending.append(tr)
+        self.cond.notify_all()
+
+    def shutdown(self) -> None:
+        """Engine lock held. Unserviced transfers are abandoned."""
+        self.stopped = True
+        self.pending.clear()
+        self.cond.notify_all()
+
+    def run(self) -> None:
+        try:
+            while True:
+                with self.cond:
+                    while not self.pending and not self.stopped:
+                        self.cond.wait()
+                    if self.stopped:
+                        return
+                    tr = self.policy.pick(self.pending)
+                wire = self.latency + tr.nbytes / self.bw
+                time.sleep(wire)
+                self.service(tr)
+        except BaseException as e:       # surface in the engine loop — a
+            with self.cond:              # silently dead stream would wedge
+                self.error = e           # every waiter forever
+                self.stopped = True
+                self.cond.notify_all()
+
+
+# --------------------------------------------------------------------------
+# sampling — shared by the engine and the unbatched oracle
+# --------------------------------------------------------------------------
+def _sample_token(row_logits: np.ndarray, *, seed: int, rid: int, pos: int,
+                  temperature: float, vocab_size: int) -> int:
+    """Sample the token at absolute position ``pos`` of request ``rid``.
+
+    The key schedule folds (seed, rid, pos), so a request's randomness is
+    independent of batch composition and scheduling. Vocab padding is
+    masked out (the padded tail of ``padded_vocab`` must be unsampleable).
+    At temperature > 0 this is an eager per-token jax call — a deliberate
+    correctness-first tradeoff (the engine and the oracle share this exact
+    code path); a throughput-focused engine would vmap the fold_in +
+    categorical over rows inside the jitted step."""
+    row = row_logits[:vocab_size].astype(np.float32)
+    if temperature <= 0:
+        return int(np.argmax(row))
+    key = jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(seed), rid), pos)
+    return int(jax.random.categorical(key, jnp.asarray(row) / temperature))
+
+
+# --------------------------------------------------------------------------
+# the engine
+# --------------------------------------------------------------------------
 class Engine:
-    def __init__(self, model, params, cfg: ServeConfig = ServeConfig()):
+    """Continuous-batching decode engine over a block-paged KV cache."""
+
+    def __init__(self, model, params, cfg: ServeConfig = ServeConfig(), *,
+                 host: HostStore | None = None):
+        """``host``: pass a runtime's :class:`HostStore` to share one
+        pinned host pool (and its traffic counters) with it; by default
+        the engine owns a private arena."""
+        if model.cfg.family not in ("dense", "moe"):
+            raise ValueError("serving engine requires a KV-cache family "
+                             f"(dense/moe), got {model.cfg.family!r}")
+        if cfg.max_len % cfg.block_size:
+            raise ValueError("max_len must be a multiple of block_size")
         self.model = model
         self.params = params
         self.cfg = cfg
-        self._steps: dict[int, Any] = {}
+        self.host = host if host is not None else HostStore({})
+        self.reqs: dict[int, Request] = {}
+        self._live: set[int] = set()                # rids not yet DONE
+        self.stats = ServeStats()
+        self.kv: PagedKVCache | None = None
+        # single jit wrappers: jax.jit retraces per input shape, so one
+        # wrapper covers every batch bucket / prompt pad length
+        self._step = jax.jit(model.decode_step)
+        self._prefill = jax.jit(model.prefill)
+        self._next_rid = 0
+        self._queue: list[int] = []                 # QUEUED rids, FIFO
+        self._swapped: list[int] = []               # SWAPPED rids, FIFO
+        self._slots: list[int | None] = []
+        self._events: list[tuple] = []              # completions to apply
+        self._block_seq: dict[tuple[int, int], int] = {}
+        self._seq_counter = 0
+        self._seed = cfg.seed
+        self._lock = threading.Lock()
+        self._wake = threading.Condition(self._lock)
+        self._d2h: _DmaStream | None = None
+        self._h2d: _DmaStream | None = None
 
-    def _bucket(self, n: int) -> int:
+    # ------------------------------------------------------------- public
+    def submit(self, prompt, max_new: int = 32) -> int:
+        """Enqueue a request; returns its id. Tokens emitted will be
+        ``min(max_new, max_len - len(prompt) + 1)`` — the first token
+        samples from the prefill logits, so a prompt that exactly fills the
+        window still yields one token."""
+        prompt = [int(t) for t in prompt]
+        if not prompt:
+            raise ValueError("empty prompt")
+        if max_new < 1:
+            raise ValueError("max_new must be >= 1 (the first token always "
+                             "samples from the prefill logits)")
+        if len(prompt) > self.cfg.max_len:
+            raise ValueError(f"prompt of {len(prompt)} tokens exceeds "
+                             f"max_len={self.cfg.max_len}")
+        with self._lock:        # online use submits while run() is draining
+            rid = self._next_rid
+            self._next_rid += 1
+            self.reqs[rid] = Request(rid, prompt, max_new)
+            self._live.add(rid)
+            self._queue.append(rid)
+            self._wake.notify_all()     # a stalled run() picks it up now
+        return rid
+
+    def release(self, rid: int) -> None:
+        """Drop a finished request's record. Finished requests otherwise
+        stay in ``reqs`` so callers can read their tokens; a long-lived
+        online engine should release them once consumed."""
+        with self._lock:
+            req = self.reqs.get(rid)
+            if req is not None and req.state != DONE:
+                raise ValueError(f"request {rid} is {req.state}, not done")
+            self.reqs.pop(rid, None)
+
+    def generate(self, prompts: list[list[int]], *, max_new: int = 32,
+                 seed: int | None = None) -> list[list[int]]:
+        """Submit ``prompts`` and run the queue to completion (the batch
+        API the tests drive; online use is ``submit()`` + ``run()``)."""
+        rids = [self.submit(p, max_new) for p in prompts]
+        self.run(seed=seed)
+        return [list(self.reqs[r].out) for r in rids]
+
+    def run(self, *, seed: int | None = None) -> ServeStats:
+        """Drain the queue: admit → prefill → decode, with offload/reload
+        riding on DMA streams, until every submitted request is DONE.
+
+        Returns once the live set is observed empty under the lock: a
+        request submitted concurrently after that instant waits for the
+        next ``run()`` — a long-lived online service keeps a run loop (or
+        re-invokes ``run()`` after submitting)."""
+        if seed is not None:
+            self._seed = seed
+        cfg = self.cfg
+        pol = get_reload_policy(cfg.reload_policy, seed=self._seed)
+        pol.prepare(self)
+        self._d2h = _DmaStream(D2H, cfg.d2h_bw, cfg.dma_latency, pol,
+                               self._service_d2h, self._lock)
+        self._h2d = _DmaStream(H2D, cfg.h2d_bw, cfg.dma_latency, pol,
+                               self._service_h2d, self._lock)
+        self._d2h.start()
+        self._h2d.start()
+        try:
+            while True:
+                with self._lock:
+                    for stream in (self._d2h, self._h2d):
+                        if stream.error is not None:
+                            raise stream.error
+                    self._apply_events_locked()
+                    admits = self._plan_admissions_locked()
+                if admits:
+                    self._prefill_admit(admits)
+                with self._lock:
+                    self._schedule_offload_locked()
+                    self._schedule_preempt_locked()
+                    active = [(s, r) for s, r in enumerate(self._slots)
+                              if r is not None
+                              and self.reqs[r].state == RUNNING]
+                    if not self._live:     # atomic with submit()'s mutation
+                        break
+                if active:
+                    self._decode_once(active)
+                else:
+                    self._stall_wait()
+        finally:
+            with self._lock:
+                self._d2h.shutdown()
+                self._h2d.shutdown()
+            self._d2h.join()
+            self._h2d.join()
+        return self.stats
+
+    # -------------------------------------------------- DMA service hooks
+    # (run on stream threads after the simulated wire time; they only read
+    # device blocks and post events — the main loop owns cache mutation)
+    def _service_d2h(self, tr: _Transfer) -> None:
+        with self._lock:
+            req = self.reqs.get(tr.rid)
+            if req is None:                           # released mid-flight
+                self._wake.notify_all()
+                return
+            if req.state == DONE or req.slot < 0:
+                req.inflight.discard(tr.blk)
+                self._wake.notify_all()
+                return
+            snapshot = self.kv.cache                  # immutable leaf refs
+            slot = req.slot
+        # the actual copy runs OFF the engine lock so it overlaps under
+        # decode like a real copy engine; the slot cannot be reassigned
+        # while this block is in flight (swap-out completes only once
+        # `inflight` drains), so only completion can invalidate it
+        data = self.kv.read_block(slot, tr.blk, cache=snapshot)
+        with self._lock:
+            req.inflight.discard(tr.blk)
+            if req.state != DONE and req.slot == slot:
+                self.host.put_offload((tr.rid, tr.blk), data)
+                # counted here, not as a HostStore delta: a runtime sharing
+                # the store must not have its traffic attributed to serving
+                self.stats.offload_bytes += tr.nbytes
+                req.mirrored.add(tr.blk)
+                if req.state == SWAPPING and not req.inflight:
+                    self._events.append(("swap-done", tr.rid))
+            self._wake.notify_all()
+
+    def _service_h2d(self, tr: _Transfer) -> None:
+        data = self.host.get_offload((tr.rid, tr.blk))
+        with self._lock:
+            self.stats.reload_bytes += tr.nbytes
+            req = self.reqs.get(tr.rid)
+            if req is not None:
+                req.inflight.discard(tr.blk)
+                self._events.append(("reload", tr.rid, tr.blk, data))
+            self._wake.notify_all()
+
+    # ------------------------------------------------------ event applies
+    def _apply_events_locked(self) -> None:
+        for ev in self._events:
+            if ev[0] == "reload":
+                _, rid, blk, data = ev
+                req = self.reqs.get(rid)
+                if req is None or req.state != RELOADING:
+                    continue
+                req.reload_data[blk] = data
+                req.pending_reload.discard(blk)
+                if not req.pending_reload:
+                    # one per-leaf scatter for the whole resume, not one
+                    # full-cache copy per block
+                    self.kv.restore_slot(
+                        req.slot, [req.reload_data[b]
+                                   for b in sorted(req.reload_data)])
+                    req.reload_data.clear()
+                    req.state = RUNNING
+                    req.quantum = 0
+                    # the tail block keeps growing after resume: its host
+                    # copy is stale from now on and must re-offload (every
+                    # cold block's copy stays valid — reuse_host_copy)
+                    if req.pos % self.cfg.block_size:
+                        tail = req.pos // self.cfg.block_size
+                        req.mirrored.discard(tail)
+                        self.host.pop_offload((rid, tail))
+            elif ev[0] == "swap-done":
+                req = self.reqs.get(ev[1])
+                if req is None or req.state != SWAPPING:
+                    continue
+                self.kv.drop_slot(req.slot)
+                self._slots[req.slot] = None
+                req.slot = -1
+                req.state = SWAPPED
+                self._swapped.append(req.rid)
+        self._events.clear()
+
+    # ----------------------------------------------------- admission path
+    def _bucket_for(self, n: int) -> int:
         for b in self.cfg.batch_buckets:
             if n <= b:
                 return b
-        raise ValueError(f"batch {n} exceeds largest bucket")
+        return self.cfg.batch_buckets[-1]
 
-    def _step_fn(self, bucket: int):
-        if bucket not in self._steps:
-            self._steps[bucket] = jax.jit(self.model.decode_step)
-        return self._steps[bucket]
+    def _plan_admissions_locked(self) -> list[tuple[int, int]]:
+        """Assign free slots: swapped requests first (schedule their
+        reloads), then fresh requests (returned for batched prefill).
+        Grows the cache to the next batch bucket when demand requires."""
+        want = len(self._swapped) + len(self._queue)
+        if want == 0:
+            return []
+        occupied = sum(r is not None for r in self._slots)
+        desired = self._bucket_for(occupied + want)
+        if self.kv is None:
+            self.kv = PagedKVCache(
+                self.model, desired, self.cfg.max_len,
+                block_size=self.cfg.block_size)
+            self._slots = [None] * desired
+        elif desired > self.kv.bucket:
+            self.kv.grow(desired)
+            self._slots.extend([None] * (desired - len(self._slots)))
+        free = [s for s, r in enumerate(self._slots) if r is None]
 
-    def generate(self, prompts: list[list[int]], *, max_new: int = 32,
-                 seed: int = 0) -> list[list[int]]:
-        """Greedy/temperature decode for a batch of prompts (pad to bucket)."""
-        n = len(prompts)
-        bucket = self._bucket(n)
-        cfg = self.model.cfg
-        max_prompt = max(len(p) for p in prompts)
-        total = max_prompt + max_new
-        if total > self.cfg.max_len:
-            raise ValueError("sequence exceeds max_len")
-        cache = self.model.init_cache(bucket, self.cfg.max_len)
-        step = self._step_fn(bucket)
-        toks = np.zeros((bucket, total), np.int32)
-        for i, p in enumerate(prompts):
-            toks[i, :len(p)] = p
-        out: list[list[int]] = [[] for _ in range(bucket)]
-        key = jax.random.PRNGKey(seed)
-        cur = jnp.asarray(toks[:, 0:1])
-        for t in range(total - 1):
-            logits, cache = step(self.params, cache, cur,
-                                 jnp.asarray(t, "int32"))
-            if self.cfg.temperature > 0:
-                key, sub = jax.random.split(key)
-                nxt = jax.random.categorical(
-                    sub, logits / self.cfg.temperature, axis=-1)
-            else:
-                nxt = jnp.argmax(logits, axis=-1)
-            nxt = np.asarray(nxt, np.int32)
-            tpos = t + 1
-            for i in range(bucket):
-                if tpos < len(prompts[i]) if i < n else True:
-                    pass
-            # teacher-force prompt tokens, free-run afterwards
-            forced = toks[:, tpos] if tpos < total else None
-            step_tok = np.where(
-                np.array([tpos < len(prompts[i]) if i < n else True
-                          for i in range(bucket)]),
-                forced, nxt)
-            for i in range(n):
-                if tpos >= len(prompts[i]) and len(out[i]) < max_new:
-                    out[i].append(int(step_tok[i]))
-            cur = jnp.asarray(step_tok[:, None])
-        return [out[i] for i in range(n)]
+        # fresh requests admit before swapped resumes: a preemption's whole
+        # point is to let waiters in, so the preempted request must not
+        # reclaim its slot ahead of them (a production engine would add an
+        # aging term here to bound swapped-out residence)
+        admits: list[tuple[int, int]] = []
+        while free and self._queue:
+            rid = self._queue.pop(0)
+            slot = free.pop(0)
+            self._slots[slot] = rid
+            self.reqs[rid].slot = slot
+            admits.append((slot, rid))
+
+        # swap-ins: every cached block reloads through the h2d stream
+        while free and self._swapped:
+            rid = self._swapped.pop(0)
+            req = self.reqs[rid]
+            slot = free.pop(0)
+            self._slots[slot] = rid
+            req.slot = slot
+            req.state = RELOADING
+            blocks = range(self.kv.n_token_blocks(req.pos))
+            req.pending_reload = set(blocks)
+            for blk in blocks:
+                self._submit_transfer_locked(self._h2d, req, blk)
+        return admits
+
+    def _submit_transfer_locked(self, stream: _DmaStream, req: Request,
+                                blk: int) -> None:
+        key = (req.rid, blk)
+        if key not in self._block_seq:
+            self._block_seq[key] = self._seq_counter
+            self._seq_counter += 1
+        req.inflight.add(blk)
+        stream.submit(_Transfer(stream.kind, req.rid, blk,
+                                self._block_seq[key], self.kv.block_nbytes))
+
+    # ------------------------------------------------------------ prefill
+    def _prefill_admit(self, admits: list[tuple[int, int]]) -> None:
+        """One batched forward over the admitted prompts (padded to a
+        (bucket, block-aligned-length) static shape), then scatter the K/V
+        into the admitted slots and sample each request's first token."""
+        cfg = self.cfg
+        reqs = [self.reqs[rid] for _, rid in admits]
+        max_p = max(len(r.prompt) for r in reqs)
+        s_pad = min(-(-max_p // cfg.block_size) * cfg.block_size,
+                    cfg.max_len)
+        b_pad = self._bucket_for(len(reqs))
+        toks = np.zeros((b_pad, s_pad), np.int32)
+        lengths = np.ones((b_pad,), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, :len(r.prompt)] = r.prompt
+            lengths[i] = len(r.prompt)
+        t0 = time.perf_counter()
+        logits, kv = self._prefill(
+            self.params, jnp.asarray(toks), jnp.asarray(lengths))
+        logits_np = np.asarray(logits, np.float32)
+        self.stats.prefill_time += time.perf_counter() - t0
+        with self._lock:
+            rows = jax.tree.map(lambda a: a[:, :len(reqs)], kv)
+            self.kv.scatter_prefill([slot for slot, _ in admits], rows)
+            for i, (slot, rid) in enumerate(admits):
+                req = self.reqs[rid]
+                req.pos = len(req.prompt)
+                req.state = RUNNING
+                req.quantum = 0
+                self.stats.prefill_tokens += req.pos
+                self.stats.kv_bytes_written += int(
+                    req.pos * self.kv.token_nbytes)
+                self._emit_locked(req, logits_np[i])
+
+    def _emit_locked(self, req: Request, row_logits: np.ndarray) -> None:
+        tok = _sample_token(row_logits, seed=self._seed, rid=req.rid,
+                            pos=req.pos, temperature=self.cfg.temperature,
+                            vocab_size=self.model.cfg.vocab_size)
+        req.out.append(tok)
+        req.last = tok
+        self.stats.tokens += 1
+        if len(req.out) >= req.max_new or req.pos >= self.cfg.max_len:
+            self._finish_locked(req)
+
+    def _finish_locked(self, req: Request) -> None:
+        req.state = DONE
+        self._live.discard(req.rid)
+        if req.slot >= 0:
+            self._slots[req.slot] = None
+            req.slot = -1
+        for blk in req.mirrored:
+            self.host.pop_offload((req.rid, blk))
+        req.mirrored.clear()
+        req.pending_reload.clear()
+        for blk in range(self.kv.n_token_blocks(req.pos)):
+            self._block_seq.pop((req.rid, blk), None)
+        # in-flight d2h mirrors see state == DONE and drop their payload
+
+    # ------------------------------------------------- offload scheduling
+    def _schedule_offload_locked(self) -> None:
+        """Mirror cold blocks of running rows to the host store (eager d2h
+        that overlaps under decode; makes a later swap-out nearly free)."""
+        cfg = self.cfg
+        if not cfg.offload or self.kv is None:
+            return
+        for slot, rid in enumerate(self._slots):
+            if rid is None:
+                continue
+            req = self.reqs[rid]
+            if req.state != RUNNING:
+                continue
+            cold = max(req.pos - cfg.hot_window, 0) // cfg.block_size
+            cap = int(cfg.offload_fraction
+                      * self.kv.n_token_blocks(req.pos))
+            for blk in range(min(cold, cap)):
+                if blk not in req.mirrored and blk not in req.inflight:
+                    self._submit_transfer_locked(self._d2h, req, blk)
+
+    def _schedule_preempt_locked(self) -> None:
+        """Swap out requests that exhausted their decode quantum while
+        others wait — the continuous-batching fairness lever, and the
+        source of genuine reload traffic."""
+        cfg = self.cfg
+        if not cfg.preempt_every or self.kv is None:
+            return
+        waiting = len(self._queue) + len(self._swapped)
+        for slot, rid in enumerate(self._slots):
+            if waiting <= 0:
+                return
+            if rid is None:
+                continue
+            req = self.reqs[rid]
+            if req.state != RUNNING or req.quantum < cfg.preempt_every:
+                continue
+            if len(req.out) >= req.max_new - 1:     # about to finish anyway
+                continue
+            req.state = SWAPPING
+            self.stats.swaps += 1
+            waiting -= 1
+            for blk in range(self.kv.n_token_blocks(req.pos)):
+                if blk not in req.mirrored and blk not in req.inflight:
+                    self._submit_transfer_locked(self._d2h, req, blk)
+            if not req.inflight:                    # everything was mirrored
+                self._events.append(("swap-done", rid))
+
+    # -------------------------------------------------------------- decode
+    def _decode_once(self, active: list[tuple[int, int]]) -> None:
+        with self._lock:
+            bucket = self.kv.bucket
+            cache = self.kv.cache
+            toks = np.zeros((bucket, 1), np.int32)
+            lens = np.zeros((bucket,), np.int32)
+            mask = np.zeros((bucket,), bool)
+            for slot, rid in active:
+                req = self.reqs[rid]
+                toks[slot, 0] = req.last
+                lens[slot] = req.pos
+                mask[slot] = True
+        t0 = time.perf_counter()
+        logits, new_cache = self._step(self.params, cache, jnp.asarray(toks),
+                                       jnp.asarray(lens), jnp.asarray(mask))
+        logits_np = np.asarray(logits, np.float32)
+        self.stats.decode_time += time.perf_counter() - t0
+        self.stats.decode_steps += 1
+        with self._lock:
+            self.kv.cache = new_cache
+            for slot, rid in active:
+                req = self.reqs[rid]
+                req.pos += 1
+                req.quantum += 1
+                self.stats.kv_bytes_written += int(self.kv.token_nbytes)
+                self.stats.decode_tokens += 1
+                self._emit_locked(req, logits_np[slot])
+
+    def _stall_wait(self) -> None:
+        """Nothing resident to decode: wait for a DMA completion event."""
+        t0 = time.perf_counter()
+        with self._wake:
+            busy = (self._events or self._d2h.pending or self._h2d.pending
+                    or any(self.reqs[r].inflight for r in self._live))
+            if not busy and not self._queue and not self._swapped:
+                states = {r: self.reqs[r].state for r in self._live}
+                raise RuntimeError(f"serving scheduler wedged: {states}")
+            self._wake.wait(timeout=0.1)
+        self.stats.stall_time += time.perf_counter() - t0
+
+
+# --------------------------------------------------------------------------
+# the unbatched oracle
+# --------------------------------------------------------------------------
+def naive_generate(model, params, prompt, *, max_new: int = 32,
+                   max_len: int = 512, rid: int = 0, seed: int = 0,
+                   temperature: float = 0.0) -> list[int]:
+    """Reference decode for ONE request, no batching/padding/offload: one
+    prefill forward, then single-row decode steps, sampling with the same
+    (seed, rid, position) key schedule as the engine. ``Engine.generate``
+    must reproduce this for every batching and offload configuration."""
+    prompt = [int(t) for t in prompt]
+    p_len = len(prompt)
+    vocab = model.cfg.vocab_size
+    # jit wrappers cached on the model: jax.jit keys its trace cache on
+    # wrapper identity, so a fresh wrapper per oracle call would recompile
+    # decode_step for every request of every test
+    fns = getattr(model, "_serve_oracle_fns", None)
+    if fns is None:
+        fns = (jax.jit(model.prefill), jax.jit(model.decode_step))
+        model._serve_oracle_fns = fns
+    prefill, step = fns
+    logits, kv = prefill(params, jnp.asarray([prompt], jnp.int32),
+                         jnp.asarray([p_len], jnp.int32))
+    cache = model.init_cache(1, max_len)
+    cache = {k: cache[k].at[:, :, :p_len].set(kv[k].astype(cache[k].dtype))
+             for k in cache}
+    out: list[int] = []
+    pos = p_len
+    row = np.asarray(logits[0], np.float32)
+    while True:
+        tok = _sample_token(row, seed=seed, rid=rid, pos=pos,
+                            temperature=temperature, vocab_size=vocab)
+        out.append(tok)
+        if len(out) >= max_new or pos >= max_len:
+            return out
+        logits, cache = step(params, cache,
+                             jnp.asarray([[tok]], jnp.int32),
+                             jnp.asarray([pos], jnp.int32))
+        row = np.asarray(logits[0], np.float32)
+        pos += 1

@@ -38,7 +38,7 @@ def constrain(x, *spec, require: str | None = None):
     GSPMD choose (learned the hard way: §Perf iteration B2a)."""
     try:
         m = jax.sharding.get_abstract_mesh()
-    except Exception:
+    except AttributeError:       # jax < 0.5: no abstract-mesh API → un-meshed
         return x
     if m is None or not getattr(m, "axis_names", ()):
         return x

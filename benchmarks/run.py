@@ -8,7 +8,14 @@ Prints ``name,us_per_call,derived`` CSV (scaffold contract). Paper artifacts:
 * threaded — nondet-vs-fixed on real threads (condition-variable runtime)
 * memgraph_build — compiler throughput/dependency statistics
 * serving — continuous-batching decode with KV offload + reload policies
+* tiered_offload — bounded host tier + disk spill: throughput vs host-tier
+  fraction, nondet-vs-fixed under two-hop reload latency (DESIGN.md §10)
 * roofline — three-term model per dry-run cell (skipped when no artifacts)
+
+Figures run **isolated**: one broken benchmark emits a ``FAILED`` CSV row
+and a traceback, the rest still run, and the process exits nonzero with a
+failure summary — CI sees a single figure regression without it hiding the
+others.
 
 ``QUICK=0`` env var runs the full sweeps; default is the quick profile so
 ``python -m benchmarks.run`` completes in a few minutes on one CPU core.
@@ -17,22 +24,12 @@ from __future__ import annotations
 
 import os
 import sys
+import traceback
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
-def main() -> None:
-    quick = os.environ.get("QUICK", "1") != "0"
-    from . import (fig10_prefill, fig11_lora, stall_ablation,
-                   threaded_runtime, memgraph_build, serving)
-    print("name,us_per_call,derived")
-    fig10_prefill.run(quick=quick)
-    fig11_lora.run(quick=quick)
-    stall_ablation.run(quick=quick)
-    threaded_runtime.run(quick=quick)
-    memgraph_build.run(quick=quick)
-    serving.run(quick=quick)
-    # roofline (requires dry-run artifacts)
+def _roofline() -> None:
     art = "experiments/dryrun_v4"
     if os.path.isdir(art) and any(f.endswith(".json")
                                   for f in os.listdir(art)):
@@ -42,5 +39,41 @@ def main() -> None:
         print("roofline,0.0,skipped(no dryrun artifacts)")
 
 
+def main() -> int:
+    quick = os.environ.get("QUICK", "1") != "0"
+    from . import (fig10_prefill, fig11_lora, stall_ablation,
+                   threaded_runtime, memgraph_build, serving,
+                   tiered_offload)
+    figures = [
+        ("fig10_prefill", lambda: fig10_prefill.run(quick=quick)),
+        ("fig11_lora", lambda: fig11_lora.run(quick=quick)),
+        ("stall_ablation", lambda: stall_ablation.run(quick=quick)),
+        ("threaded_runtime", lambda: threaded_runtime.run(quick=quick)),
+        ("memgraph_build", lambda: memgraph_build.run(quick=quick)),
+        ("serving", lambda: serving.run(quick=quick)),
+        ("tiered_offload", lambda: tiered_offload.run(quick=quick)),
+        ("roofline", _roofline),
+    ]
+    print("name,us_per_call,derived")
+    failures: list[str] = []
+    for name, fn in figures:
+        try:
+            fn()
+        except KeyboardInterrupt:
+            raise
+        except BaseException as e:
+            traceback.print_exc(file=sys.stderr)
+            # keep the CSV contract: exception text may contain commas
+            # and newlines, which would corrupt the 3-field row
+            msg = " ".join(str(e).split()).replace(",", ";")[:160]
+            print(f"{name},0.0,FAILED({type(e).__name__}: {msg})")
+            failures.append(name)
+    if failures:
+        print(f"# FAILURES: {len(failures)}/{len(figures)} figure(s) broke: "
+              + ", ".join(failures), file=sys.stderr)
+        return 1
+    return 0
+
+
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -1,10 +1,15 @@
 """Sharded, digest-verified checkpointing with elastic restore.
 
-Layout: ``<dir>/step_<N>/`` containing one ``shard_<i>.npz`` per writer plus
-``MANIFEST.json`` (leaf paths, shapes, dtypes, per-file sha256, step,
-mesh-shape metadata). Writes are atomic (tmp dir + rename) so a failure
-mid-write never corrupts the latest checkpoint — the restart driver always
-loads the newest *complete* manifest (fault tolerance deliverable).
+Layout: ``<dir>/step_<N>/`` containing ``shard_<i>.npz`` files plus
+``MANIFEST.json`` (leaf paths, shapes, dtypes, per-leaf shard file,
+per-file sha256, step, mesh-shape metadata). Leaves are packed greedily
+into shards by a byte threshold (``shard_bytes``), so a large tree splits
+across many files — parallel-writer friendly, and a corruption blast
+radius of one shard. Writes are atomic (tmp dir + rename) so a failure
+mid-write never corrupts the latest checkpoint; restore verifies every
+needed shard's digest and, when no explicit step is requested, **falls
+back to the newest complete checkpoint** if the latest one is corrupt or
+truncated (fault-tolerance deliverable).
 
 Elastic: arrays are stored unsharded by logical leaf (host gathers before
 save); restore re-shards onto whatever mesh the new job brings, so scaling
@@ -17,13 +22,17 @@ import json
 import os
 import pathlib
 import shutil
+import sys
 import tempfile
 from typing import Any
 
 import jax
 import numpy as np
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "complete_steps"]
+
+DEFAULT_SHARD_BYTES = 64 * 2**20
 
 
 def _leaf_paths(tree: Any) -> list[tuple[str, Any]]:
@@ -38,23 +47,48 @@ def _leaf_paths(tree: Any) -> list[tuple[str, Any]]:
 
 def save_checkpoint(directory: str | os.PathLike, step: int, tree: Any,
                     *, meta: dict | None = None,
-                    max_keep: int = 3) -> pathlib.Path:
+                    max_keep: int = 3,
+                    shard_bytes: int = DEFAULT_SHARD_BYTES) -> pathlib.Path:
     d = pathlib.Path(directory)
     d.mkdir(parents=True, exist_ok=True)
     tmp = pathlib.Path(tempfile.mkdtemp(dir=d, prefix=".tmp_"))
     leaves = _leaf_paths(tree)
-    arrays = {f"a{i}": np.asarray(leaf) for i, (_k, leaf) in enumerate(leaves)}
-    shard_path = tmp / "shard_0.npz"
-    np.savez(shard_path, **arrays)
-    digest = hashlib.sha256(shard_path.read_bytes()).hexdigest()
+
+    # greedy size-threshold packing: a shard closes once adding the next
+    # leaf would push it past shard_bytes (oversized single leaves get a
+    # shard of their own)
+    shards: list[list[tuple[str, str, np.ndarray]]] = []
+    cur: list[tuple[str, str, np.ndarray]] = []
+    cur_bytes = 0
+    for i, (key, leaf) in enumerate(leaves):
+        arr = np.asarray(leaf)
+        if cur and cur_bytes + arr.nbytes > shard_bytes:
+            shards.append(cur)
+            cur, cur_bytes = [], 0
+        cur.append((f"a{i}", key, arr))
+        cur_bytes += arr.nbytes
+    if cur:
+        shards.append(cur)
+
+    files: dict[str, str] = {}
+    manifest_leaves: list[dict] = []     # shard packing preserves leaf order
+    for si, group in enumerate(shards):
+        fname = f"shard_{si}.npz"
+        path = tmp / fname
+        np.savez(path, **{idx: arr for idx, _key, arr in group})
+        files[fname] = hashlib.sha256(path.read_bytes()).hexdigest()
+        for idx, key, arr in group:
+            # reuse the already-materialized array: a second np.asarray
+            # per leaf would repeat the whole device→host gather
+            manifest_leaves.append({"key": key, "idx": idx, "file": fname,
+                                    "shape": list(arr.shape),
+                                    "dtype": str(arr.dtype)})
+
     manifest = {
         "step": int(step),
         "meta": meta or {},
-        "leaves": [{"key": k, "idx": f"a{i}",
-                    "shape": list(np.shape(l)),
-                    "dtype": str(np.asarray(l).dtype)}
-                   for i, (k, l) in enumerate(leaves)],
-        "files": {"shard_0.npz": digest},
+        "leaves": manifest_leaves,
+        "files": files,
     }
     (tmp / "MANIFEST.json").write_text(json.dumps(manifest, indent=1))
     final = d / f"step_{step:010d}"
@@ -68,6 +102,24 @@ def save_checkpoint(directory: str | os.PathLike, step: int, tree: Any,
     return final
 
 
+def complete_steps(directory: str | os.PathLike) -> list[int]:
+    """Steps with a parseable manifest whose every shard exists and passes
+    its digest, ascending."""
+    d = pathlib.Path(directory)
+    if not d.exists():
+        return []
+    out = []
+    for p in sorted(d.iterdir()):
+        if not p.name.startswith("step_"):
+            continue
+        try:
+            _verify(p)
+        except Exception:
+            continue
+        out.append(int(p.name.split("_")[1]))
+    return out
+
+
 def latest_step(directory: str | os.PathLike) -> int | None:
     d = pathlib.Path(directory)
     if not d.exists():
@@ -79,27 +131,36 @@ def latest_step(directory: str | os.PathLike) -> int | None:
     return best
 
 
-def restore_checkpoint(directory: str | os.PathLike, tree_like: Any,
-                       *, step: int | None = None,
-                       shardings: Any | None = None) -> tuple[Any, int]:
-    """Restore into the structure of ``tree_like``; verify digests; place
-    leaves on ``shardings`` if given (elastic re-shard)."""
-    d = pathlib.Path(directory)
-    if step is None:
-        step = latest_step(d)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoint under {d}")
-    cdir = d / f"step_{step:010d}"
+def _verify(cdir: pathlib.Path) -> dict:
+    """Parse a checkpoint's manifest and verify every shard digest."""
     manifest = json.loads((cdir / "MANIFEST.json").read_text())
     for fname, want in manifest["files"].items():
-        got = hashlib.sha256((cdir / fname).read_bytes()).hexdigest()
+        shard = cdir / fname
+        if not shard.exists():
+            raise IOError(f"checkpoint corruption: missing shard {shard}")
+        got = hashlib.sha256(shard.read_bytes()).hexdigest()
         if got != want:
-            raise IOError(f"checkpoint corruption in {cdir / fname}: "
+            raise IOError(f"checkpoint corruption in {shard}: "
                           f"sha256 {got} != {want}")
-    data = np.load(cdir / "shard_0.npz")
-    by_key = {l["key"]: data[l["idx"]] for l in manifest["leaves"]}
+    return manifest
+
+
+def _load(cdir: pathlib.Path, tree_like: Any, shardings: Any | None,
+          manifest: dict | None = None) -> tuple[Any, int]:
+    if manifest is None:           # fallback path verified (+parsed) already
+        manifest = _verify(cdir)
+    # group leaves by shard so each file is opened once
+    by_file: dict[str, list[dict]] = {}
+    for leaf in manifest["leaves"]:
+        # pre-sharding manifests (one monolithic shard) carry no file field
+        by_file.setdefault(leaf.get("file", "shard_0.npz"), []).append(leaf)
+    by_key: dict[str, np.ndarray] = {}
+    for fname, leaves in by_file.items():
+        with np.load(cdir / fname) as data:
+            for leaf in leaves:
+                by_key[leaf["key"]] = data[leaf["idx"]]
     flat = _leaf_paths(tree_like)
-    leaves = []
+    out = []
     for key, like in flat:
         if key not in by_key:
             raise KeyError(f"checkpoint missing leaf {key!r}")
@@ -108,10 +169,45 @@ def restore_checkpoint(directory: str | os.PathLike, tree_like: Any,
         if tuple(arr.shape) != want_shape:
             raise ValueError(f"leaf {key!r}: ckpt {arr.shape} != "
                              f"expected {want_shape}")
-        leaves.append(arr)
+        out.append(arr)
     tdef = jax.tree_util.tree_structure(tree_like)
-    restored = jax.tree_util.tree_unflatten(tdef, leaves)
+    restored = jax.tree_util.tree_unflatten(tdef, out)
     if shardings is not None:
         restored = jax.tree.map(
             lambda a, s: jax.device_put(a, s), restored, shardings)
     return restored, manifest["step"]
+
+
+def restore_checkpoint(directory: str | os.PathLike, tree_like: Any,
+                       *, step: int | None = None,
+                       shardings: Any | None = None) -> tuple[Any, int]:
+    """Restore into the structure of ``tree_like``; verify digests; place
+    leaves on ``shardings`` if given (elastic re-shard).
+
+    With an explicit ``step``, corruption raises. With ``step=None`` the
+    newest checkpoint is tried first and, if its shards/manifest fail
+    verification (a crash mid-write, bit rot), restore falls back to the
+    next-newest *complete* step — the restart driver never wedges on a bad
+    latest checkpoint. Shape/structure mismatches against ``tree_like``
+    never fall back: they mean the caller asked for the wrong tree."""
+    d = pathlib.Path(directory)
+    if step is not None:
+        return _load(d / f"step_{step:010d}", tree_like, shardings)
+    candidates = sorted((p for p in d.iterdir()
+                         if p.name.startswith("step_")),
+                        reverse=True) if d.exists() else []
+    if not candidates:
+        raise FileNotFoundError(f"no checkpoint under {d}")
+    errors: list[str] = []
+    for cdir in candidates:
+        try:
+            manifest = _verify(cdir)
+        except Exception as e:          # truncated/corrupt: try the next
+            errors.append(f"{cdir.name}: {e}")
+            print(f"ckpt: skipping {cdir.name} ({e}); falling back",
+                  file=sys.stderr)
+            continue
+        # shape/structure errors below must surface, never fall back
+        return _load(cdir, tree_like, shardings, manifest)
+    raise IOError("checkpoint corruption: no intact checkpoint under "
+                  f"{d}; tried {'; '.join(errors)}")

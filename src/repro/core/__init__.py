@@ -4,10 +4,12 @@ from .taskgraph import OpKind, TaskGraph, TaskVertex, TensorSpec
 from .memgraph import DepKind, Loc, MemGraph, MemOp, MemVertex, RaceError
 from .build import BuildConfig, BuildResult, MemgraphOOM, build_memgraph
 from .dispatch import DispatchPolicy, POLICY_NAMES, get_policy
+from .stores import DiskStore, HostStore, TieredStore
 
 __all__ = [
     "OpKind", "TaskGraph", "TaskVertex", "TensorSpec",
     "DepKind", "Loc", "MemGraph", "MemOp", "MemVertex", "RaceError",
     "BuildConfig", "BuildResult", "MemgraphOOM", "build_memgraph",
     "DispatchPolicy", "POLICY_NAMES", "get_policy",
+    "DiskStore", "HostStore", "TieredStore",
 ]

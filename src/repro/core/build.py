@@ -39,6 +39,14 @@ Beyond-paper extensions (flagged; documented in DESIGN.md §7):
   exist yet (which could deadlock the plan).
 * terminal outputs evicted to host simply stay there (no orphan reload); the
   runtime serves results from the host store.
+* bounded host tier (``host_capacity``; DESIGN.md §10) — host copies are
+  tenants of a shared host :class:`~repro.core.policies.Arena`; overflow
+  spills the Belady-furthest copy to the disk tier (SPILL vertex on the
+  disk engine) and reloads of disk-resident copies become pipelined
+  two-hop LOAD→RELOAD chains. Dead host copies are dropped for free, and
+  re-spilling bytes with a live disk twin moves nothing (the disk
+  analogue of ``reuse_host_copy``). ``host_capacity=None`` (default)
+  reproduces the paper's unbounded host store exactly.
 """
 from __future__ import annotations
 
@@ -47,7 +55,8 @@ import random
 from typing import Any, Callable
 
 from .memgraph import DepKind, Loc, MemGraph, MemOp
-from .policies import Arena, EvictionDecision, PlacementDecision, INF
+from .policies import (Arena, EvictionDecision, HostEntry, HostPlan,
+                       PlacementDecision, INF)
 from .taskgraph import OpKind, TaskGraph, TaskVertex
 
 __all__ = ["BuildConfig", "BuildResult", "MemgraphOOM", "build_memgraph"]
@@ -68,6 +77,12 @@ class BuildConfig:
     reuse_host_copy: bool = True
     victim_policy: str = "belady"                # belady | lru | random  (§C)
     rng_seed: int = 0
+    # host-tier budget (same units as `capacity`, shared by all devices).
+    # None = unbounded CPU RAM (the paper's implicit assumption). Bounded,
+    # the compiler spills Belady-chosen host copies to the disk tier
+    # (SPILL vertices) and reloads them through two-hop LOAD→RELOAD
+    # chains (DESIGN.md §10).
+    host_capacity: int | None = None
 
     def size_of(self, v: TaskVertex) -> int:
         return (self.size_fn or (lambda u: u.out.nbytes))(v)
@@ -88,6 +103,9 @@ class BuildResult:
     n_offloads: int = 0
     n_reloads: int = 0
     n_cancelled: int = 0
+    peak_host: int = 0                          # host-tier peak (units)
+    n_spills: int = 0                           # host→disk spill vertices
+    n_loads: int = 0                            # disk→host load vertices
 
     def final_value_location(self, tid: int) -> tuple[str, int]:
         """Where the runtime finds a terminal output: ('host', mid-or-tid) or
@@ -147,8 +165,14 @@ class _Builder:
         # streaming-reduce groups: tid -> (alloc0_mid, join_mid)
         self.groups: dict[int, tuple[int, int]] = {}
 
+        # the host tier: one CPU-RAM arena shared by all devices, with
+        # Belady-over-the-schedule victim choice (DESIGN.md §10)
+        self.hostplan = HostPlan(config.host_capacity, self._host_next_use)
+        self.host_key_of: dict[int, int] = {}      # tid -> host-store key
+
         self.seq = 0
         self.n_offloads = self.n_reloads = self.n_cancelled = 0
+        self.n_spills = self.n_loads = 0
 
     # ------------------------------------------------------------------ utils
     def _mark_executed(self, mid: int) -> None:
@@ -170,6 +194,70 @@ class _Builder:
 
     def _arena(self, device: int) -> Arena:
         return self.arenas[device]
+
+    # ----------------------------------------------- host tier (§10) utils
+    def _host_next_use(self, e: HostEntry) -> float:
+        """Belady metric for a host copy: the next position in V where the
+        copy will be read back (i.e. the evicted tensor's next consumer).
+        A copy whose tensor is device-resident or terminal has no known
+        host-side use — it spills first."""
+        if e.tid in self.evicted:
+            cp, ptr = self.cons_pos[e.tid], self.cons_ptr[e.tid]
+            if ptr < len(cp):
+                return cp[ptr]
+        return INF
+
+    def _emit_spill(self, e: HostEntry, *, drop: bool = False) -> int:
+        """SPILL vertex: evict host copy ``e`` to the disk tier (or, with
+        ``drop``, release dead bytes). Re-spilling a copy that already has
+        an immutable disk twin moves no bytes (nbytes=0) — the disk
+        analogue of ``reuse_host_copy``. Ordered after the copy's producer
+        and every emitted reader of the host bytes."""
+        src = self.mg.vertices[e.producer]
+        dedup = e.spill_src is not None
+        tname = self.tg.vertices[e.tid].name or str(e.tid)
+        smid = self.mg.add_vertex(
+            MemOp.SPILL, src.device, src_tid=e.tid, loc=None,
+            size=e.size, nbytes=0 if (drop or dedup) else e.nbytes,
+            operands=[e.key], params={"drop": True} if drop else {},
+            tier="disk", name=("drop:" if drop else "spill:") + tname)
+        self.tid_of[smid] = e.tid
+        self.mg.add_dep(e.producer, smid, DepKind.DATA)
+        for r in e.readers:
+            self.mg.add_dep(r, smid, DepKind.MEM)
+        self._mark_executed(smid)
+        if not drop and not dedup:
+            self.n_spills += 1
+            # annotate the originating offload: its payload continues to disk
+            self.mg.vertices[e.key].tier = "disk"
+        return smid
+
+    def _host_admit(self, producer_mid: int, key: int, tid: int,
+                    size: int, nbytes: int,
+                    exclude: frozenset = frozenset()) -> None:
+        """Admit ``producer_mid``'s host copy into the host tier, emitting
+        SPILL vertices for Belady victims and wiring the safe-overwrite MEM
+        deps the producer must wait on."""
+        deps = self.hostplan.admit(key, tid, size, nbytes, producer_mid,
+                                   self.seq, spill_cb=self._emit_spill,
+                                   exclude=exclude)
+        if deps is None:
+            raise MemgraphOOM(
+                f"host tier of {self.cfg.host_capacity} units cannot stage "
+                f"{size} units for task {tid}")
+        for d in deps:
+            self.mg.add_dep(d, producer_mid, DepKind.MEM)
+        if self.hostplan.bounded:
+            self.host_key_of[tid] = key
+
+    def _drop_host_entry(self, e: HostEntry) -> None:
+        """Release a dead host copy (and, for drops, its disk twin)."""
+        self.host_key_of.pop(e.tid, None)
+        if e.resident:
+            dmid = self._emit_spill(e, drop=True)
+            self.hostplan.dropped(e, dmid, self.seq)
+        else:
+            self.hostplan.forget(e.key)
 
     # ------------------------------------- safe-overwrite deps (simMalloc)
     def _overwrite_deps(self, dec, tenant_mid: int) -> None:
@@ -255,12 +343,19 @@ class _Builder:
             if off_mid is not None:
                 deps.add(off_mid)
         else:
+            # a superseded host copy (reuse_host_copy=False re-offloads the
+            # same tensor) is dead: release its host-tier extent first
+            if self.hostplan.bounded:
+                old_key = self.host_key_of.get(tid)
+                if old_key is not None and old_key in self.hostplan.entries:
+                    self._drop_host_entry(self.hostplan.entries[old_key])
             off_mid = self.mg.add_vertex(
                 MemOp.OFFLOAD, device, src_tid=tid, loc=None,
                 size=vv.size, nbytes=vv.nbytes, operands=[victim_mid],
                 name=f"offload:{vv.name or tid}")
             self.tid_of[off_mid] = tid
             self.mg.add_dep(victim_mid, off_mid, DepKind.DATA)
+            self._host_admit(off_mid, off_mid, tid, vv.size, vv.nbytes)
             self._mark_executed(off_mid)
             self.n_offloads += 1
             deps.add(off_mid)
@@ -344,6 +439,12 @@ class _Builder:
             m = self.alias[t]
             if self.mg.vertices[m].loc is not None:
                 self._arena(self.mg.vertices[m].loc.device).free(m, self.seq)
+            # any host/disk copy of a fully-consumed, non-terminal tensor
+            # is dead: give its host-tier extent back (a zero-cost drop)
+            if self.hostplan.bounded:
+                key = self.host_key_of.get(t)
+                if key is not None and key in self.hostplan.entries:
+                    self._drop_host_entry(self.hostplan.entries[key])
 
     def _force_reload(self, tid: int) -> int:
         """simMallocForceReld: place the pending reload of ``tid``."""
@@ -356,9 +457,45 @@ class _Builder:
         vv.loc = Loc(arena.device, dec.offset, dec.size)
         arena.commit(dec, mid)
         self._overwrite_deps(dec, mid)
+        self._wire_host_source(mid, vv)
         self._mark_executed(mid)
         self.evicted.discard(tid)
         return mid
+
+    def _wire_host_source(self, rel_mid: int, vv) -> None:
+        """Bind a RELOAD to the tier currently holding its source copy.
+
+        Host-resident: order after the copy's live producer (the OFFLOAD,
+        or the latest LOAD that restaged it). Disk-resident: emit the
+        pipelined two-hop chain — a LOAD (disk→host, on the disk engine)
+        that restages the copy into the host arena (possibly spilling
+        Belady victims to make room), then the RELOAD's h2d hop."""
+        if not self.hostplan.bounded:
+            return
+        key = self.host_src.get(rel_mid)
+        if key is None:                    # immutable input store: one hop
+            return
+        e = self.hostplan.entries.get(key)
+        if e is None:                      # pragma: no cover — defensive
+            return
+        if e.resident:
+            self.mg.add_dep(e.producer, rel_mid, DepKind.DATA)
+            e.readers.add(rel_mid)
+            return
+        tid = e.tid
+        lmid = self.mg.add_vertex(
+            MemOp.LOAD, vv.device, src_tid=tid, loc=None,
+            size=e.size, nbytes=e.nbytes, operands=[key], tier="disk",
+            name=f"load:{self.tg.vertices[tid].name or tid}")
+        self.tid_of[lmid] = tid
+        self.mg.add_dep(e.spill_src, lmid, DepKind.DATA)
+        self._host_admit(lmid, key, tid, e.size, e.nbytes,
+                         exclude=frozenset({key}))
+        self._mark_executed(lmid)
+        self.n_loads += 1
+        self.mg.add_dep(lmid, rel_mid, DepKind.DATA)
+        vv.tier = "disk"
+        self.hostplan.entries[key].readers.add(rel_mid)
 
     def _execute(self, tid: int) -> None:
         v = self.tg.vertices[tid]
@@ -456,6 +593,9 @@ class _Builder:
             n_offloads=self.n_offloads,
             n_reloads=self.n_reloads,
             n_cancelled=self.n_cancelled,
+            peak_host=self.hostplan.peak_units,
+            n_spills=self.n_spills,
+            n_loads=self.n_loads,
         )
 
 

@@ -35,22 +35,27 @@ from typing import Callable, Iterable
 from .memgraph import MemGraph, MemOp, MemVertex
 
 __all__ = [
-    "COMPUTE", "H2D", "D2H", "D2D", "ENGINE_KINDS", "TRANSFER_KINDS",
+    "COMPUTE", "H2D", "D2H", "D2D", "DISK", "ENGINE_KINDS", "TRANSFER_KINDS",
     "ENGINE_OF", "engine_of", "DispatchPolicy", "RandomPolicy",
     "FixedPolicy", "CriticalPathPolicy", "TransferFirstPolicy",
     "POLICY_NAMES", "get_policy",
 ]
 
 # -- engine classes ---------------------------------------------------------
-COMPUTE, H2D, D2H, D2D = "compute", "h2d", "d2h", "d2d"
-ENGINE_KINDS = (COMPUTE, H2D, D2H, D2D)
-TRANSFER_KINDS = (H2D, D2H, D2D)
+# `disk` is the I/O engine of the third storage tier (host RAM → disk): SPILL
+# and LOAD vertices run there, so a two-hop reload's disk leg never occupies
+# — or waits behind — the h2d/d2h DMA lanes.
+COMPUTE, H2D, D2H, D2D, DISK = "compute", "h2d", "d2h", "d2d", "disk"
+ENGINE_KINDS = (COMPUTE, H2D, D2H, D2D, DISK)
+TRANSFER_KINDS = (H2D, D2H, D2D, DISK)
 
 ENGINE_OF = {
     MemOp.INPUT: H2D,        # weights/activations stream in from host store
     MemOp.RELOAD: H2D,
     MemOp.OFFLOAD: D2H,
     MemOp.TRANSFER: D2D,
+    MemOp.SPILL: DISK,       # host -> disk (second hop of a tiered eviction)
+    MemOp.LOAD: DISK,        # disk -> host (first hop of a two-hop reload)
     MemOp.COMPUTE: COMPUTE,
     MemOp.ALLOC0: COMPUTE,
     MemOp.ADD_INTO: COMPUTE,
@@ -69,17 +74,28 @@ def engine_of(v: MemVertex) -> str:
 _FLOPS = 8e12
 _HBM_BW = 500e9
 _DMA_BW = 12e9
+_DISK_BW = 2.4e9          # NVMe-class: ~5x slower than the PCIe DMA lanes
 _KERNEL_OVERHEAD = 5e-6
 _DMA_LATENCY = 10e-6
+_DISK_LATENCY = 100e-6
 
 
 def vertex_cost(v: MemVertex) -> float:
-    """Estimated execution seconds of ``v`` — the critical-path edge weight."""
+    """Estimated execution seconds of ``v`` — the critical-path edge weight.
+
+    Disk legs cost ~5x a DMA of the same size, so the cost-aware policies
+    (critical-path / transfer-first) naturally rank a two-hop disk reload
+    chain earlier than a one-hop host reload of equal size: the slowest
+    tier is issued earliest."""
     if v.op == MemOp.JOIN:
         return 0.0
     if engine_of(v) == COMPUTE:
         return _KERNEL_OVERHEAD + max(v.flops / _FLOPS,
                                       3.0 * v.nbytes / _HBM_BW)
+    if engine_of(v) == DISK:
+        if v.nbytes == 0:       # a dedup/drop spill moves no bytes
+            return 0.0
+        return _DISK_LATENCY + v.nbytes / _DISK_BW
     return _DMA_LATENCY + v.nbytes / _DMA_BW
 
 

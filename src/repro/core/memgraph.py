@@ -26,7 +26,8 @@ import dataclasses
 import enum
 from typing import Any, Callable, Iterable
 
-__all__ = ["MemOp", "DepKind", "Loc", "MemVertex", "MemGraph", "RaceError"]
+__all__ = ["MemOp", "STORE_OPS", "DepKind", "Loc", "MemVertex", "MemGraph",
+           "RaceError"]
 
 
 class RaceError(AssertionError):
@@ -39,9 +40,16 @@ class MemOp(str, enum.Enum):
     TRANSFER = "transfer"  # device-to-device
     OFFLOAD = "offload"    # device -> host   (output in host store)
     RELOAD = "reload"      # host -> device
+    SPILL = "spill"        # host -> disk  (second hop of a tiered eviction;
+    #                        params={'drop': True} releases dead bytes for free)
+    LOAD = "load"          # disk -> host  (first hop of a two-hop reload)
     ALLOC0 = "alloc0"      # zero-init of a streaming-reduce accumulator (§B)
     ADD_INTO = "add_into"  # commutative accumulation into a locked loc (§B)
     JOIN = "join"          # completion marker of a streaming-reduce group
+
+
+# ops whose output lives in a store tier, not a device extent (loc is None)
+STORE_OPS = frozenset({MemOp.OFFLOAD, MemOp.SPILL, MemOp.LOAD})
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,6 +89,10 @@ class MemVertex:
     size: int = 0                    # output size in units (host size for OFFLOAD)
     nbytes: int = 0                  # output size in bytes (for the simulator)
     name: str = ""
+    # storage tier an OFFLOAD/RELOAD ultimately talks to: "host" (one hop)
+    # or "disk" (this vertex is one leg of a two-hop spill/reload chain).
+    # SPILL/LOAD vertices are always tier "disk".
+    tier: str = "host"
     lock_group: tuple[int, int] | None = None  # ADD_INTO write-lock key (§B)
     # ordered operand list (mids; duplicates allowed) — dependency *sets* lose
     # operand order, which the runtime needs to bind kernel arguments.
@@ -162,16 +174,51 @@ class MemGraph:
         return order
 
     # -- validation (paper §7) ----------------------------------------------
-    def validate(self, check_races: bool = True) -> None:
+    def validate(self, check_races: bool = True,
+                 host_capacity: int | None = None) -> None:
+        """Structural validation; ``host_capacity`` additionally replays the
+        compile-time schedule and checks the host-tier budget (units)."""
         self.topo_order()
         for m, v in self.vertices.items():
-            if v.op == MemOp.OFFLOAD:
+            if v.op in STORE_OPS:
                 if v.loc is not None:
-                    raise RaceError(f"offload {m} has a device loc")
+                    raise RaceError(f"{v.op.value} {m} has a device loc")
             elif v.loc is None:
                 raise RaceError(f"{v.op} vertex {m} has no loc")
+        if host_capacity is not None:
+            peak = self.host_tier_profile()["peak_units"]
+            if peak > host_capacity:
+                raise RaceError(
+                    f"host-tier budget exceeded: peak {peak} units > "
+                    f"capacity {host_capacity}")
         if check_races:
             self._check_safe_overwrites()
+
+    def host_tier_profile(self) -> dict[str, int]:
+        """Replay the compile-time (seq) schedule, tracking host-tier
+        occupancy in units: OFFLOAD and LOAD admit bytes into the host
+        arena, SPILL (including drops) releases them. Conservative w.r.t.
+        runtime orders: every SPILL is ordered (by construction in
+        ``build.py``) after the host copy's readers and before the tenant
+        that reuses its space."""
+        occ = peak = 0
+        spilled = loaded = dropped = 0
+        for m in sorted(self.vertices, key=lambda m: self.vertices[m].seq):
+            v = self.vertices[m]
+            if v.op == MemOp.OFFLOAD:
+                occ += v.size
+            elif v.op == MemOp.LOAD:
+                occ += v.size
+                loaded += 1
+            elif v.op == MemOp.SPILL:
+                occ -= v.size
+                if v.params.get("drop"):
+                    dropped += 1
+                else:
+                    spilled += 1
+            peak = max(peak, occ)
+        return {"peak_units": peak, "final_units": occ,
+                "n_spills": spilled, "n_loads": loaded, "n_drops": dropped}
 
     def _ancestors(self, dst: int, cache: dict) -> set[int]:
         """The ancestor set of ``dst`` (all vertices with a path to it),
@@ -236,13 +283,17 @@ class MemGraph:
     # -- stats ---------------------------------------------------------------
     def stats(self) -> dict[str, Any]:
         kinds: dict[str, int] = {}
-        off_bytes = rel_bytes = 0
+        off_bytes = rel_bytes = spill_bytes = load_bytes = 0
         for v in self.vertices.values():
             kinds[v.op.value] = kinds.get(v.op.value, 0) + 1
             if v.op == MemOp.OFFLOAD:
                 off_bytes += v.nbytes
             elif v.op == MemOp.RELOAD:
                 rel_bytes += v.nbytes
+            elif v.op == MemOp.SPILL:
+                spill_bytes += v.nbytes
+            elif v.op == MemOp.LOAD:
+                load_bytes += v.nbytes
         data, mem = self.n_edges()
         return {
             "n_vertices": len(self),
@@ -252,4 +303,6 @@ class MemGraph:
             "superfluous_mem_deps": self.superfluous_mem_deps,
             "offload_bytes": off_bytes,
             "reload_bytes": rel_bytes,
+            "disk_spill_bytes": spill_bytes,
+            "disk_load_bytes": load_bytes,
         }

@@ -16,14 +16,25 @@ Two policy hooks (paper §C):
   maximizing the *minimum* next-use distance of any evicted tensor (Belady;
   the paper's generalization to variable-size tensors). ``lru`` and ``random``
   victims are provided for the §C ablation.
+
+:class:`HostPlan` extends the same discipline one tier down (beyond-paper,
+DESIGN.md §10): the host arena itself is an :class:`Arena` of
+``host_capacity`` units shared by every device, whose tenants are the host
+copies created by OFFLOAD (and restaged by LOAD) vertices. When an
+admission cannot be placed, the plan picks the host copy whose next
+schedule-known use is furthest away (Belady over the serialized vertex
+list; copies backed by a live device tensor or terminal outputs count as
+"never needed" and spill first) and asks the builder to emit the SPILL
+vertex that frees its extent.
 """
 from __future__ import annotations
 
 import dataclasses
 import random
-from typing import Callable, Iterable
+from typing import Any, Callable, Iterable
 
-__all__ = ["Extent", "Arena", "PlacementDecision", "EvictionDecision"]
+__all__ = ["Extent", "Arena", "PlacementDecision", "EvictionDecision",
+           "HostEntry", "HostPlan", "INF"]
 
 INF = float("inf")
 
@@ -320,3 +331,129 @@ class Arena:
                 self.peak_used = max(self.peak_used, self._used)
                 return e
         raise AssertionError("commit target extent not found")
+
+
+# --------------------------------------------------------------------------
+# the host tier (beyond-paper: bounded CPU RAM with disk spill, DESIGN.md §10)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class HostEntry:
+    """One logical host copy: the payload of an OFFLOAD (re-staged by LOADs
+    after disk spills). ``producer`` is the vertex whose completion makes
+    the current host bytes live (the OFFLOAD, or the latest LOAD);
+    ``readers`` are the emitted vertices that read those bytes (RELOADs and
+    SPILLs), which any later spill of the extent must order after."""
+
+    key: int                      # host-store key = the OFFLOAD vertex mid
+    tid: int
+    size: int                     # units (same size_fn units as devices)
+    nbytes: int
+    producer: int
+    resident: bool = True         # bytes currently in host RAM
+    spill_src: int | None = None  # SPILL vertex owning the immutable disk copy
+    readers: set[int] = dataclasses.field(default_factory=set)
+
+
+class HostPlan:
+    """Compile-time model of the bounded host tier.
+
+    ``capacity=None`` models the unbounded host store (the paper's implicit
+    assumption): nothing is tracked beyond the peak-occupancy counter and no
+    SPILL/LOAD vertices are ever requested, so existing plans are unchanged.
+
+    With a capacity, host copies become arena tenants. :meth:`admit` carves
+    space for a new copy, spilling Belady-chosen victims through the
+    builder-supplied callback; the returned mids are ordering obligations
+    (MEM deps) the admitted producer must wait on — exactly the
+    safe-overwrite discipline of the device arenas, one tier down."""
+
+    def __init__(self, capacity: int | None,
+                 next_use: Callable[[HostEntry], float]) -> None:
+        self.capacity = capacity
+        self.arena = Arena(-1, capacity) if capacity is not None else None
+        self.entries: dict[int, HostEntry] = {}
+        self.next_use = next_use
+        self._occ = 0                 # unbounded-mode occupancy (units)
+        self._peak = 0
+
+    @property
+    def bounded(self) -> bool:
+        return self.arena is not None
+
+    @property
+    def peak_units(self) -> int:
+        return self.arena.peak_used if self.bounded else self._peak
+
+    def note_unbounded(self, size: int) -> None:
+        """Unbounded mode: track occupancy so callers can size real budgets
+        (e.g. ``host_capacity = fraction * unbounded_peak``)."""
+        self._occ += size
+        self._peak = max(self._peak, self._occ)
+
+    # ---------------------------------------------------------- admission
+    def admit(self, key: int, tid: int, size: int, nbytes: int,
+              producer: int, seq: int,
+              spill_cb: Callable[[HostEntry], int],
+              exclude: frozenset = frozenset()) -> set[int] | None:
+        """Place ``producer``'s host copy; returns the MEM-dep mids it must
+        order after, or ``None`` when the resident working set cannot be
+        spilled down far enough (host OOM). ``spill_cb(entry)`` must emit
+        the SPILL vertex for a victim and return its mid."""
+        if not self.bounded:
+            self.note_unbounded(size)
+            return set()
+        if size > self.arena.capacity:
+            return None
+        while True:
+            dec = self.arena.place_free(size)
+            if dec is not None:
+                break
+            victim = self._pick_victim(exclude)
+            if victim is None:
+                return None
+            self.spilled(victim, spill_cb(victim), seq)
+        deps = set(dec.prev_writers) | set(dec.direct_deps)
+        self.arena.commit(dec, producer)
+        e = self.entries.get(key)
+        if e is None:
+            self.entries[key] = HostEntry(key, tid, size, nbytes, producer)
+        else:                          # re-staged by a LOAD
+            e.producer = producer
+            e.resident = True
+            e.readers = set()
+        return deps
+
+    def _pick_victim(self, exclude: frozenset) -> HostEntry | None:
+        """Belady over the schedule: spill the resident copy whose next
+        known use is furthest; among never-needed copies prefer the largest
+        (fewest spill ops per freed unit)."""
+        best: tuple[tuple, HostEntry] | None = None
+        for e in self.entries.values():
+            if not e.resident or e.key in exclude:
+                continue
+            score = (-self.next_use(e), -e.size, e.key)
+            if best is None or score < best[0]:
+                best = (score, e)
+        return best[1] if best else None
+
+    # --------------------------------------------------------- bookkeeping
+    def spilled(self, e: HostEntry, smid: int, seq: int) -> None:
+        """Record that ``smid`` (a SPILL vertex) evicted ``e`` from the host
+        arena: the freed extent's last writer becomes the spill itself, so
+        the next tenant of those units orders after the eviction completes."""
+        self.arena.set_owner(e.producer, smid)
+        self.arena.free(smid, seq)
+        e.resident = False
+        e.readers = set()
+        if e.spill_src is None:
+            e.spill_src = smid         # first spill owns the disk copy
+
+    def dropped(self, e: HostEntry, dmid: int, seq: int) -> None:
+        """Record a dead host copy's release (drop vertex ``dmid``)."""
+        self.arena.set_owner(e.producer, dmid)
+        self.arena.free(dmid, seq)
+        del self.entries[e.key]
+
+    def forget(self, key: int) -> None:
+        """Delete a dead, non-resident entry (its disk blob may linger)."""
+        self.entries.pop(key, None)

@@ -8,8 +8,11 @@ are no malloc/free calls during execution (paper §5).
 
 Components:
 
-* :class:`HostStore` — the pinned host arena (paper §B ``cudaHostAlloc``):
-  holds graph inputs before execution and offloaded tensors during it.
+* storage tiers — :mod:`~repro.core.stores`: :class:`HostStore` (the pinned
+  host arena, paper §B ``cudaHostAlloc``) and :class:`TieredStore` (bounded
+  host RAM backed by a file-based disk tier, DESIGN.md §10). Plans whose
+  compiler emitted SPILL/LOAD vertices automatically execute over a
+  :class:`TieredStore`.
 * memory backends — :class:`SlotTable` (validating: reads require the exact
   planned extent to hold live data, so *any* race or planning bug surfaces as
   a hard error; used by the property tests) and :class:`ByteArena` (a real
@@ -19,15 +22,15 @@ Components:
   every valid order must give identical outputs).
 * :class:`TurnipRuntime` — the threaded event-driven scheduler. Each device
   owns a pool of compute streams plus dedicated DMA streams per direction
-  (h2d/d2h/d2d — the copy-engine structure of
-  :mod:`~repro.core.simulate`), so an OFFLOAD never occupies a compute
-  stream. Threads sleep on condition variables and are woken only by
-  dependency-completion events — there is no polling anywhere. Ready
-  vertices are ranked by a pluggable
-  :class:`~repro.core.dispatch.DispatchPolicy`; ``mode='fixed'`` reproduces
-  the paper's ablation: vertices are *issued* strictly in the compile-time
-  simulation order (head-of-line blocking), though still asynchronous once
-  issued.
+  (h2d/d2h/d2d) and a disk I/O engine for spill/load hops (the engine
+  classes of :mod:`~repro.core.simulate`), so an OFFLOAD never occupies a
+  compute stream and a disk transfer never occupies a DMA lane. Threads
+  sleep on condition variables and are woken only by dependency-completion
+  events — there is no polling anywhere. Ready vertices are ranked by a
+  pluggable :class:`~repro.core.dispatch.DispatchPolicy`; ``mode='fixed'``
+  reproduces the paper's ablation: vertices are *issued* strictly in the
+  compile-time simulation order (head-of-line blocking), though still
+  asynchronous once issued.
 """
 from __future__ import annotations
 
@@ -44,70 +47,22 @@ from .dispatch import (COMPUTE, DispatchPolicy, ENGINE_KINDS, TRANSFER_KINDS,
                        engine_of, get_policy)
 from .memgraph import Loc, MemGraph, MemOp, MemVertex, RaceError
 from .ops import get_op
+from .stores import DiskStore, HostStore, TieredStore
 from .taskgraph import OpKind, TaskGraph
 
-__all__ = ["HostStore", "SlotTable", "ByteArena", "run_in_order",
-           "TurnipRuntime", "RunResult"]
+__all__ = ["HostStore", "DiskStore", "TieredStore", "SlotTable", "ByteArena",
+           "run_in_order", "TurnipRuntime", "RunResult", "make_store"]
 
 
-def _nbytes(value) -> int:
-    """Total bytes of an ndarray or a flat dict of ndarrays (a KV block)."""
-    if isinstance(value, dict):
-        return sum(v.nbytes for v in value.values())
-    return value.nbytes
-
-
-class HostStore:
-    """Host (CPU-RAM) storage: graph inputs + offloaded tensors.
-
-    Keys are opaque hashables: the MEMGRAPH runtime offloads under its
-    OFFLOAD vertex mids, and the serving engine (:mod:`repro.serve`) uses
-    the same arena class with ``(request, block)`` keys (pass one store to
-    both to share a single pinned pool and traffic counters).
-    ``offload_bytes``/``reload_bytes`` count cumulative d2h/h2d traffic;
-    ``resident_bytes`` is current occupancy."""
-
-    def __init__(self, inputs: dict[int, np.ndarray]) -> None:
-        self.inputs = {t: np.asarray(v) for t, v in inputs.items()}
-        self.offloaded: dict[Any, Any] = {}
-        self.offload_bytes = 0
-        self.reload_bytes = 0
-        self.resident_bytes = 0
-        self._lock = threading.Lock()
-
-    def put_offload(self, key, value) -> None:
-        """Store an offloaded tensor (or flat dict of tensors — a serving
-        KV block) under ``key``; counts d2h traffic + occupancy."""
-        n = _nbytes(value)
-        with self._lock:
-            prev = self.offloaded.get(key)
-            if prev is not None:
-                self.resident_bytes -= _nbytes(prev)
-            self.offloaded[key] = value
-            self.offload_bytes += n
-            self.resident_bytes += n
-
-    def get_offload(self, key):
-        """Fetch an offloaded value for reload; counts h2d traffic."""
-        with self._lock:
-            val = self.offloaded[key]
-            self.reload_bytes += _nbytes(val)
-        return val
-
-    def pop_offload(self, key) -> None:
-        """Free a host copy (no traffic: dead data is simply released)."""
-        with self._lock:
-            val = self.offloaded.pop(key, None)
-            if val is not None:
-                self.resident_bytes -= _nbytes(val)
-
-    def get_for_reload(self, v: MemVertex) -> np.ndarray:
-        if v.operands:
-            return self.get_offload(v.operands[0])
-        with self._lock:
-            val = self.inputs[v.src_tid]       # immutable input store
-            self.reload_bytes += val.nbytes
-        return val
+def make_store(mg: MemGraph, inputs: dict[int, np.ndarray]) -> HostStore:
+    """The store a plan needs: a plain :class:`HostStore`, or — when the
+    compiler emitted disk-tier SPILL/LOAD vertices — a :class:`TieredStore`
+    whose spills actually hit files. The caller owns ``close()``."""
+    if any(v.op in (MemOp.SPILL, MemOp.LOAD) for v in mg.vertices.values()):
+        # capacity enforcement lives in the plan (auto_spill off): the
+        # SPILL/LOAD vertices are the Belady-chosen tier traffic
+        return TieredStore(inputs, auto_spill=False)
+    return HostStore(inputs)
 
 
 # --------------------------------------------------------------------------
@@ -207,6 +162,12 @@ def _exec_vertex(v: MemVertex, mg: MemGraph, tg: TaskGraph, mem,
         host.put_offload(v.mid, np.array(val, copy=True))
     elif v.op == MemOp.RELOAD:
         mem.write(v.loc, host.get_for_reload(v))
+    elif v.op == MemOp.SPILL:
+        # second hop of a tiered eviction (host→disk) — or a free release
+        # of dead bytes. operands[0] is the host-store key.
+        host.spill(v.operands[0], drop=bool(v.params.get("drop")))
+    elif v.op == MemOp.LOAD:
+        host.load(v.operands[0])   # first hop of a two-hop reload
     elif v.op == MemOp.ALLOC0:
         spec = tg.vertices[v.src_tid].out
         mem.write(v.loc, np.zeros(spec.shape, spec.np_dtype))
@@ -227,8 +188,10 @@ def _collect_outputs(tg: TaskGraph, res: BuildResult, mem,
         if not tg.consumers(tid):
             kind, ref = res.final_value_location(tid)
             if kind == "host":
-                outs[tid] = (host.offloaded[ref] if ref in host.offloaded
-                             else host.inputs[tid])
+                # peek reads through every tier (a terminal output may have
+                # been spilled to disk) without counting reload traffic
+                val = host.peek_offload(ref)
+                outs[tid] = val if val is not None else host.inputs[tid]
             else:
                 outs[tid] = mem.read(res.memgraph.vertices[ref].loc)
     return outs
@@ -271,11 +234,14 @@ def run_in_order(tg: TaskGraph, res: BuildResult,
         if any(p not in done for p in mg.preds[m]):
             raise ValueError(f"order is not topological at vertex {m}")
         done.add(m)
-    host = HostStore(inputs)
-    mem = SlotTable()
-    for m in order:
-        _exec_vertex(mg.vertices[m], mg, tg, mem, host)
-    return _collect_outputs(tg, res, mem, host)
+    host = make_store(mg, inputs)
+    try:
+        mem = SlotTable()
+        for m in order:
+            _exec_vertex(mg.vertices[m], mg, tg, mem, host)
+        return _collect_outputs(tg, res, mem, host)
+    finally:
+        host.close()
 
 
 # --------------------------------------------------------------------------
@@ -287,11 +253,14 @@ class RunResult:
     makespan: float
     busy: dict[int, float]               # per device: compute-engine seconds
     stall: dict[int, float]              # makespan - busy (per device)
-    transfer_time: dict[str, float]      # per DMA channel: total busy seconds
+    transfer_time: dict[str, float]      # per DMA/disk channel: busy seconds
     offload_bytes: int
     reload_bytes: int
     timeline: list[tuple[float, float, int, str, str]]  # t0,t1,dev,engine,name
     spans: dict[int, tuple[float, float]]  # mid -> (start, end) wall times
+    disk_spill_bytes: int = 0            # host→disk tier traffic
+    disk_load_bytes: int = 0             # disk→host tier traffic
+    peak_host_bytes: int = 0             # host-tier occupancy high-water mark
 
 
 class _Engine:
@@ -332,6 +301,12 @@ class TurnipRuntime:
     before the op runs; it occupies the vertex's stream for that long, which
     emulates slow PCIe transfers on this CPU-only container so scheduling
     choices have observable timing consequences.
+
+    ``store_factory`` — optional ``fn(inputs) -> HostStore``; by default the
+    runtime builds the store the plan needs (:func:`make_store`): a
+    :class:`TieredStore` whenever the compiled plan contains disk-tier
+    SPILL/LOAD vertices. Pass a factory to share a store or pin the disk
+    directory; caller-supplied stores are not closed by the runtime.
     """
 
     def __init__(self, tg: TaskGraph, res: BuildResult, *,
@@ -341,6 +316,7 @@ class TurnipRuntime:
                  latency: Callable[[MemVertex], float] | None = None,
                  backend: str = "slots",
                  capacities: dict[int, int] | None = None,
+                 store_factory: Callable[[dict], HostStore] | None = None,
                  seed: int | None = None) -> None:
         if mode not in ("nondet", "fixed"):
             raise ValueError(mode)
@@ -352,16 +328,29 @@ class TurnipRuntime:
         self.latency = latency
         self.backend = backend
         self.capacities = capacities
+        self.store_factory = store_factory
 
     def run(self, inputs: dict[int, np.ndarray]) -> RunResult:
         mg = self.mg
-        host = HostStore(inputs)
         if self.backend == "bytes":
             if self.capacities is None:
                 raise ValueError("ByteArena backend needs capacities")
             mem: Any = ByteArena(self.capacities)
         else:
             mem = SlotTable()
+        owns_store = self.store_factory is None
+        host = (make_store(mg, inputs) if owns_store
+                else self.store_factory(inputs))
+        try:
+            return self._run(inputs, mem, host)
+        finally:
+            # every exit path (success, worker error, collection RaceError,
+            # KeyboardInterrupt) releases an owned store's disk temp dir
+            if owns_store:
+                host.close()
+
+    def _run(self, inputs: dict[int, np.ndarray], mem, host) -> RunResult:
+        mg = self.mg
         pol = self.policy
         pol.prepare(mg)
 
@@ -537,9 +526,13 @@ class TurnipRuntime:
             if cur_b is not None:
                 busy[d] += cur_b - cur_a
         stall = {d: makespan - busy[d] for d in devices}
+        disk = getattr(host, "disk", None)
         return RunResult(
             outputs=_collect_outputs(self.tg, self.res, mem, host),
             makespan=makespan, busy=busy, stall=stall, transfer_time=chan,
             offload_bytes=host.offload_bytes, reload_bytes=host.reload_bytes,
             timeline=sorted(timeline), spans=spans,
+            disk_spill_bytes=disk.write_bytes if disk else 0,
+            disk_load_bytes=disk.read_bytes if disk else 0,
+            peak_host_bytes=host.peak_resident_bytes,
         )

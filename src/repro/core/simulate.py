@@ -3,9 +3,11 @@
 The container has no accelerator, so wall-clock runs cannot show the paper's
 headline effect (GPU stalls while a transfer finishes). This simulator models
 it hardware-neutrally: each device has a compute engine plus three DMA
-channels (host→device, device→host, device→device) that run concurrently —
-the same concurrency structure as CUDA streams + ``cudaMemcpyAsync`` or TPU
-DMA engines. Durations come from a :class:`HardwareModel`.
+channels (host→device, device→host, device→device) and a disk I/O engine
+(host↔disk spills/loads of the tiered hierarchy, DESIGN.md §10) that run
+concurrently — the same concurrency structure as CUDA streams +
+``cudaMemcpyAsync`` or TPU DMA engines. Durations come from a
+:class:`HardwareModel`.
 
 Two dispatch modes reproduce the paper's ablation (§8, "Fixed execution"):
 
@@ -28,7 +30,8 @@ import dataclasses
 import heapq
 
 from .dispatch import (COMPUTE as _COMPUTE, D2D as _D2D, D2H as _D2H,
-                       DispatchPolicy, ENGINE_OF as _ENGINE_OF, H2D as _H2D,
+                       DISK as _DISK, DispatchPolicy, ENGINE_OF as _ENGINE_OF,
+                       H2D as _H2D, TRANSFER_KINDS as _TRANSFER_KINDS,
                        get_policy)
 from .memgraph import MemGraph, MemOp, MemVertex
 
@@ -47,8 +50,10 @@ class HardwareModel:
     h2d_bw: float = 12e9
     d2h_bw: float = 12e9
     d2d_bw: float = 12e9
+    disk_bw: float = 2.4e9           # host<->disk tier (NVMe-class)
     kernel_overhead: float = 5e-6    # fixed per-kernel launch cost (s)
     dma_latency: float = 10e-6       # fixed per-transfer cost (s)
+    disk_latency: float = 100e-6     # fixed per disk spill/load cost (s)
     # The paper's core hypothesis (§2): offload/reload latencies are
     # "seemingly nondeterministic". jitter is the sigma of a lognormal
     # multiplier on transfer durations (0 = deterministic). The same seeded
@@ -67,6 +72,14 @@ class HardwareModel:
             t_mem = 3.0 * v.nbytes / self.hbm_bw   # read 2 operands + write
             base = self.kernel_overhead + max(t_flops, t_mem)
             return base * self._jit(v.mid, self.compute_jitter)
+        if eng == _DISK:
+            if v.nbytes == 0:          # dedup/drop spill: no bytes move
+                return 0.0
+            # same paired per-vertex jitter draw as the DMA lanes, so
+            # fixed-vs-nondet comparisons stay common-random-numbers even
+            # when the nondeterminism source is the disk tier
+            base = self.disk_latency + v.nbytes / self.disk_bw
+            return base * self._jit(v.mid, self.transfer_jitter)
         bw = {_H2D: self.h2d_bw, _D2H: self.d2h_bw, _D2D: self.d2d_bw}[eng]
         base = self.dma_latency + v.nbytes / bw
         return base * self._jit(v.mid, self.transfer_jitter)
@@ -115,7 +128,8 @@ def simulate(mg: MemGraph, hw: HardwareModel | None = None, *,
 
     verts = mg.vertices
     devices = sorted({v.device for v in verts.values()})
-    engines = [(d, k) for d in devices for k in (_COMPUTE, _H2D, _D2H, _D2D)]
+    engines = [(d, k) for d in devices
+               for k in (_COMPUTE, _H2D, _D2H, _D2D, _DISK)]
     free_at = {e: 0.0 for e in engines}
     queue: dict[tuple[int, str], list] = {e: [] for e in engines}  # ready heaps
     remaining = {m: len(mg.preds[m]) for m in verts}
@@ -124,7 +138,7 @@ def simulate(mg: MemGraph, hw: HardwareModel | None = None, *,
     events: list[tuple[float, int]] = []   # (completion time, mid)
     timeline: list[tuple[float, float, int, str, str]] = []
     busy = {d: 0.0 for d in devices}
-    chan = {k: 0.0 for k in (_H2D, _D2H, _D2D)}
+    chan = {k: 0.0 for k in _TRANSFER_KINDS}
 
     by_seq = sorted(verts, key=lambda m: verts[m].seq)
     seq_ready: dict[int, float] = {}       # mid -> time deps completed

@@ -1,0 +1,350 @@
+"""The storage hierarchy behind the MEMGRAPH runtime and the serving engine.
+
+TURNIP's premise is that "inexpensive CPU RAM is used to increase the amount
+of storage available" — but CPU RAM is itself finite, and online serving
+workloads (NEO, PAPERS.md) hit the host-RAM ceiling first. This module
+models the full hierarchy::
+
+    device HBM  --d2h/h2d-->  host RAM (pinned arena)  --disk I/O-->  disk
+
+* :class:`HostStore` — the unbounded pinned host arena (paper §B
+  ``cudaHostAlloc``): graph inputs + offloaded tensors, with traffic,
+  occupancy, and peak counters.
+* :class:`DiskStore` — the next rung: a file-backed blob store (one
+  ``.npz`` per key) with its own traffic/occupancy/peak counters.
+* :class:`TieredStore` — a :class:`HostStore` whose offload arena is
+  capacity-bounded and backed by a :class:`DiskStore`. Victims can be
+  chosen two ways, matching the compiler/runtime split:
+
+  - **plan-driven** (the MEMGRAPH path): ``host_capacity=None`` and the
+    compiled plan's SPILL/LOAD vertices call :meth:`spill`/:meth:`load`
+    explicitly — the compiler already chose victims Belady-optimally over
+    the serialized schedule (``build.py``);
+  - **auto-LRU** (the serving path, or standalone use): ``host_capacity``
+    set and ``auto_spill=True`` spills the least-recently-touched keys on
+    overflow — at runtime the future is unknown, so recency is the best
+    available signal. The serving engine instead sets ``auto_spill=False``
+    and drives spills through a dedicated disk DMA stream so the I/O cost
+    lands on a timeline, not inside ``put_offload``.
+
+Tier choice must never change results, only timing: :meth:`get_offload`
+reads *through* to disk, so a value is always recoverable no matter which
+tier currently holds its bytes.
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import shutil
+import tempfile
+import threading
+from typing import Any
+
+import numpy as np
+
+__all__ = ["HostStore", "DiskStore", "TieredStore"]
+
+
+def _nbytes(value) -> int:
+    """Total bytes of an ndarray or a flat dict of ndarrays (a KV block)."""
+    if isinstance(value, dict):
+        return sum(v.nbytes for v in value.values())
+    return value.nbytes
+
+
+class HostStore:
+    """Host (CPU-RAM) storage: graph inputs + offloaded tensors.
+
+    Keys are opaque hashables: the MEMGRAPH runtime offloads under its
+    OFFLOAD vertex mids, and the serving engine (:mod:`repro.serve`) uses
+    the same arena class with ``(request, block)`` keys (pass one store to
+    both to share a single pinned pool and traffic counters).
+    ``offload_bytes``/``reload_bytes`` count cumulative d2h/h2d traffic;
+    ``resident_bytes`` is current occupancy and ``peak_resident_bytes``
+    its high-water mark."""
+
+    def __init__(self, inputs: dict[int, np.ndarray]) -> None:
+        self.inputs = {t: np.asarray(v) for t, v in inputs.items()}
+        self.offloaded: dict[Any, Any] = {}
+        self.offload_bytes = 0
+        self.reload_bytes = 0
+        self.resident_bytes = 0
+        self.peak_resident_bytes = 0
+        self._lock = threading.Lock()
+
+    # subclass hooks (no-ops here) -------------------------------------
+    def _touch(self, key) -> None:
+        """Record a use of ``key`` for recency-based victim choice."""
+
+    def _admit_locked(self, key) -> None:
+        """Called (lock held) after ``key`` lands in the host arena."""
+
+    def put_offload(self, key, value) -> None:
+        """Store an offloaded tensor (or flat dict of tensors — a serving
+        KV block) under ``key``; counts d2h traffic + occupancy."""
+        n = _nbytes(value)
+        with self._lock:
+            prev = self.offloaded.get(key)
+            if prev is not None:
+                self.resident_bytes -= _nbytes(prev)
+            self.offloaded[key] = value
+            self.offload_bytes += n
+            self.resident_bytes += n
+            self.peak_resident_bytes = max(self.peak_resident_bytes,
+                                           self.resident_bytes)
+            self._admit_locked(key)
+
+    def get_offload(self, key):
+        """Fetch an offloaded value for reload; counts h2d traffic."""
+        with self._lock:
+            val = self.offloaded[key]
+            self.reload_bytes += _nbytes(val)
+            self._touch(key)
+        return val
+
+    def pop_offload(self, key) -> None:
+        """Free a host copy (no traffic: dead data is simply released)."""
+        with self._lock:
+            val = self.offloaded.pop(key, None)
+            if val is not None:
+                self.resident_bytes -= _nbytes(val)
+
+    def peek_offload(self, key):
+        """Read a value without counting traffic (final-output collection).
+        Returns ``None`` when no copy exists on any tier."""
+        with self._lock:
+            return self.offloaded.get(key)
+
+    def tier_of(self, key) -> str | None:
+        """Which tier currently holds ``key``'s bytes (``None`` = nowhere)."""
+        with self._lock:
+            return "host" if key in self.offloaded else None
+
+    def get_for_reload(self, v) -> np.ndarray:
+        """RELOAD vertex read: the offloaded copy (operands[0] is the host
+        key) or the immutable input store."""
+        if v.operands:
+            return self.get_offload(v.operands[0])
+        with self._lock:
+            val = self.inputs[v.src_tid]       # immutable input store
+            self.reload_bytes += val.nbytes
+        return val
+
+    def close(self) -> None:
+        """Release any backing resources (no-op for a pure host store)."""
+
+
+class DiskStore:
+    """File-backed blob store — the disk tier of the hierarchy.
+
+    One ``.npz`` file per key under ``directory`` (a private temp dir by
+    default, removed on :meth:`close`). Values are ndarrays or flat dicts
+    of ndarrays (serving KV blocks). ``write_bytes``/``read_bytes`` count
+    cumulative spill/load traffic; ``resident_bytes``/``peak_resident_bytes``
+    track occupancy."""
+
+    _ARR = "__arr__"          # npz field name for a bare-ndarray value
+
+    def __init__(self, directory: str | os.PathLike | None = None) -> None:
+        self._dir = pathlib.Path(directory) if directory is not None else None
+        self._owns_dir = directory is None
+        self._files: dict[Any, tuple[pathlib.Path, int]] = {}
+        self._counter = 0
+        self.write_bytes = 0
+        self.read_bytes = 0
+        self.resident_bytes = 0
+        self.peak_resident_bytes = 0
+        self._lock = threading.Lock()
+
+    def _root(self) -> pathlib.Path:
+        if self._dir is None:
+            self._dir = pathlib.Path(tempfile.mkdtemp(prefix="turnip-disk-"))
+        else:
+            self._dir.mkdir(parents=True, exist_ok=True)
+        return self._dir
+
+    def __contains__(self, key) -> bool:
+        with self._lock:
+            return key in self._files
+
+    def put(self, key, value) -> int:
+        """Write ``key``'s bytes to disk; returns the payload size."""
+        payload = value if isinstance(value, dict) else {self._ARR: value}
+        n = _nbytes(value)
+        with self._lock:
+            root = self._root()
+            path, _ = self._files.get(key, (None, 0))
+            if path is None:
+                path = root / f"blob_{self._counter:06d}.npz"
+                self._counter += 1
+            else:
+                self.resident_bytes -= self._files[key][1]
+            np.savez(path, **{k: np.asarray(v) for k, v in payload.items()})
+            self._files[key] = (path, n)
+            self.write_bytes += n
+            self.resident_bytes += n
+            self.peak_resident_bytes = max(self.peak_resident_bytes,
+                                           self.resident_bytes)
+        return n
+
+    def get(self, key, *, count: bool = True):
+        with self._lock:
+            path, n = self._files[key]
+            if count:
+                self.read_bytes += n
+        with np.load(path) as data:
+            if set(data.files) == {self._ARR}:
+                return data[self._ARR]
+            return {k: data[k] for k in data.files}
+
+    def drop(self, key) -> None:
+        with self._lock:
+            entry = self._files.pop(key, None)
+            if entry is None:
+                return
+            path, n = entry
+            self.resident_bytes -= n
+        path.unlink(missing_ok=True)
+
+    def close(self) -> None:
+        with self._lock:
+            self._files.clear()
+            self.resident_bytes = 0
+            d, self._dir = self._dir, None
+        if d is not None and self._owns_dir:
+            shutil.rmtree(d, ignore_errors=True)
+
+
+class TieredStore(HostStore):
+    """Capacity-bounded host tier backed by a disk tier.
+
+    The host arena keeps :class:`HostStore` semantics (and counters); on
+    top of it:
+
+    * :meth:`spill` moves a key's bytes host→disk (a no-op write when an
+      immutable disk copy already exists — the disk analogue of
+      ``reuse_host_copy``), or drops them entirely for dead data;
+    * :meth:`load` stages a disk copy back into host RAM (the first hop of
+      a ``disk→host→device`` reload chain);
+    * :meth:`get_offload` reads through: if only the disk copy exists, it
+      is loaded (and its I/O counted) transparently — a racy or
+      plan-driven order can therefore never change results, only timing;
+    * with ``auto_spill=True`` (standalone use), :meth:`put_offload`
+      evicts least-recently-touched keys once ``host_capacity`` would be
+      exceeded — the runtime-LRU complement of the compiler's
+      Belady-over-the-schedule victim choice.
+    """
+
+    def __init__(self, inputs: dict[int, np.ndarray], *,
+                 host_capacity: int | None = None,
+                 disk: DiskStore | None = None,
+                 directory: str | os.PathLike | None = None,
+                 auto_spill: bool = True) -> None:
+        super().__init__(inputs)
+        self.host_capacity = host_capacity
+        self.disk = disk if disk is not None else DiskStore(directory)
+        self._owns_disk = disk is None
+        self.auto_spill = auto_spill
+        self._lru: dict[Any, int] = {}       # key -> last-touch counter
+        self._tick = 0
+
+    # ------------------------------------------------------------- hooks
+    def _touch(self, key) -> None:
+        self._tick += 1
+        self._lru[key] = self._tick
+
+    def _admit_locked(self, key) -> None:
+        self._touch(key)
+        if not self.auto_spill or self.host_capacity is None:
+            return
+        while (self.resident_bytes > self.host_capacity
+               and len(self.offloaded) > 1):
+            victim = min((k for k in self.offloaded if k != key),
+                         key=lambda k: self._lru.get(k, 0), default=None)
+            if victim is None:
+                break
+            self._spill_locked(victim)
+
+    # ------------------------------------------------------------- tiers
+    def _spill_locked(self, key, *, drop: bool = False) -> int:
+        val = self.offloaded.pop(key, None)
+        if val is not None:
+            self.resident_bytes -= _nbytes(val)
+        self._lru.pop(key, None)
+        if drop:
+            self.disk.drop(key)
+            return 0
+        if val is not None and key not in self.disk:
+            return self.disk.put(key, val)
+        return 0
+
+    def spill(self, key, *, drop: bool = False) -> int:
+        """Evict ``key``'s bytes from the host arena; returns the bytes
+        actually written to disk. ``drop=True`` means the data is dead:
+        release every copy without any disk write. When an immutable disk
+        copy already exists the host bytes are simply released (no second
+        write, 0 returned). No-op (0) when the key is not host-resident."""
+        with self._lock:
+            return self._spill_locked(key, drop=drop)
+
+    def load(self, key):
+        """Stage ``key``'s disk copy back into host RAM (disk-read traffic
+        counted; the disk copy stays valid). Idempotent when the bytes are
+        already host-resident."""
+        with self._lock:
+            if key in self.offloaded:
+                self._touch(key)
+                return self.offloaded[key]
+        val = self.disk.get(key)
+        with self._lock:
+            if key not in self.offloaded:
+                self.offloaded[key] = val
+                self.resident_bytes += _nbytes(val)
+                self.peak_resident_bytes = max(self.peak_resident_bytes,
+                                               self.resident_bytes)
+            self._touch(key)
+            return self.offloaded[key]
+
+    # --------------------------------------------------- HostStore surface
+    def get_offload(self, key):
+        with self._lock:
+            val = self.offloaded.get(key)
+            if val is not None:
+                self.reload_bytes += _nbytes(val)
+                self._touch(key)
+                return val
+        # read-through: two-hop reload (disk→host staging, then h2d)
+        val = self.load(key)
+        with self._lock:
+            self.reload_bytes += _nbytes(val)
+        return val
+
+    def pop_offload(self, key) -> None:
+        super().pop_offload(key)
+        with self._lock:
+            self._lru.pop(key, None)
+        self.disk.drop(key)
+
+    def peek_offload(self, key):
+        with self._lock:
+            if key in self.offloaded:
+                return self.offloaded[key]
+        if key in self.disk:
+            return self.disk.get(key, count=False)
+        return None
+
+    def tier_of(self, key) -> str | None:
+        with self._lock:
+            if key in self.offloaded:
+                return "host"
+        return "disk" if key in self.disk else None
+
+    def lru_keys(self) -> list:
+        """Host-resident keys, least-recently-touched first — the serving
+        engine's spill-candidate order."""
+        with self._lock:
+            return sorted(self.offloaded, key=lambda k: self._lru.get(k, 0))
+
+    def close(self) -> None:
+        if self._owns_disk:
+            self.disk.close()

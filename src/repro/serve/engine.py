@@ -29,6 +29,15 @@ rather than a caveat:
   blocks of concurrently decoding requests interleave, so no request
   resumes until nearly all transfers finish: §8's head-of-line pathology),
   while ``critical-path`` completes the request that can resume soonest.
+* **A bounded host tier with disk spill.** ``host_kv_bytes`` caps the
+  host-RAM KV mirror (online serving hits the CPU-RAM ceiling first —
+  NEO, PAPERS.md): past it, least-recently-used mirrored blocks spill to
+  a file-backed :class:`~repro.core.stores.TieredStore` disk tier on a
+  dedicated disk stream (:data:`~repro.core.dispatch.DISK` — spills and
+  loads never occupy a DMA lane), and a swapped request's disk-resident
+  blocks resume through pipelined two-hop ``disk→host→device`` chains,
+  with ``critical-path`` issuing the slow disk loads ahead of background
+  spills. Tier placement changes timing only — never tokens.
 
 Sampling uses a per-``(seed, request, position)`` key schedule, so a
 request's tokens are independent of batch composition, padding, offload,
@@ -46,8 +55,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.dispatch import D2H, H2D, DispatchPolicy
-from ..core.runtime import HostStore
+from ..core.dispatch import D2H, DISK, H2D, DispatchPolicy
+from ..core.stores import HostStore, TieredStore
 from .kv_cache import PagedKVCache
 
 __all__ = ["ServeConfig", "Engine", "Request", "ServeStats",
@@ -76,6 +85,14 @@ class ServeConfig:
     #                                   request may be swapped out for a
     #                                   waiter (0 = never preempt)
     reload_policy: str = "critical-path"   # fixed|random|critical-path
+    # ---- disk tier (second threshold of the hierarchy) ----------------
+    # host_kv_bytes bounds the host-RAM KV mirror: once occupancy passes
+    # it, the engine spills least-recently-used mirrored blocks to a
+    # file-backed disk tier on a dedicated disk stream (NEO's CPU-RAM
+    # ceiling made runnable). Reloading a disk-resident block is a
+    # pipelined two-hop disk→host→device chain. None = unbounded host.
+    host_kv_bytes: int | None = None
+    disk_bw: float = 2.4e9
     # simulated PCIe (the container has no accelerator; wire time is slept
     # on the DMA thread, exactly like TurnipRuntime's `latency` injection)
     h2d_bw: float = 12e9
@@ -113,6 +130,8 @@ class ServeStats:
     swaps: int = 0
     offload_bytes: int = 0
     reload_bytes: int = 0
+    disk_spill_bytes: int = 0         # host→disk tier traffic
+    disk_load_bytes: int = 0          # disk→host tier traffic
     kv_bytes_written: int = 0
 
     @property
@@ -132,11 +151,12 @@ class ServeStats:
 # --------------------------------------------------------------------------
 @dataclasses.dataclass
 class _Transfer:
-    kind: str                         # dispatch.D2H | dispatch.H2D
+    kind: str                         # dispatch.D2H | dispatch.H2D | dispatch.DISK
     rid: int
     blk: int
     seq: int                          # block-creation order (see below)
     nbytes: int
+    disk_op: str = ""                 # DISK transfers: "spill" | "load"
 
 
 class ReloadPolicy(DispatchPolicy):
@@ -185,7 +205,8 @@ class RandomReloadPolicy(ReloadPolicy):
     def priority(self, tr: _Transfer) -> float:
         # integer-only mixing: builtin hash() of strings is salted per
         # process (PYTHONHASHSEED), which would defeat the seed
-        ident = tr.rid * 2654435761 + tr.blk * 40503 + (tr.kind == H2D)
+        ident = (tr.rid * 2654435761 + tr.blk * 40503 + (tr.kind == H2D)
+                 + (tr.kind == DISK) * 7919 + (tr.disk_op == "spill") * 104729)
         return random.Random(
             (self.seed * 1000003 + 0x9E3779B9) ^ ident).random()
 
@@ -193,7 +214,11 @@ class RandomReloadPolicy(ReloadPolicy):
 class CriticalPathReloadPolicy(ReloadPolicy):
     """Complete the request that can resume soonest: fewest outstanding
     transfers first, most remaining decode work as tie-break — the serving
-    analogue of longest-path-first list scheduling."""
+    analogue of longest-path-first list scheduling.
+
+    On the disk stream, loads (a blocked request's two-hop reload — the
+    long pole) always outrank spills (background tier maintenance), so
+    disk-resident blocks of resuming requests are issued earliest."""
 
     name = "critical-path"
 
@@ -201,6 +226,8 @@ class CriticalPathReloadPolicy(ReloadPolicy):
         req = self.engine.reqs.get(tr.rid)
         if req is None:                    # released mid-flight: drain first
             return -1e12
+        if tr.disk_op == "spill":
+            return 1e12                    # never ahead of a pending load
         remaining_work = req.max_new - len(req.out)
         return len(req.inflight) * 1e6 - remaining_work
 
@@ -303,9 +330,11 @@ class Engine:
 
     def __init__(self, model, params, cfg: ServeConfig = ServeConfig(), *,
                  host: HostStore | None = None):
-        """``host``: pass a runtime's :class:`HostStore` to share one
-        pinned host pool (and its traffic counters) with it; by default
-        the engine owns a private arena."""
+        """``host``: pass a runtime's :class:`HostStore` (or
+        :class:`TieredStore`) to share one pinned host pool (and its
+        traffic counters) with it; by default the engine owns a private
+        arena — tiered (host + disk) when ``cfg.host_kv_bytes`` bounds the
+        KV mirror, plain otherwise."""
         if model.cfg.family not in ("dense", "moe"):
             raise ValueError("serving engine requires a KV-cache family "
                              f"(dense/moe), got {model.cfg.family!r}")
@@ -314,7 +343,19 @@ class Engine:
         self.model = model
         self.params = params
         self.cfg = cfg
-        self.host = host if host is not None else HostStore({})
+        if host is not None:
+            self.host = host
+            self._owns_host = False
+        elif cfg.host_kv_bytes is not None:
+            # spills are engine-driven (auto_spill off) so the disk I/O
+            # cost lands on the disk stream's timeline, not inside put
+            self.host = TieredStore({}, host_capacity=cfg.host_kv_bytes,
+                                    auto_spill=False)
+            self._owns_host = True
+        else:
+            self.host = HostStore({})
+            self._owns_host = True
+        self._tiered = isinstance(self.host, TieredStore)
         self.reqs: dict[int, Request] = {}
         self._live: set[int] = set()                # rids not yet DONE
         self.stats = ServeStats()
@@ -335,6 +376,8 @@ class Engine:
         self._wake = threading.Condition(self._lock)
         self._d2h: _DmaStream | None = None
         self._h2d: _DmaStream | None = None
+        self._disk: _DmaStream | None = None
+        self._spill_inflight: set[tuple[int, int]] = set()
 
     # ------------------------------------------------------------- public
     def submit(self, prompt, max_new: int = 32) -> int:
@@ -359,6 +402,20 @@ class Engine:
             self._queue.append(rid)
             self._wake.notify_all()     # a stalled run() picks it up now
         return rid
+
+    def close(self) -> None:
+        """Release the engine-owned store's backing resources (the disk
+        tier's temp directory and spilled blobs). Idempotent; a shared
+        ``host`` store passed in by the caller is left untouched. A
+        long-lived service should close the engine when retiring it."""
+        if self._owns_host:
+            self.host.close()
+
+    def __enter__(self) -> "Engine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     def release(self, rid: int) -> None:
         """Drop a finished request's record. Finished requests otherwise
@@ -395,12 +452,19 @@ class Engine:
                                self._service_d2h, self._lock)
         self._h2d = _DmaStream(H2D, cfg.h2d_bw, cfg.dma_latency, pol,
                                self._service_h2d, self._lock)
-        self._d2h.start()
-        self._h2d.start()
+        streams = [self._d2h, self._h2d]
+        if self._tiered:
+            # the disk tier's own engine class: spills/loads never occupy
+            # (or wait behind) the h2d/d2h DMA lanes
+            self._disk = _DmaStream(DISK, cfg.disk_bw, cfg.dma_latency, pol,
+                                    self._service_disk, self._lock)
+            streams.append(self._disk)
+        for stream in streams:
+            stream.start()
         try:
             while True:
                 with self._lock:
-                    for stream in (self._d2h, self._h2d):
+                    for stream in streams:
                         if stream.error is not None:
                             raise stream.error
                     self._apply_events_locked()
@@ -409,6 +473,7 @@ class Engine:
                     self._prefill_admit(admits)
                 with self._lock:
                     self._schedule_offload_locked()
+                    self._schedule_spill_locked()
                     self._schedule_preempt_locked()
                     active = [(s, r) for s, r in enumerate(self._slots)
                               if r is not None
@@ -421,10 +486,11 @@ class Engine:
                     self._stall_wait()
         finally:
             with self._lock:
-                self._d2h.shutdown()
-                self._h2d.shutdown()
-            self._d2h.join()
-            self._h2d.join()
+                for stream in streams:
+                    stream.shutdown()
+                self._spill_inflight.clear()
+            for stream in streams:
+                stream.join()
         return self.stats
 
     # -------------------------------------------------- DMA service hooks
@@ -467,6 +533,46 @@ class Engine:
             if req is not None:
                 req.inflight.discard(tr.blk)
                 self._events.append(("reload", tr.rid, tr.blk, data))
+            self._wake.notify_all()
+
+    def _service_disk(self, tr: _Transfer) -> None:
+        """Disk-stream service: ``spill`` moves a cold host block to the
+        file tier, ``load`` stages a disk block back into host RAM and
+        chains the h2d hop (the pipelined two-hop reload). Runs after the
+        simulated disk wire time. Load file I/O happens off the engine
+        lock (the store has its own lock) and overlaps under decode; the
+        spill's small block write deliberately stays *under* the lock —
+        admissions hold the same lock, so a swap-in can never claim a
+        block mid-spill and drag the disk read onto the h2d lane via
+        read-through. One block's write is cheap; the invariant is not."""
+        key = (tr.rid, tr.blk)
+        if tr.disk_op == "spill":
+            with self._lock:
+                self._spill_inflight.discard(key)
+                req = self.reqs.get(tr.rid)
+                ok = (req is not None and req.state != DONE
+                      and tr.blk not in req.pending_reload
+                      and tr.blk not in req.inflight)
+                if ok:
+                    # under the engine lock: admissions also hold it, so a
+                    # swap-in can never claim the block between this check
+                    # and the spill (which would push the disk read onto
+                    # the h2d lane via read-through). The write itself is
+                    # one small block; the wire time was slept off-lock.
+                    self.stats.disk_spill_bytes += self.host.spill(key)
+                self._wake.notify_all()
+            return
+        # load: read-through staging is idempotent, so a racy spill/reload
+        # interleaving can only change timing, never bytes
+        self.host.load(key)
+        with self._lock:
+            self.stats.disk_load_bytes += tr.nbytes
+            req = self.reqs.get(tr.rid)
+            if req is not None and tr.blk in req.pending_reload:
+                self._h2d.submit(_Transfer(H2D, tr.rid, tr.blk, tr.seq,
+                                           tr.nbytes))
+            elif req is not None:        # swap-in abandoned mid-flight
+                req.inflight.discard(tr.blk)
             self._wake.notify_all()
 
     # ------------------------------------------------------ event applies
@@ -544,7 +650,9 @@ class Engine:
             self.reqs[rid].slot = slot
             admits.append((slot, rid))
 
-        # swap-ins: every cached block reloads through the h2d stream
+        # swap-ins: host-resident blocks reload through the h2d stream;
+        # disk-resident blocks take the pipelined two-hop chain (disk
+        # stream load first, h2d hop chained on its completion)
         while free and self._swapped:
             rid = self._swapped.pop(0)
             req = self.reqs[rid]
@@ -555,18 +663,24 @@ class Engine:
             blocks = range(self.kv.n_token_blocks(req.pos))
             req.pending_reload = set(blocks)
             for blk in blocks:
-                self._submit_transfer_locked(self._h2d, req, blk)
+                if (self._tiered
+                        and self.host.tier_of((rid, blk)) == "disk"):
+                    self._submit_transfer_locked(self._disk, req, blk,
+                                                 disk_op="load")
+                else:
+                    self._submit_transfer_locked(self._h2d, req, blk)
         return admits
 
     def _submit_transfer_locked(self, stream: _DmaStream, req: Request,
-                                blk: int) -> None:
+                                blk: int, *, disk_op: str = "") -> None:
         key = (req.rid, blk)
         if key not in self._block_seq:
             self._block_seq[key] = self._seq_counter
             self._seq_counter += 1
         req.inflight.add(blk)
         stream.submit(_Transfer(stream.kind, req.rid, blk,
-                                self._block_seq[key], self.kv.block_nbytes))
+                                self._block_seq[key], self.kv.block_nbytes,
+                                disk_op=disk_op))
 
     # ------------------------------------------------------------ prefill
     def _prefill_admit(self, admits: list[tuple[int, int]]) -> None:
@@ -646,6 +760,37 @@ class Engine:
                 if blk not in req.mirrored and blk not in req.inflight:
                     self._submit_transfer_locked(self._d2h, req, blk)
 
+    def _schedule_spill_locked(self) -> None:
+        """Second threshold of the hierarchy: once the host KV mirror
+        passes ``host_kv_bytes``, push the least-recently-used mirrored
+        blocks down to the disk tier. Runs on the dedicated disk stream
+        (never the h2d/d2h DMA lanes); victim choice is LRU because at
+        runtime the request future is unknown — the serving counterpart of
+        the compiler's Belady-over-the-schedule spills."""
+        cap = self.cfg.host_kv_bytes
+        if not self._tiered or cap is None or self._disk is None:
+            return
+        budget = (self.host.resident_bytes
+                  - len(self._spill_inflight) * self.kv.block_nbytes - cap)
+        if budget <= 0:
+            return
+        for key in self.host.lru_keys():
+            if budget <= 0:
+                break
+            if key not in self._block_seq or key in self._spill_inflight:
+                continue                    # not a serving block / queued
+            rid, blk = key
+            req = self.reqs.get(rid)
+            if (req is None or req.state == RELOADING
+                    or blk in req.inflight or blk in req.pending_reload):
+                continue
+            self._spill_inflight.add(key)
+            self._disk.submit(_Transfer(DISK, rid, blk,
+                                        self._block_seq[key],
+                                        self.kv.block_nbytes,
+                                        disk_op="spill"))
+            budget -= self.kv.block_nbytes
+
     def _schedule_preempt_locked(self) -> None:
         """Swap out requests that exhausted their decode quantum while
         others wait — the continuous-batching fairness lever, and the
@@ -707,6 +852,8 @@ class Engine:
         t0 = time.perf_counter()
         with self._wake:
             busy = (self._events or self._d2h.pending or self._h2d.pending
+                    or (self._disk is not None and self._disk.pending)
+                    or self._spill_inflight
                     or any(self.reqs[r].inflight for r in self._live))
             if not busy and not self._queue and not self._swapped:
                 states = {r: self.reqs[r].state for r in self._live}

@@ -8,9 +8,11 @@ fixed byte range for the whole serving run — no allocation happens per
 token, and every transfer moves a whole extent.
 
 This class is pure device-side geometry + extent I/O; the owning engine
-moves the payloads through a :class:`~repro.core.runtime.HostStore` on its
-DMA streams. Blocks are the offload unit (NEO / SpecOffload direction,
-PAPERS.md):
+moves the payloads through a :class:`~repro.core.stores.HostStore` (or,
+when ``host_kv_bytes`` bounds the mirror, a
+:class:`~repro.core.stores.TieredStore` whose cold blocks continue down to
+a file-backed disk tier) on its DMA and disk streams. Blocks are the
+offload unit (NEO / SpecOffload direction, PAPERS.md):
 
 * :meth:`read_block`   — device→host snapshot of one block (a d2h payload);
 * :meth:`write_block`  — host→device restore of one block (an h2d payload);

@@ -1,0 +1,114 @@
+"""Checkpoint fault tolerance: real sharding (size-threshold leaf packing),
+per-file digests, and restore falling back to the newest *complete* step
+when the latest checkpoint is corrupt or truncated."""
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.ckpt.store import (complete_steps, latest_step,
+                              restore_checkpoint, save_checkpoint)
+
+
+def tree_at(step: int) -> dict:
+    return {
+        "params": {
+            "w0": np.full((64, 64), float(step), np.float32),   # 16 KiB
+            "w1": np.full((64, 64), float(step + 1), np.float32),
+            "w2": np.full((32,), float(step + 2), np.float32),
+        },
+        "step": np.int32(step),
+    }
+
+
+def save_small_shards(tmp_path, step):
+    """Force multi-shard layout: threshold below one big leaf's bytes."""
+    return save_checkpoint(tmp_path, step, tree_at(step),
+                           shard_bytes=8 * 1024)
+
+
+class TestSharding:
+    def test_leaves_split_across_shards(self, tmp_path):
+        p = save_small_shards(tmp_path, 3)
+        shards = sorted(f.name for f in p.glob("shard_*.npz"))
+        assert len(shards) >= 3          # two 16 KiB leaves can't share one
+        manifest = json.loads((p / "MANIFEST.json").read_text())
+        assert set(manifest["files"]) == set(shards)
+        assert {l["file"] for l in manifest["leaves"]} == set(shards)
+        # per-file digests: every shard is covered
+        assert all(len(d) == 64 for d in manifest["files"].values())
+
+    def test_multi_shard_roundtrip(self, tmp_path):
+        t = tree_at(5)
+        save_small_shards(tmp_path, 5)
+        got, step = restore_checkpoint(tmp_path, t)
+        assert step == 5
+        for a, b in zip(np.asarray(got["params"]["w1"]).ravel(),
+                        t["params"]["w1"].ravel()):
+            assert a == b
+        np.testing.assert_array_equal(got["params"]["w2"],
+                                      t["params"]["w2"])
+
+    def test_monolithic_default_still_single_shard(self, tmp_path):
+        p = save_checkpoint(tmp_path, 1, tree_at(1))   # default threshold
+        assert sorted(f.name for f in p.glob("shard_*.npz")) == \
+            ["shard_0.npz"]
+
+
+def _corrupt(path: pathlib.Path) -> None:
+    data = bytearray(path.read_bytes())
+    data[len(data) // 2] ^= 0xFF
+    path.write_bytes(bytes(data))
+
+
+class TestFallback:
+    def test_corrupt_newest_shard_falls_back(self, tmp_path):
+        save_small_shards(tmp_path, 3)
+        p9 = save_small_shards(tmp_path, 9)
+        _corrupt(next(iter(sorted(p9.glob("shard_*.npz")))))
+        assert latest_step(tmp_path) == 9          # manifest still there...
+        assert complete_steps(tmp_path) == [3]     # ...but step 9 is broken
+        got, step = restore_checkpoint(tmp_path, tree_at(3))
+        assert step == 3                           # newest COMPLETE step
+        np.testing.assert_array_equal(got["params"]["w0"],
+                                      tree_at(3)["params"]["w0"])
+
+    def test_corrupt_manifest_falls_back(self, tmp_path):
+        save_small_shards(tmp_path, 2)
+        p7 = save_small_shards(tmp_path, 7)
+        (p7 / "MANIFEST.json").write_text("{ not json")
+        got, step = restore_checkpoint(tmp_path, tree_at(2))
+        assert step == 2
+
+    def test_missing_shard_falls_back(self, tmp_path):
+        save_small_shards(tmp_path, 4)
+        p8 = save_small_shards(tmp_path, 8)
+        sorted(p8.glob("shard_*.npz"))[-1].unlink()
+        _, step = restore_checkpoint(tmp_path, tree_at(4))
+        assert step == 4
+
+    def test_all_corrupt_raises(self, tmp_path):
+        p = save_small_shards(tmp_path, 6)
+        for shard in p.glob("shard_*.npz"):
+            _corrupt(shard)
+        with pytest.raises(IOError, match="corruption"):
+            restore_checkpoint(tmp_path, tree_at(6))
+
+    def test_explicit_step_never_falls_back(self, tmp_path):
+        save_small_shards(tmp_path, 1)
+        p5 = save_small_shards(tmp_path, 5)
+        _corrupt(next(iter(p5.glob("shard_*.npz"))))
+        with pytest.raises(IOError, match="corruption"):
+            restore_checkpoint(tmp_path, tree_at(5), step=5)
+
+    def test_shape_mismatch_not_swallowed_by_fallback(self, tmp_path):
+        """Structure errors mean the caller asked for the wrong tree —
+        falling back to an older step would silently restore stale
+        params."""
+        save_small_shards(tmp_path, 2)
+        save_small_shards(tmp_path, 9)
+        bad = tree_at(9)
+        bad["params"]["w0"] = np.zeros((3, 3), np.float32)
+        with pytest.raises(ValueError):
+            restore_checkpoint(tmp_path, bad)

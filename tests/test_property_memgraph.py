@@ -110,15 +110,55 @@ def test_bytewise_variable_sizes(tg, seed):
         np.testing.assert_array_equal(out[k], ref[k])
 
 
+@settings(max_examples=30, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(tg=taskgraphs(), cap=budgets(), host_cap=st.integers(1, 6),
+       reuse=st.booleans(), seed=st.integers(0, 2**16))
+def test_tiered_host_matches_unbounded_oracle(tg, cap, host_cap, reuse, seed):
+    """Tier transparency: ANY host-capacity/disk configuration reproduces
+    the unbounded-host oracle bit-for-bit under arbitrary execution orders,
+    and the host-tier budget holds along the schedule. Tier choice changes
+    timing only — never results."""
+    cfg = BuildConfig(capacity=cap, size_fn=lambda v: 1,
+                      reuse_host_copy=reuse, rng_seed=seed,
+                      host_capacity=host_cap)
+    try:
+        res = build_memgraph(tg, cfg)
+    except MemgraphOOM:
+        return  # infeasible device or host budget: OK
+    mg = res.memgraph
+    # acyclic + race-free + within BOTH budgets
+    mg.validate(check_races=True, host_capacity=host_cap)
+    assert max(res.peak_used.values()) <= cap
+    assert res.peak_host <= host_cap
+
+    rng = np.random.default_rng(seed)
+    inputs = {t: rng.integers(-3, 4, v.out.shape).astype(np.float64)
+              for t, v in tg.vertices.items() if v.kind == OpKind.INPUT}
+    ref = eval_taskgraph(tg, inputs)
+
+    orders = [None]
+    for i in range(2):
+        r = pyrandom.Random(seed + i)
+        orders.append(mg.topo_order(key=lambda m: r.random()))
+    for order in orders:
+        out = run_in_order(tg, res, inputs, order)
+        assert set(out) == set(ref)
+        for k in ref:
+            np.testing.assert_array_equal(out[k], ref[k], err_msg=f"out {k}")
+
+
 @settings(max_examples=15, deadline=None,
           suppress_health_check=[HealthCheck.too_slow])
-@given(tg=taskgraphs(), cap=budgets(), seed=st.integers(0, 2**16))
-def test_forward_seq_edges(tg, cap, seed):
+@given(tg=taskgraphs(), cap=budgets(), host_cap=st.one_of(
+    st.none(), st.integers(1, 6)), seed=st.integers(0, 2**16))
+def test_forward_seq_edges(tg, cap, host_cap, seed):
     """Every dependency edge points forward in simulation order — the §7
-    acyclicity argument, checked directly."""
+    acyclicity argument, checked directly (disk-tier chains included)."""
     try:
         res = build_memgraph(tg, BuildConfig(
-            capacity=cap, size_fn=lambda v: 1, rng_seed=seed))
+            capacity=cap, size_fn=lambda v: 1, rng_seed=seed,
+            host_capacity=host_cap))
     except MemgraphOOM:
         return
     mg = res.memgraph

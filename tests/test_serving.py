@@ -188,6 +188,46 @@ def test_stale_transfer_after_release_is_safe(lm):
     assert pol.priority(stale) < 0               # drains stale items first
 
 
+# -------------------------------------------------------------- disk tier
+@pytest.mark.parametrize("policy", RELOAD_POLICY_NAMES)
+def test_tiered_kv_matches_oracle_every_policy(lm, policy):
+    """Tier transparency, serving edition: a bounded host KV mirror with
+    disk spill (two-hop reloads on the dedicated disk stream) reproduces
+    the unbounded oracle token-for-token under every reload policy."""
+    model, params = lm
+    prompts = [list(range(1, 25)), list(range(30, 48)), [7, 8, 9, 10, 11]]
+    cfg = ServeConfig(max_len=64, batch_buckets=(1,), block_size=8,
+                      offload=True, hot_window=0, offload_fraction=1.0,
+                      preempt_every=3, reload_policy=policy,
+                      h2d_bw=500e6, d2h_bw=500e6,
+                      host_kv_bytes=1, disk_bw=300e6)  # everything spills
+    with Engine(model, params, cfg) as eng:
+        out = eng.generate(prompts, max_new=8)
+        assert out == oracle(lm, prompts, max_new=8, max_len=64)
+        st = eng.stats
+        assert st.disk_spill_bytes > 0 and st.disk_load_bytes > 0
+        assert st.swaps >= 1
+        # hierarchy fully drained once every request finished
+        assert eng.host.resident_bytes == 0
+        assert eng.host.disk.resident_bytes == 0
+
+
+def test_tiered_kv_roomy_host_never_touches_disk(lm):
+    """A host tier wider than the KV working set must behave exactly like
+    the plain HostStore path: zero disk traffic."""
+    model, params = lm
+    prompts = [list(range(1, 20)), [4, 5, 6]]
+    cfg = ServeConfig(max_len=64, batch_buckets=(1, 2), block_size=8,
+                      offload=True, hot_window=0, preempt_every=2,
+                      h2d_bw=500e6, d2h_bw=500e6,
+                      host_kv_bytes=1 << 30)
+    with Engine(model, params, cfg) as eng:
+        out = eng.generate(prompts, max_new=6)
+        assert out == oracle(lm, prompts, max_new=6, max_len=64)
+        assert eng.stats.disk_spill_bytes == 0
+        assert eng.stats.disk_load_bytes == 0
+
+
 # ------------------------------------------------------------ paged cache
 def test_paged_cache_block_roundtrip(lm):
     model, _ = lm

@@ -1,0 +1,228 @@
+"""The tiered storage hierarchy (DESIGN.md §10): DiskStore/TieredStore
+semantics, compile-time spill/load chains, per-tier budget validation, and
+tier transparency — bounded-host plans reproduce the unbounded oracle
+bit-for-bit on the threaded runtime under every dispatch policy (a seeded
+mirror of the hypothesis property, so it runs without the extra dep)."""
+import random as pyrandom
+
+import numpy as np
+import pytest
+
+from repro.core import (BuildConfig, MemgraphOOM, MemOp, OpKind,
+                        build_memgraph)
+from repro.core.dispatch import COMPUTE, DISK, POLICY_NAMES, engine_of
+from repro.core.memgraph import RaceError
+from repro.core.runtime import (DiskStore, HostStore, TieredStore,
+                                TurnipRuntime, eval_taskgraph, make_store,
+                                run_in_order)
+from repro.core.simulate import HardwareModel, simulate
+
+from helpers import fig3_taskgraph, int_inputs
+from test_dispatch import graph_inputs, random_taskgraph
+
+UNITS = dict(size_fn=lambda v: 1)
+
+
+# ----------------------------------------------------------------- stores
+class TestDiskStore:
+    def test_roundtrip_array_and_block(self, tmp_path):
+        ds = DiskStore(tmp_path)
+        a = np.arange(12, dtype=np.float32).reshape(3, 4)
+        blk = {"k": np.ones((2, 3), np.float16), "v": np.zeros((2,), np.int8)}
+        ds.put("a", a)
+        ds.put(("r", 0), blk)
+        assert "a" in ds and ("r", 0) in ds and "nope" not in ds
+        np.testing.assert_array_equal(ds.get("a"), a)
+        got = ds.get(("r", 0))
+        np.testing.assert_array_equal(got["k"], blk["k"])
+        assert ds.read_bytes == a.nbytes + blk["k"].nbytes + blk["v"].nbytes
+        assert ds.resident_bytes == ds.read_bytes    # both values resident
+        ds.drop("a")
+        assert "a" not in ds and ds.resident_bytes < ds.read_bytes
+        ds.close()
+
+    def test_close_removes_private_dir(self):
+        ds = DiskStore()
+        ds.put("x", np.ones(4))
+        root = ds._dir
+        assert root is not None and root.exists()
+        ds.close()
+        assert not root.exists()
+
+
+class TestTieredStore:
+    def test_auto_lru_spill_and_read_through(self):
+        ts = TieredStore({}, host_capacity=100)
+        a, b, c = (np.full(10, i, np.float64) for i in range(3))  # 80 B each
+        ts.put_offload("a", a)
+        ts.put_offload("b", b)                    # over 100 B: spills "a"
+        assert ts.tier_of("a") == "disk" and ts.tier_of("b") == "host"
+        assert ts.resident_bytes == 80
+        ts.put_offload("c", c)                    # spills LRU ("b")
+        assert ts.tier_of("b") == "disk"
+        np.testing.assert_array_equal(ts.get_offload("a"), a)  # read-through
+        assert ts.disk.read_bytes == 80
+        assert ts.tier_of("a") == "host"          # staged back (and touched)
+        ts.close()
+
+    def test_plan_driven_spill_load_drop(self):
+        ts = TieredStore({}, auto_spill=False)
+        v = np.arange(6, dtype=np.float32)
+        ts.put_offload("k", v)
+        ts.spill("k")
+        assert ts.tier_of("k") == "disk" and ts.resident_bytes == 0
+        ts.spill("k")                              # idempotent
+        ts.load("k")
+        assert ts.tier_of("k") == "host"
+        ts.spill("k")                              # dedup: no second write
+        assert ts.disk.write_bytes == v.nbytes
+        np.testing.assert_array_equal(ts.peek_offload("k"), v)
+        ts.spill("k", drop=True)                   # dead data: all tiers
+        assert ts.tier_of("k") is None and ts.peek_offload("k") is None
+        ts.close()
+
+    def test_pop_drops_disk_copy_too(self):
+        ts = TieredStore({})
+        ts.put_offload("k", np.ones(8))
+        ts.spill("k")
+        ts.pop_offload("k")
+        assert ts.tier_of("k") is None and ts.disk.resident_bytes == 0
+        ts.close()
+
+    def test_peak_counter(self):
+        hs = HostStore({})
+        hs.put_offload("a", np.ones(16))
+        hs.pop_offload("a")
+        assert hs.peak_resident_bytes == 128 and hs.resident_bytes == 0
+
+
+# ------------------------------------------------------- compiled plans
+def tiered_build(cap=3, host_cap=2, **kw):
+    tg = fig3_taskgraph()
+    kw = {**UNITS, **kw}
+    res = build_memgraph(tg, BuildConfig(capacity=cap, host_capacity=host_cap,
+                                         **kw))
+    return tg, res
+
+
+class TestCompiledTiering:
+    def test_plan_spills_and_validates_budget(self):
+        tg, res = tiered_build(cap=3, host_cap=1)
+        assert res.n_spills > 0 and res.n_loads > 0
+        assert res.peak_host <= 1
+        res.memgraph.validate(check_races=True, host_capacity=1)
+        prof = res.memgraph.host_tier_profile()
+        assert prof["peak_units"] <= 1
+        # two-hop reloads are annotated with their tier
+        tiers = {v.tier for v in res.memgraph.vertices.values()
+                 if v.op == MemOp.RELOAD}
+        assert "disk" in tiers
+
+    def test_budget_validation_catches_violation(self):
+        tg, res = tiered_build(cap=3, host_cap=2)
+        with pytest.raises(RaceError, match="host-tier budget"):
+            res.memgraph.validate(host_capacity=0)
+
+    def test_store_selection(self):
+        tg, res = tiered_build(cap=3, host_cap=1)
+        assert isinstance(make_store(res.memgraph, {}), TieredStore)
+        tg2, res2 = tiered_build(cap=3, host_cap=None)
+        store = make_store(res2.memgraph, {})
+        assert isinstance(store, HostStore)
+        assert not isinstance(store, TieredStore)
+
+    def test_disk_vertices_on_disk_engine_only(self):
+        tg, res = tiered_build(cap=3, host_cap=1)
+        sim = simulate(res.memgraph, HardwareModel(transfer_jitter=0.5),
+                       mode="nondet", policy="transfer-first",
+                       record_timeline=True)
+        disk_names = {v.name for v in res.memgraph.vertices.values()
+                      if v.op in (MemOp.SPILL, MemOp.LOAD)}
+        assert disk_names
+        for (_a, _b, _dev, eng, name) in sim.timeline:
+            assert (eng == DISK) == (name in disk_names)
+
+    def test_host_oom_when_tensor_exceeds_tier(self):
+        # 3 device slots (forces offload), but a single tensor outsizes
+        # the whole host tier: nothing can ever be staged
+        with pytest.raises(MemgraphOOM, match="host tier"):
+            tiered_build(cap=9, host_cap=2, size_fn=lambda v: 3)
+
+
+# ------------------------------------------- tier transparency (seeded)
+class TestTierTransparency:
+    """Seeded mirror of test_property_memgraph's hypothesis property: any
+    (device, host, disk) configuration must match the dataflow oracle."""
+
+    def test_random_graphs_all_policies(self):
+        n_exercised = 0
+        for seed in range(10):
+            tg = random_taskgraph(pyrandom.Random(seed))
+            try:
+                res = build_memgraph(tg, BuildConfig(
+                    capacity=3, host_capacity=1 + seed % 3, **UNITS))
+            except MemgraphOOM:
+                continue
+            if res.n_loads == 0:
+                continue
+            res.memgraph.validate(check_races=True,
+                                  host_capacity=1 + seed % 3)
+            inputs = graph_inputs(tg, seed)
+            ref = eval_taskgraph(tg, inputs)
+            # adversarial sequential orders
+            for i in range(2):
+                r = pyrandom.Random(seed * 7 + i)
+                order = res.memgraph.topo_order(key=lambda m: r.random())
+                out = run_in_order(tg, res, inputs, order)
+                for k in ref:
+                    np.testing.assert_array_equal(out[k], ref[k])
+            # threaded runtime, every policy, both modes
+            for policy in POLICY_NAMES:
+                for mode in ("nondet", "fixed"):
+                    rr = TurnipRuntime(tg, res, mode=mode, policy=policy,
+                                       seed=seed).run(inputs)
+                    for k in ref:
+                        np.testing.assert_array_equal(rr.outputs[k], ref[k])
+            n_exercised += 1
+        assert n_exercised >= 3    # the sweep must hit real disk plans
+
+    def test_working_set_exceeding_host_tier_completes(self):
+        """The acceptance scenario: device working set ≫ host tier, all
+        traffic flows through disk, results oracle-equal under
+        random/fixed/critical-path with real disk files moving."""
+        tg = fig3_taskgraph()
+        inputs = int_inputs(tg)
+        ref = eval_taskgraph(tg, inputs)
+        res = build_memgraph(tg, BuildConfig(capacity=3, host_capacity=1,
+                                             **UNITS))
+        assert res.n_spills > 0
+        for policy in ("random", "fixed", "critical-path"):
+            rr = TurnipRuntime(tg, res, mode="nondet", policy=policy,
+                               seed=2).run(inputs)
+            for k in ref:
+                np.testing.assert_array_equal(rr.outputs[k], ref[k])
+            assert rr.disk_spill_bytes > 0 and rr.disk_load_bytes > 0
+            assert rr.transfer_time[DISK] >= 0.0
+
+    def test_latency_injected_disk_still_correct(self):
+        """Slow disk hops (the two-hop nondeterminism source) change
+        timing, never results — and disk latency rides the disk engine."""
+        tg = fig3_taskgraph()
+        inputs = int_inputs(tg)
+        ref = eval_taskgraph(tg, inputs)
+        res = build_memgraph(tg, BuildConfig(capacity=3, host_capacity=1,
+                                             **UNITS))
+
+        def latency(v):
+            return 0.004 if engine_of(v) == DISK else 0.0005
+
+        rr = TurnipRuntime(tg, res, mode="nondet", policy="critical-path",
+                           seed=5, latency=latency).run(inputs)
+        for k in ref:
+            np.testing.assert_array_equal(rr.outputs[k], ref[k])
+        # timeline: disk ops only ever occupy the disk engine
+        disk_rows = [t for t in rr.timeline if t[3] == DISK]
+        assert disk_rows
+        for (_a, _b, _dev, eng, name) in rr.timeline:
+            is_disk = name.startswith(("spill:", "load:", "drop:"))
+            assert (eng == DISK) == is_disk

@@ -21,6 +21,14 @@ Three questions, extending the paper's claims one storage rung down:
    confirms disk-spilling plans stay oracle-equal on real threads under
    random/fixed/critical-path dispatch.
 
+4. **Prefetch on/off stall ablation (DESIGN.md §11).** Sections 1–3 build
+   with ``prefetch_distance=0`` (reactive force-reload placement, the PR-3
+   baseline). This section rebuilds the same workload at host fractions
+   < 1 with the PrefetchPlan on: disk→host LOADs hoisted ahead of the
+   consumers' horizon must strictly cut simulated compute stall — the
+   compiler knows every future reload, so the runtime should never block
+   on a transfer it could have started earlier (paper §1).
+
 CSV contract: ``name,us_per_call,derived`` via :func:`benchmarks.common.emit`.
 """
 from __future__ import annotations
@@ -102,20 +110,24 @@ def run(quick: bool = True) -> list[dict]:
     # the bounded builder retire dead host copies, so its peak is the true
     # simultaneous footprint (the unbounded peak only accumulates)
     res_base = build_memgraph(tg, BuildConfig(
-        capacity=cap, host_capacity=res_unbounded.peak_host))
+        capacity=cap, host_capacity=res_unbounded.peak_host,
+        prefetch_distance=0))
     assert res_base.n_spills == 0
     host_ws = res_base.peak_host
     hw = dataclasses.replace(P100_SERVER["hw"], transfer_jitter=0.6)
 
     rows: list[dict] = []
     # ---- 1. throughput vs host-tier fraction ---------------------------
+    # sections 1-3 pin prefetch off: they measure the *reactive* tiering
+    # baseline; section 4 ablates the PrefetchPlan against it
     fracs = (1.0, 0.5, 0.25) if quick else (1.0, 0.75, 0.5, 0.25, 0.125)
     tightest = None
     for frac in fracs:
         host_cap = max(int(host_ws * frac), 1)
         try:
             res = build_memgraph(tg, BuildConfig(capacity=cap,
-                                                 host_capacity=host_cap))
+                                                 host_capacity=host_cap,
+                                                 prefetch_distance=0))
         except MemgraphOOM as e:
             emit(f"tiered/hostfrac{frac:g}", 0.0, f"OOM:{e}")
             continue
@@ -170,6 +182,44 @@ def run(quick: bool = True) -> list[dict]:
     emit("tiered/threaded_oracle_equal", 0.0,
          f"spill_MB={rr.disk_spill_bytes/2**20:.1f};"
          f"load_MB={rr.disk_load_bytes/2**20:.1f}")
+
+    # ---- 4. prefetch on/off stall ablation (DESIGN.md §11) -------------
+    # deterministic (jitter off): the win is structural — hoisted LOADs
+    # overlap disk I/O under compute instead of stalling the consumer —
+    # so it must show without nondeterministic noise
+    hw_det = dataclasses.replace(P100_SERVER["hw"], transfer_jitter=0.0)
+    pf_fracs = (0.5, 0.25) if quick else (0.75, 0.5, 0.25, 0.125)
+    won = 0
+    for frac in pf_fracs:
+        host_cap = max(int(host_ws * frac), 1)
+        try:
+            off = build_memgraph(tg, BuildConfig(
+                capacity=cap, host_capacity=host_cap, prefetch_distance=0))
+            on = build_memgraph(tg, BuildConfig(
+                capacity=cap, host_capacity=host_cap))
+        except MemgraphOOM as e:
+            emit(f"tiered/prefetch/hostfrac{frac:g}", 0.0, f"OOM:{e}")
+            continue
+        on.memgraph.validate(check_races=False, host_capacity=host_cap)
+        s_off = simulate(off.memgraph, hw_det, mode="nondet",
+                         policy="critical-path")
+        s_on = simulate(on.memgraph, hw_det, mode="nondet",
+                        policy="critical-path")
+        stall_cut = s_off.total_stall - s_on.total_stall
+        rows.append(dict(frac=frac, prefetch=True,
+                         stall_off_ms=s_off.total_stall * 1e3,
+                         stall_on_ms=s_on.total_stall * 1e3,
+                         n_prefetches=on.n_prefetches,
+                         stall_bytes_hidden=on.stall_bytes_hidden))
+        emit(f"tiered/prefetch/hostfrac{frac:g}", s_on.makespan * 1e6,
+             f"stall_off_ms={s_off.total_stall*1e3:.2f};"
+             f"stall_on_ms={s_on.total_stall*1e3:.2f};"
+             f"n_prefetches={on.n_prefetches};"
+             f"hidden_MB={on.stall_bytes_hidden/2**20:.1f}")
+        assert on.n_prefetches > 0, \
+            f"prefetch plan emitted nothing at host fraction {frac}"
+        won += stall_cut > 0
+    assert won > 0, "prefetch-on never beat prefetch-off on stall time"
     return rows
 
 

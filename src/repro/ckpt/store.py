@@ -35,6 +35,12 @@ __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
 DEFAULT_SHARD_BYTES = 64 * 2**20
 
 
+def _write_shard(path: pathlib.Path, arrays: dict[str, np.ndarray]) -> None:
+    """Write one shard file. A seam for fault-injection tests (a crash
+    mid-shard-write must leave no partial checkpoint behind)."""
+    np.savez(path, **arrays)
+
+
 def _leaf_paths(tree: Any) -> list[tuple[str, Any]]:
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     out = []
@@ -52,6 +58,18 @@ def save_checkpoint(directory: str | os.PathLike, step: int, tree: Any,
     d = pathlib.Path(directory)
     d.mkdir(parents=True, exist_ok=True)
     tmp = pathlib.Path(tempfile.mkdtemp(dir=d, prefix=".tmp_"))
+    try:
+        return _save_into(d, tmp, step, tree, meta, max_keep, shard_bytes)
+    except BaseException:
+        # a crash mid-shard-write must not leak the partial tmp dir: the
+        # published tree holds only complete, digest-covered checkpoints
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+
+
+def _save_into(d: pathlib.Path, tmp: pathlib.Path, step: int, tree: Any,
+               meta: dict | None, max_keep: int,
+               shard_bytes: int) -> pathlib.Path:
     leaves = _leaf_paths(tree)
 
     # greedy size-threshold packing: a shard closes once adding the next
@@ -75,7 +93,7 @@ def save_checkpoint(directory: str | os.PathLike, step: int, tree: Any,
     for si, group in enumerate(shards):
         fname = f"shard_{si}.npz"
         path = tmp / fname
-        np.savez(path, **{idx: arr for idx, _key, arr in group})
+        _write_shard(path, {idx: arr for idx, _key, arr in group})
         files[fname] = hashlib.sha256(path.read_bytes()).hexdigest()
         for idx, key, arr in group:
             # reuse the already-materialized array: a second np.asarray

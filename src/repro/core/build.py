@@ -47,6 +47,23 @@ Beyond-paper extensions (flagged; documented in DESIGN.md §7):
   re-spilling bytes with a live disk twin moves nothing (the disk
   analogue of ``reuse_host_copy``). ``host_capacity=None`` (default)
   reproduces the paper's unbounded host store exactly.
+* cross-tier prefetch (``prefetch_distance``; DESIGN.md §11) — the build
+  runs twice when the host tier is bounded: pass 1 places reloads
+  reactively and records the host-occupancy profile; a
+  :class:`~repro.core.policies.PrefetchPlan` walks that schedule backward
+  to find, for every spilled copy, the earliest point its disk→host LOAD
+  fits under ``host_capacity`` through every intervening window; pass 2
+  emits the hoisted LOADs there (``MemVertex.prefetch``), turning
+  force-reload stalls into pipelined transfers that run ahead of the
+  consumer's horizon. Prefetch admissions use free space only — they can
+  never force other copies out — so a skipped hint degrades to the
+  reactive path, never to a worse plan.
+* bounded disk tier (``disk_capacity``; DESIGN.md §11) — the disk rung is
+  a budget too: the builder replays blob creation (first SPILL) and
+  release (drop vertices — including for dead copies whose bytes already
+  live on disk, which previously lingered) and raises
+  :class:`MemgraphOOM` at compile time when the three-level footprint
+  cannot fit. No plan that validates can overflow the disk at runtime.
 """
 from __future__ import annotations
 
@@ -56,7 +73,7 @@ from typing import Any, Callable
 
 from .memgraph import DepKind, Loc, MemGraph, MemOp
 from .policies import (Arena, EvictionDecision, HostEntry, HostPlan,
-                       PlacementDecision, INF)
+                       PlacementDecision, PrefetchPlan, PrefetchRecord, INF)
 from .taskgraph import OpKind, TaskGraph, TaskVertex
 
 __all__ = ["BuildConfig", "BuildResult", "MemgraphOOM", "build_memgraph"]
@@ -83,6 +100,15 @@ class BuildConfig:
     # (SPILL vertices) and reloads them through two-hop LOAD→RELOAD
     # chains (DESIGN.md §10).
     host_capacity: int | None = None
+    # disk-tier budget (same units). None = unbounded disk. Bounded, the
+    # builder replays blob creation/release and raises MemgraphOOM at
+    # compile time when the three-level footprint cannot fit (§11).
+    disk_capacity: int | None = None
+    # how many schedule positions ahead of a consumer a disk→host LOAD may
+    # be hoisted (PrefetchPlan, §11). 0 disables prefetch and reproduces
+    # the reactive force-reload placement exactly. Only meaningful when
+    # host_capacity is bounded (otherwise nothing ever spills).
+    prefetch_distance: int = 32
 
     def size_of(self, v: TaskVertex) -> int:
         return (self.size_fn or (lambda u: u.out.nbytes))(v)
@@ -106,6 +132,10 @@ class BuildResult:
     peak_host: int = 0                          # host-tier peak (units)
     n_spills: int = 0                           # host→disk spill vertices
     n_loads: int = 0                            # disk→host load vertices
+    peak_disk: int = 0                          # disk-tier peak (units)
+    n_prefetches: int = 0                       # LOADs hoisted ahead of use
+    stall_bytes_hidden: int = 0                 # disk bytes moved off the
+    #                                             consumers' critical path
 
     def final_value_location(self, tid: int) -> tuple[str, int]:
         """Where the runtime finds a terminal output: ('host', mid-or-tid) or
@@ -122,13 +152,39 @@ def build_memgraph(
     order: list[int] | None = None,
 ) -> BuildResult:
     """Compile ``tg`` under ``config``. ``order`` is the serialized vertex
-    list V (defaults to a topological order of ``tg``)."""
-    return _Builder(tg, config, order).run()
+    list V (defaults to a topological order of ``tg``).
+
+    With a bounded host tier and ``prefetch_distance > 0`` the build is
+    two-pass: pass 1 places disk→host reloads reactively and records the
+    host-occupancy profile; a :class:`~repro.core.policies.PrefetchPlan`
+    walks it backward to pick each reload's earliest feasible start; pass 2
+    re-runs the simulation emitting the hoisted (``prefetch=True``) LOADs
+    at those points. A plan with nothing to hoist returns pass 1 as-is."""
+    builder = _Builder(tg, config, order)
+    res = builder.run()
+    if (config.host_capacity is None or config.prefetch_distance <= 0
+            or not builder.load_records):
+        return res
+    plan = PrefetchPlan(config.host_capacity, builder.occ_at,
+                        config.prefetch_distance)
+    hints = plan.compute(builder.load_records)
+    if not hints:
+        return res
+    try:
+        return _Builder(tg, config, order, prefetch_hints=hints).run()
+    except MemgraphOOM:
+        # prefetch admissions shift later Belady choices, and a shifted
+        # victim set can (rarely) need a blob the reactive schedule never
+        # created — overflowing a tight disk budget pass 1 satisfied.
+        # Prefetch is an optimization, not a requirement: a program that
+        # compiles reactively must always compile, so fall back to pass 1.
+        return res
 
 
 class _Builder:
     def __init__(self, tg: TaskGraph, config: BuildConfig,
-                 order: list[int] | None) -> None:
+                 order: list[int] | None,
+                 prefetch_hints: dict[int, list[int]] | None = None) -> None:
         tg.validate()
         self.tg = tg
         self.cfg = config
@@ -173,6 +229,25 @@ class _Builder:
         self.seq = 0
         self.n_offloads = self.n_reloads = self.n_cancelled = 0
         self.n_spills = self.n_loads = 0
+
+        # ---- cross-tier prefetch + disk budget (DESIGN.md §11) ----------
+        # execution windows: window w spans (completion of exec w-1,
+        # completion of exec w]. Pass 1 records per-window max host
+        # occupancy (occ_at) and every reactive LOAD (load_records) for
+        # the PrefetchPlan; pass 2 consumes the resulting hints.
+        self.prefetch_hints = prefetch_hints or {}
+        self.exec_done = 0                      # current window index
+        self.occ_at: list[int] = []             # per-window max occupancy
+        self._win_max = 0
+        self.load_records: list[PrefetchRecord] = []
+        self.spill_window: dict[int, int] = {}  # SPILL mid -> window
+        self.n_prefetches = 0
+        self.stall_bytes_hidden = 0
+        # disk-tier replay: blob units keyed by host key; first SPILL of a
+        # key creates its blob, a drop vertex releases it
+        self.disk_units = 0
+        self.peak_disk = 0
+        self.disk_size_of: dict[int, int] = {}
 
     # ------------------------------------------------------------------ utils
     def _mark_executed(self, mid: int) -> None:
@@ -225,12 +300,63 @@ class _Builder:
         self.mg.add_dep(e.producer, smid, DepKind.DATA)
         for r in e.readers:
             self.mg.add_dep(r, smid, DepKind.MEM)
+        if drop:
+            # the drop releases *every* copy of the bytes (host + disk
+            # blob), so it must wait for anything that ever read them on
+            # any tier: LOADs of the blob, readers of earlier residencies,
+            # and the spill that retired the latest one — per-residency
+            # deps alone leave a window where an old reader's read-through
+            # races the blob's deletion
+            for r in e.disk_readers | e.all_readers:
+                self.mg.add_dep(r, smid, DepKind.MEM)
+            if e.last_spill is not None:
+                self.mg.add_dep(e.last_spill, smid, DepKind.MEM)
         self._mark_executed(smid)
-        if not drop and not dedup:
+        self.spill_window[smid] = self.exec_done
+        if drop:
+            self.disk_units -= self.disk_size_of.pop(e.key, 0)
+        elif not dedup:
             self.n_spills += 1
             # annotate the originating offload: its payload continues to disk
             self.mg.vertices[e.key].tier = "disk"
+            self._disk_admit(e.key, e.size, e.tid)
         return smid
+
+    def _disk_admit(self, key: int, size: int, tid: int) -> None:
+        """Charge a new blob against the disk budget (compile-time
+        feasibility: the last tier has nowhere further to evict to)."""
+        self.disk_size_of[key] = size
+        self.disk_units += size
+        self.peak_disk = max(self.peak_disk, self.disk_units)
+        cap = self.cfg.disk_capacity
+        if cap is not None and self.disk_units > cap:
+            raise MemgraphOOM(
+                f"disk tier of {cap} units cannot hold the spilled working "
+                f"set: {self.disk_units} units live after spilling task "
+                f"{tid} — the three-level footprint does not fit "
+                f"(host={self.cfg.host_capacity}, disk={cap})")
+
+    def _emit_disk_drop(self, e: HostEntry) -> int:
+        """Release a dead, non-resident entry's disk blob: a zero-host-unit
+        drop SPILL ordered after the blob's writer and every LOAD that read
+        it, so the disk-tier units are reclaimed in any legal order (the
+        blob used to linger until store close — an unbounded-disk hole)."""
+        tname = self.tg.vertices[e.tid].name or str(e.tid)
+        dmid = self.mg.add_vertex(
+            MemOp.SPILL, self.mg.vertices[e.key].device, src_tid=e.tid,
+            loc=None, size=0, nbytes=0, operands=[e.key],
+            params={"drop": True}, tier="disk", name="drop:" + tname)
+        self.tid_of[dmid] = e.tid
+        self.mg.add_dep(e.spill_src, dmid, DepKind.DATA)
+        # same total-ordering discipline as a resident drop: wait for every
+        # reader of every residency and the spill that retired the last one
+        for r in e.disk_readers | e.all_readers | e.readers:
+            self.mg.add_dep(r, dmid, DepKind.MEM)
+        if e.last_spill is not None:
+            self.mg.add_dep(e.last_spill, dmid, DepKind.MEM)
+        self._mark_executed(dmid)
+        self.disk_units -= self.disk_size_of.pop(e.key, 0)
+        return dmid
 
     def _host_admit(self, producer_mid: int, key: int, tid: int,
                     size: int, nbytes: int,
@@ -247,16 +373,19 @@ class _Builder:
                 f"{size} units for task {tid}")
         for d in deps:
             self.mg.add_dep(d, producer_mid, DepKind.MEM)
+        self._win_max = max(self._win_max, self.hostplan.used_units)
         if self.hostplan.bounded:
             self.host_key_of[tid] = key
 
     def _drop_host_entry(self, e: HostEntry) -> None:
-        """Release a dead host copy (and, for drops, its disk twin)."""
+        """Release a dead host copy (and its disk twin, wherever it is)."""
         self.host_key_of.pop(e.tid, None)
         if e.resident:
             dmid = self._emit_spill(e, drop=True)
             self.hostplan.dropped(e, dmid, self.seq)
         else:
+            if e.spill_src is not None:
+                self._emit_disk_drop(e)
             self.hostplan.forget(e.key)
 
     # ------------------------------------- safe-overwrite deps (simMalloc)
@@ -481,6 +610,10 @@ class _Builder:
         if e.resident:
             self.mg.add_dep(e.producer, rel_mid, DepKind.DATA)
             e.readers.add(rel_mid)
+            if self.mg.vertices[e.producer].op == MemOp.LOAD:
+                # the copy was restaged from disk (a prefetch LOAD): this
+                # reload is the pipelined tail of a two-hop chain
+                vv.tier = "disk"
             return
         tid = e.tid
         lmid = self.mg.add_vertex(
@@ -489,6 +622,10 @@ class _Builder:
             name=f"load:{self.tg.vertices[tid].name or tid}")
         self.tid_of[lmid] = tid
         self.mg.add_dep(e.spill_src, lmid, DepKind.DATA)
+        self.load_records.append(PrefetchRecord(
+            tid=tid, size=e.size, nbytes=e.nbytes,
+            spill_pos=self.spill_window.get(e.spill_src, 0),
+            reload_pos=self.exec_done))
         self._host_admit(lmid, key, tid, e.size, e.nbytes,
                          exclude=frozenset({key}))
         self._mark_executed(lmid)
@@ -496,6 +633,56 @@ class _Builder:
         self.mg.add_dep(lmid, rel_mid, DepKind.DATA)
         vv.tier = "disk"
         self.hostplan.entries[key].readers.add(rel_mid)
+        self.hostplan.entries[key].disk_readers.add(lmid)
+
+    def _close_window(self) -> None:
+        """One task finished simulating: seal its execution window's
+        occupancy high-water mark (the PrefetchPlan's feasibility input)."""
+        self._win_max = max(self._win_max, self.hostplan.used_units)
+        self.occ_at.append(self._win_max)
+        self.exec_done += 1
+        self._win_max = self.hostplan.used_units
+
+    def _try_prefetch(self, tid: int) -> None:
+        """Pass-2 hint: restage ``tid``'s disk-resident host copy *now*,
+        ahead of its consumer (a ``prefetch=True`` LOAD on the disk
+        engine). Best-effort and free-space-only: if the entry is not
+        actually spilled at this point (pass divergence) or no free host
+        extent fits, the hint is dropped and the reactive force-reload
+        path still covers the use — a skipped prefetch can only cost
+        timing, never correctness."""
+        key = self.host_key_of.get(tid)
+        if key is None:
+            return
+        e = self.hostplan.entries.get(key)
+        if e is None or e.resident or e.spill_src is None:
+            return
+        lmid = self.mg.add_vertex(
+            MemOp.LOAD, self.mg.vertices[e.key].device, src_tid=tid,
+            loc=None, size=e.size, nbytes=e.nbytes, operands=[key],
+            tier="disk", prefetch=True,
+            name=f"load:{self.tg.vertices[tid].name or tid}")
+        deps = self.hostplan.admit(key, tid, e.size, e.nbytes, lmid,
+                                   self.seq, spill_cb=self._emit_spill,
+                                   exclude=frozenset({key}),
+                                   allow_spill=False)
+        if deps is None:                 # no free space here in pass 2
+            self.mg.remove_vertex(lmid)
+            return
+        self.tid_of[lmid] = tid
+        self.mg.add_dep(e.spill_src, lmid, DepKind.DATA)
+        for d in deps:
+            self.mg.add_dep(d, lmid, DepKind.MEM)
+        e.disk_readers.add(lmid)
+        self._mark_executed(lmid)
+        self._win_max = max(self._win_max, self.hostplan.used_units)
+        self.n_loads += 1
+        self.n_prefetches += 1
+        self.stall_bytes_hidden += e.nbytes
+        if tid in self.evicted:
+            # the pending RELOAD is now the pipelined tail of a two-hop
+            # chain whose disk leg runs ahead of the consumer's horizon
+            self.mg.vertices[self.alias[tid]].tier = "disk"
 
     def _execute(self, tid: int) -> None:
         v = self.tg.vertices[tid]
@@ -583,6 +770,11 @@ class _Builder:
                 alloc_i += 1
             else:
                 self._execute(self.V[exec_i])
+                self._close_window()
+                # the boundary after exec_i: emit the PrefetchPlan's
+                # hoisted disk→host restages scheduled for this point
+                for t in self.prefetch_hints.get(exec_i, ()):
+                    self._try_prefetch(t)
                 exec_i += 1
         return BuildResult(
             memgraph=self.mg,
@@ -596,6 +788,9 @@ class _Builder:
             peak_host=self.hostplan.peak_units,
             n_spills=self.n_spills,
             n_loads=self.n_loads,
+            peak_disk=self.peak_disk,
+            n_prefetches=self.n_prefetches,
+            stall_bytes_hidden=self.stall_bytes_hidden,
         )
 
 

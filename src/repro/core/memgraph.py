@@ -93,6 +93,10 @@ class MemVertex:
     # or "disk" (this vertex is one leg of a two-hop spill/reload chain).
     # SPILL/LOAD vertices are always tier "disk".
     tier: str = "host"
+    # True on a LOAD hoisted ahead of its consumer's horizon by the
+    # compiler's PrefetchPlan (the reload pipeline starts before the
+    # consumer needs the bytes); False on reactive force-reload LOADs.
+    prefetch: bool = False
     lock_group: tuple[int, int] | None = None  # ADD_INTO write-lock key (§B)
     # ordered operand list (mids; duplicates allowed) — dependency *sets* lose
     # operand order, which the runtime needs to bind kernel arguments.
@@ -117,6 +121,16 @@ class MemGraph:
         self.preds[mid] = {}
         self.succs[mid] = {}
         return mid
+
+    def remove_vertex(self, mid: int) -> None:
+        """Retract a just-created, still-unwired vertex (the builder's
+        abandoned-prefetch path). Only edge-free vertices may go — removal
+        never has to repair dependency structure."""
+        if self.preds[mid] or self.succs[mid]:
+            raise AssertionError(f"cannot remove wired vertex {mid}")
+        del self.vertices[mid]
+        del self.preds[mid]
+        del self.succs[mid]
 
     def add_dep(self, u: int, v: int, kind: DepKind) -> None:
         """Add ``u -> v``. A MEM dep duplicating an existing DATA dep is
@@ -175,9 +189,11 @@ class MemGraph:
 
     # -- validation (paper §7) ----------------------------------------------
     def validate(self, check_races: bool = True,
-                 host_capacity: int | None = None) -> None:
-        """Structural validation; ``host_capacity`` additionally replays the
-        compile-time schedule and checks the host-tier budget (units)."""
+                 host_capacity: int | None = None,
+                 disk_capacity: int | None = None) -> None:
+        """Structural validation; ``host_capacity``/``disk_capacity``
+        additionally replay the compile-time schedule and check the
+        host-tier / disk-tier budgets (units)."""
         self.topo_order()
         for m, v in self.vertices.items():
             if v.op in STORE_OPS:
@@ -185,24 +201,37 @@ class MemGraph:
                     raise RaceError(f"{v.op.value} {m} has a device loc")
             elif v.loc is None:
                 raise RaceError(f"{v.op} vertex {m} has no loc")
-        if host_capacity is not None:
-            peak = self.host_tier_profile()["peak_units"]
-            if peak > host_capacity:
+        if host_capacity is not None or disk_capacity is not None:
+            prof = self.host_tier_profile()
+            if (host_capacity is not None
+                    and prof["peak_units"] > host_capacity):
                 raise RaceError(
-                    f"host-tier budget exceeded: peak {peak} units > "
-                    f"capacity {host_capacity}")
+                    f"host-tier budget exceeded: peak {prof['peak_units']} "
+                    f"units > capacity {host_capacity}")
+            if (disk_capacity is not None
+                    and prof["peak_disk_units"] > disk_capacity):
+                raise RaceError(
+                    f"disk-tier budget exceeded: peak "
+                    f"{prof['peak_disk_units']} units > capacity "
+                    f"{disk_capacity}")
         if check_races:
             self._check_safe_overwrites()
 
     def host_tier_profile(self) -> dict[str, int]:
         """Replay the compile-time (seq) schedule, tracking host-tier
         occupancy in units: OFFLOAD and LOAD admit bytes into the host
-        arena, SPILL (including drops) releases them. Conservative w.r.t.
-        runtime orders: every SPILL is ordered (by construction in
-        ``build.py``) after the host copy's readers and before the tenant
-        that reuses its space."""
+        arena, SPILL (including drops) releases them. Disk occupancy is
+        replayed per host key (``operands[0]``): the first real SPILL of a
+        key creates its immutable blob, a drop releases it; LOADs leave the
+        blob valid. Conservative w.r.t. runtime orders: every SPILL is
+        ordered (by construction in ``build.py``) after the host copy's
+        readers and before the tenant that reuses its space, and every
+        drop after the blob's readers — per-key create/free is totally
+        ordered, so any legal order peaks no higher than this replay."""
         occ = peak = 0
-        spilled = loaded = dropped = 0
+        disk_occ = disk_peak = 0
+        on_disk: dict[Any, int] = {}      # host key -> blob units
+        spilled = loaded = dropped = prefetched = 0
         for m in sorted(self.vertices, key=lambda m: self.vertices[m].seq):
             v = self.vertices[m]
             if v.op == MemOp.OFFLOAD:
@@ -210,15 +239,25 @@ class MemGraph:
             elif v.op == MemOp.LOAD:
                 occ += v.size
                 loaded += 1
+                if v.prefetch:
+                    prefetched += 1
             elif v.op == MemOp.SPILL:
                 occ -= v.size
+                key = v.operands[0] if v.operands else m
                 if v.params.get("drop"):
                     dropped += 1
+                    disk_occ -= on_disk.pop(key, 0)
                 else:
                     spilled += 1
+                    if key not in on_disk:
+                        on_disk[key] = v.size
+                        disk_occ += v.size
             peak = max(peak, occ)
+            disk_peak = max(disk_peak, disk_occ)
         return {"peak_units": peak, "final_units": occ,
-                "n_spills": spilled, "n_loads": loaded, "n_drops": dropped}
+                "peak_disk_units": disk_peak, "final_disk_units": disk_occ,
+                "n_spills": spilled, "n_loads": loaded, "n_drops": dropped,
+                "n_prefetches": prefetched}
 
     def _ancestors(self, dst: int, cache: dict) -> set[int]:
         """The ancestor set of ``dst`` (all vertices with a path to it),
@@ -284,6 +323,7 @@ class MemGraph:
     def stats(self) -> dict[str, Any]:
         kinds: dict[str, int] = {}
         off_bytes = rel_bytes = spill_bytes = load_bytes = 0
+        n_prefetch = prefetch_bytes = 0
         for v in self.vertices.values():
             kinds[v.op.value] = kinds.get(v.op.value, 0) + 1
             if v.op == MemOp.OFFLOAD:
@@ -294,6 +334,9 @@ class MemGraph:
                 spill_bytes += v.nbytes
             elif v.op == MemOp.LOAD:
                 load_bytes += v.nbytes
+                if v.prefetch:
+                    n_prefetch += 1
+                    prefetch_bytes += v.nbytes
         data, mem = self.n_edges()
         return {
             "n_vertices": len(self),
@@ -305,4 +348,6 @@ class MemGraph:
             "reload_bytes": rel_bytes,
             "disk_spill_bytes": spill_bytes,
             "disk_load_bytes": load_bytes,
+            "n_prefetch_loads": n_prefetch,
+            "prefetch_bytes": prefetch_bytes,
         }

@@ -26,6 +26,18 @@ schedule-known use is furthest away (Belady over the serialized vertex
 list; copies backed by a live device tensor or terminal outputs count as
 "never needed" and spill first) and asks the builder to emit the SPILL
 vertex that frees its extent.
+
+:class:`PrefetchPlan` (DESIGN.md §11) closes the remaining reactive gap:
+pass 1 of the build emits disk→host LOADs at force-reload time — exactly
+the stall the paper says the compiler's whole-future knowledge should
+hide. The plan walks pass 1's schedule *backward*: for every reactive
+LOAD it finds the earliest execution point from which the restaged bytes
+fit in the host tier through every intervening window (capped by
+``prefetch_distance`` and by the point the disk blob comes into
+existence), charging each committed hoist against the occupancy profile
+so simultaneous prefetches stay jointly feasible. Pass 2 replays the
+build and emits the hoisted LOADs at those points — pipelined
+``disk→host→device`` chains that start ahead of the consumer's horizon.
 """
 from __future__ import annotations
 
@@ -34,7 +46,7 @@ import random
 from typing import Any, Callable, Iterable
 
 __all__ = ["Extent", "Arena", "PlacementDecision", "EvictionDecision",
-           "HostEntry", "HostPlan", "INF"]
+           "HostEntry", "HostPlan", "PrefetchPlan", "PrefetchRecord", "INF"]
 
 INF = float("inf")
 
@@ -352,6 +364,16 @@ class HostEntry:
     resident: bool = True         # bytes currently in host RAM
     spill_src: int | None = None  # SPILL vertex owning the immutable disk copy
     readers: set[int] = dataclasses.field(default_factory=set)
+    # LOAD vertices that read the disk blob: a drop of the blob (freeing
+    # its disk-tier units) must order after every one of them
+    disk_readers: set[int] = dataclasses.field(default_factory=set)
+    # readers of *retired* residencies (accumulated when a spill or a
+    # restage resets ``readers``) and the most recent SPILL: a final drop
+    # releases every copy of the bytes, so it must order after anything
+    # that ever read them on any tier — per-residency deps alone leave a
+    # racy window for readers of earlier residencies
+    all_readers: set[int] = dataclasses.field(default_factory=set)
+    last_spill: int | None = None
 
 
 class HostPlan:
@@ -384,6 +406,11 @@ class HostPlan:
     def peak_units(self) -> int:
         return self.arena.peak_used if self.bounded else self._peak
 
+    @property
+    def used_units(self) -> int:
+        """Current host-tier occupancy (units)."""
+        return self.arena.used() if self.bounded else self._occ
+
     def note_unbounded(self, size: int) -> None:
         """Unbounded mode: track occupancy so callers can size real budgets
         (e.g. ``host_capacity = fraction * unbounded_peak``)."""
@@ -394,11 +421,15 @@ class HostPlan:
     def admit(self, key: int, tid: int, size: int, nbytes: int,
               producer: int, seq: int,
               spill_cb: Callable[[HostEntry], int],
-              exclude: frozenset = frozenset()) -> set[int] | None:
+              exclude: frozenset = frozenset(),
+              allow_spill: bool = True) -> set[int] | None:
         """Place ``producer``'s host copy; returns the MEM-dep mids it must
         order after, or ``None`` when the resident working set cannot be
         spilled down far enough (host OOM). ``spill_cb(entry)`` must emit
-        the SPILL vertex for a victim and return its mid."""
+        the SPILL vertex for a victim and return its mid.
+        ``allow_spill=False`` admits into genuinely free space only (the
+        prefetch path: an opportunistic restage must never force other
+        copies out) — ``None`` then just means "no room now"."""
         if not self.bounded:
             self.note_unbounded(size)
             return set()
@@ -408,6 +439,8 @@ class HostPlan:
             dec = self.arena.place_free(size)
             if dec is not None:
                 break
+            if not allow_spill:
+                return None
             victim = self._pick_victim(exclude)
             if victim is None:
                 return None
@@ -420,6 +453,7 @@ class HostPlan:
         else:                          # re-staged by a LOAD
             e.producer = producer
             e.resident = True
+            e.all_readers |= e.readers
             e.readers = set()
         return deps
 
@@ -444,7 +478,9 @@ class HostPlan:
         self.arena.set_owner(e.producer, smid)
         self.arena.free(smid, seq)
         e.resident = False
+        e.all_readers |= e.readers
         e.readers = set()
+        e.last_spill = smid
         if e.spill_src is None:
             e.spill_src = smid         # first spill owns the disk copy
 
@@ -457,3 +493,86 @@ class HostPlan:
     def forget(self, key: int) -> None:
         """Delete a dead, non-resident entry (its disk blob may linger)."""
         self.entries.pop(key, None)
+
+
+# --------------------------------------------------------------------------
+# cross-tier prefetch (beyond-paper: DESIGN.md §11)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class PrefetchRecord:
+    """One reactive disk→host LOAD observed in pass 1 of the build.
+
+    Positions are *execution windows*: window ``w`` spans from the
+    completion of the ``w-1``-th executed task to the completion of the
+    ``w``-th. ``spill_pos`` is the window in which the entry's first SPILL
+    was emitted (the disk blob exists from then on); ``reload_pos`` the
+    window in which pass 1 emitted the reactive LOAD (while executing the
+    consumer)."""
+
+    tid: int
+    size: int                     # units the restaged copy occupies
+    nbytes: int                   # real bytes the disk hop moves
+    spill_pos: int
+    reload_pos: int
+
+
+class PrefetchPlan:
+    """Backward walk over a completed build's host-occupancy profile.
+
+    ``occ_at[w]`` is the maximum host-tier occupancy (units) observed
+    during execution window ``w`` of pass 1. For each reactive LOAD the
+    plan scans backward from its consumer: hoisting the LOAD to the
+    boundary after window ``p`` keeps the restaged bytes resident through
+    windows ``p+1 .. reload_pos-1``, so the earliest feasible ``p`` is the
+    smallest one (≥ ``spill_pos``, within ``prefetch_distance``) for which
+    every one of those windows still fits under ``capacity``. Committed
+    hoists are charged back into the profile, so overlapping prefetches
+    remain *jointly* feasible — the plan never schedules a restage that
+    would force other host copies out (pass 2 additionally enforces this
+    structurally: prefetch admissions use free space only).
+
+    The result is a hint map ``{window p -> [tids to restage there]}``
+    consumed by pass 2 of the builder, plus the ``stall_bytes_hidden``
+    counter: disk bytes whose transfer was moved off the consumers'
+    critical path."""
+
+    def __init__(self, capacity: int, occ_at: list[int],
+                 distance: int) -> None:
+        self.capacity = capacity
+        self.occ = list(occ_at)
+        self.distance = max(int(distance), 0)
+        self.hints: dict[int, list[int]] = {}
+        self.n_hoisted = 0
+        self.stall_bytes_hidden = 0
+
+    def hoist(self, rec: PrefetchRecord) -> int | None:
+        """Earliest feasible emission window for ``rec``; commits the hoist
+        (charging the occupancy profile) and returns the window, or
+        ``None`` when no earlier point fits."""
+        lo = max(rec.spill_pos, rec.reload_pos - self.distance, 0)
+        p = rec.reload_pos
+        q = rec.reload_pos - 1
+        while q >= lo:
+            # window q+1 .. reload_pos-1 must absorb the restaged bytes;
+            # moving the boundary one window earlier adds window q+1's
+            # constraint (the boundary after q starts window q+1)
+            if (q + 1 < rec.reload_pos
+                    and self.occ[q + 1] + rec.size > self.capacity):
+                break
+            p = q
+            q -= 1
+        if p >= rec.reload_pos:
+            return None
+        for w in range(p + 1, rec.reload_pos):
+            self.occ[w] += rec.size
+        self.hints.setdefault(p, []).append(rec.tid)
+        self.n_hoisted += 1
+        self.stall_bytes_hidden += rec.nbytes
+        return p
+
+    def compute(self, records: Iterable[PrefetchRecord]
+                ) -> dict[int, list[int]]:
+        """Hoist every record (schedule order) and return the hint map."""
+        for rec in sorted(records, key=lambda r: (r.reload_pos, r.tid)):
+            self.hoist(rec)
+        return self.hints

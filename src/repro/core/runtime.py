@@ -487,19 +487,28 @@ class TurnipRuntime:
             for m, r in remaining.items():
                 if r == 0:
                     make_ready(m)
-        for th in threads:
-            th.start()
+        started: list[threading.Thread] = []
         try:
+            # thread start-up lives inside the drain discipline: if the OS
+            # refuses a later stream (disk engines are created last per
+            # device), the already-running compute/DMA streams must still
+            # observe `stop` and join — a partial fleet parked on its
+            # condition variables would hang the process at exit.
+            for th in threads:
+                th.start()
+                started.append(th)
             with lock:
                 while not stop:
                     main_cond.wait()
         finally:
-            # deterministic drain — also on KeyboardInterrupt: every stream
-            # observes `stop` and exits; no timeout, no leaked threads.
+            # deterministic drain — on success, worker error, thread-start
+            # failure, or KeyboardInterrupt alike: every started stream
+            # (compute, DMA, and disk) observes `stop` and exits; no
+            # timeout, no leaked threads.
             with lock:
                 stop = True
                 wake_all()
-            for th in threads:
+            for th in started:
                 th.join()
         if errors:
             raise errors[0]

@@ -101,6 +101,12 @@ class SimResult:
     transfer_time: dict[str, float]  # per channel kind: total busy seconds
     n_vertices: int
     timeline: list[tuple[float, float, int, str, str]]  # t0,t1,dev,engine,name
+    # per-vertex launch/completion instants: the simulator's schedule as
+    # data, so a differential harness can *replay* exactly the order the
+    # simulator chose through the sequential interpreter (topo_order keyed
+    # by start_at) and prove it byte-exact against the oracle
+    start_at: dict[int, float] = dataclasses.field(default_factory=dict)
+    done_at: dict[int, float] = dataclasses.field(default_factory=dict)
 
     @property
     def total_stall(self) -> float:
@@ -143,6 +149,7 @@ def simulate(mg: MemGraph, hw: HardwareModel | None = None, *,
     by_seq = sorted(verts, key=lambda m: verts[m].seq)
     seq_ready: dict[int, float] = {}       # mid -> time deps completed
     next_issue = 0                          # fixed mode pointer into by_seq
+    start_at: dict[int, float] = {}
 
     def engine_of(m: int) -> tuple[int, str]:
         v = verts[m]
@@ -155,6 +162,7 @@ def simulate(mg: MemGraph, hw: HardwareModel | None = None, *,
         dur = hw.duration(v)
         t1 = t0 + dur
         free_at[e] = t1
+        start_at[m] = t0
         if e[1] == _COMPUTE:
             busy[v.device] += dur
         else:
@@ -215,4 +223,5 @@ def simulate(mg: MemGraph, hw: HardwareModel | None = None, *,
     stall = {d: makespan - busy[d] for d in devices}
     return SimResult(makespan=makespan, busy=busy, stall=stall,
                      transfer_time=chan, n_vertices=len(verts),
-                     timeline=sorted(timeline))
+                     timeline=sorted(timeline),
+                     start_at=start_at, done_at=done_at)

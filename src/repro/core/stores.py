@@ -11,7 +11,15 @@ models the full hierarchy::
   ``cudaHostAlloc``): graph inputs + offloaded tensors, with traffic,
   occupancy, and peak counters.
 * :class:`DiskStore` — the next rung: a file-backed blob store (one
-  ``.npz`` per key) with its own traffic/occupancy/peak counters.
+  ``.npz`` per key) with its own traffic/occupancy/peak counters and an
+  optional byte ``capacity``. Disk is the *last* tier: there is nowhere
+  further to evict, so an admission that would overflow the capacity is
+  **refused** with a typed :class:`DiskFullError` rather than silently
+  growing (the compile-time feasibility check in ``build.py`` makes this
+  unreachable for compiled plans; serving and standalone users get the
+  prompt error instead of an unbounded tier). A blob whose backing file
+  has vanished or been truncated raises :class:`DiskCorruptionError` —
+  promptly, on the disk stream, never a hang.
 * :class:`TieredStore` — a :class:`HostStore` whose offload arena is
   capacity-bounded and backed by a :class:`DiskStore`. Victims can be
   chosen two ways, matching the compiler/runtime split:
@@ -42,7 +50,20 @@ from typing import Any
 
 import numpy as np
 
-__all__ = ["HostStore", "DiskStore", "TieredStore"]
+__all__ = ["HostStore", "DiskStore", "TieredStore", "DiskFullError",
+           "DiskCorruptionError"]
+
+
+class DiskFullError(RuntimeError):
+    """An admission would exceed the disk tier's capacity. Disk is the last
+    rung of the hierarchy — there is no further tier to evict to — so the
+    write is refused instead of silently overflowing the budget."""
+
+
+class DiskCorruptionError(IOError):
+    """A spilled blob's backing file is missing or unreadable (truncated,
+    deleted, bit-rotted). Raised promptly by :meth:`DiskStore.get` so a
+    disk-stream LOAD fails fast instead of wedging its consumers."""
 
 
 def _nbytes(value) -> int:
@@ -141,13 +162,18 @@ class DiskStore:
     default, removed on :meth:`close`). Values are ndarrays or flat dicts
     of ndarrays (serving KV blocks). ``write_bytes``/``read_bytes`` count
     cumulative spill/load traffic; ``resident_bytes``/``peak_resident_bytes``
-    track occupancy."""
+    track occupancy. ``capacity`` (bytes, ``None`` = unbounded) makes
+    :meth:`put` refuse admissions that would overflow the tier with a
+    :class:`DiskFullError` — overwriting an existing key only charges the
+    delta."""
 
     _ARR = "__arr__"          # npz field name for a bare-ndarray value
 
-    def __init__(self, directory: str | os.PathLike | None = None) -> None:
+    def __init__(self, directory: str | os.PathLike | None = None, *,
+                 capacity: int | None = None) -> None:
         self._dir = pathlib.Path(directory) if directory is not None else None
         self._owns_dir = directory is None
+        self.capacity = capacity
         self._files: dict[Any, tuple[pathlib.Path, int]] = {}
         self._counter = 0
         self.write_bytes = 0
@@ -168,17 +194,25 @@ class DiskStore:
             return key in self._files
 
     def put(self, key, value) -> int:
-        """Write ``key``'s bytes to disk; returns the payload size."""
+        """Write ``key``'s bytes to disk; returns the payload size. Raises
+        :class:`DiskFullError` when a ``capacity`` is set and admitting the
+        bytes would overflow it (the write is refused, nothing changes)."""
         payload = value if isinstance(value, dict) else {self._ARR: value}
         n = _nbytes(value)
         with self._lock:
             root = self._root()
-            path, _ = self._files.get(key, (None, 0))
+            path, prev = self._files.get(key, (None, 0))
+            if (self.capacity is not None
+                    and self.resident_bytes - prev + n > self.capacity):
+                raise DiskFullError(
+                    f"disk tier full: {n} B for {key!r} would push occupancy "
+                    f"{self.resident_bytes - prev} B past capacity "
+                    f"{self.capacity} B")
             if path is None:
                 path = root / f"blob_{self._counter:06d}.npz"
                 self._counter += 1
             else:
-                self.resident_bytes -= self._files[key][1]
+                self.resident_bytes -= prev
             np.savez(path, **{k: np.asarray(v) for k, v in payload.items()})
             self._files[key] = (path, n)
             self.write_bytes += n
@@ -188,14 +222,31 @@ class DiskStore:
         return n
 
     def get(self, key, *, count: bool = True):
+        """Read ``key``'s blob back. An unknown key raises ``KeyError``; a
+        known key whose backing file is missing or unreadable raises
+        :class:`DiskCorruptionError` immediately (fail fast on the disk
+        stream — a LOAD must never hang its consumers on rotten bytes)."""
         with self._lock:
             path, n = self._files[key]
             if count:
                 self.read_bytes += n
-        with np.load(path) as data:
-            if set(data.files) == {self._ARR}:
-                return data[self._ARR]
-            return {k: data[k] for k in data.files}
+        try:
+            with np.load(path) as data:
+                if set(data.files) == {self._ARR}:
+                    return data[self._ARR]
+                return {k: data[k] for k in data.files}
+        except (OSError, EOFError, ValueError) as e:
+            # FileNotFoundError, zipfile.BadZipFile (an OSError subclass is
+            # not guaranteed — np.load surfaces truncation as ValueError or
+            # zipfile errors depending on where the bytes end)
+            raise DiskCorruptionError(
+                f"spill blob for {key!r} missing or corrupt at {path}: "
+                f"{e}") from e
+        except Exception as e:
+            if type(e).__module__ == "zipfile":
+                raise DiskCorruptionError(
+                    f"spill blob for {key!r} truncated at {path}: {e}") from e
+            raise
 
     def drop(self, key) -> None:
         with self._lock:
@@ -233,16 +284,25 @@ class TieredStore(HostStore):
       evicts least-recently-touched keys once ``host_capacity`` would be
       exceeded — the runtime-LRU complement of the compiler's
       Belady-over-the-schedule victim choice.
+
+    Eviction refusal: when the backing :class:`DiskStore` has a
+    ``capacity`` and is full, a spill (auto-LRU or plan-driven) surfaces
+    the tier's :class:`DiskFullError` to the caller with the hierarchy
+    rolled back to its prior state — the victim keeps its host copy, a
+    refused :meth:`put_offload` admission is undone — so the tiers never
+    silently exceed either budget and no data is ever lost to a refusal.
     """
 
     def __init__(self, inputs: dict[int, np.ndarray], *,
                  host_capacity: int | None = None,
                  disk: DiskStore | None = None,
                  directory: str | os.PathLike | None = None,
+                 disk_capacity: int | None = None,
                  auto_spill: bool = True) -> None:
         super().__init__(inputs)
         self.host_capacity = host_capacity
-        self.disk = disk if disk is not None else DiskStore(directory)
+        self.disk = (disk if disk is not None
+                     else DiskStore(directory, capacity=disk_capacity))
         self._owns_disk = disk is None
         self.auto_spill = auto_spill
         self._lru: dict[Any, int] = {}       # key -> last-touch counter
@@ -257,13 +317,25 @@ class TieredStore(HostStore):
         self._touch(key)
         if not self.auto_spill or self.host_capacity is None:
             return
-        while (self.resident_bytes > self.host_capacity
-               and len(self.offloaded) > 1):
-            victim = min((k for k in self.offloaded if k != key),
-                         key=lambda k: self._lru.get(k, 0), default=None)
-            if victim is None:
-                break
-            self._spill_locked(victim)
+        try:
+            while (self.resident_bytes > self.host_capacity
+                   and len(self.offloaded) > 1):
+                victim = min((k for k in self.offloaded if k != key),
+                             key=lambda k: self._lru.get(k, 0), default=None)
+                if victim is None:
+                    break
+                self._spill_locked(victim)
+        except DiskFullError:
+            # the cascaded spill could not make room: refuse the admission
+            # itself, or the host tier would exceed host_capacity by one
+            # refused value per retry. The victim's bytes were already
+            # restored by _spill_locked; dropping the admitted key returns
+            # the hierarchy to its pre-put state before the error surfaces.
+            val = self.offloaded.pop(key, None)
+            if val is not None:
+                self.resident_bytes -= _nbytes(val)
+            self._lru.pop(key, None)
+            raise
 
     # ------------------------------------------------------------- tiers
     def _spill_locked(self, key, *, drop: bool = False) -> int:
@@ -275,7 +347,16 @@ class TieredStore(HostStore):
             self.disk.drop(key)
             return 0
         if val is not None and key not in self.disk:
-            return self.disk.put(key, val)
+            try:
+                return self.disk.put(key, val)
+            except DiskFullError:
+                # refusal must not lose data: the bytes' only copy goes
+                # back where it was, and the typed error surfaces to the
+                # caller with the hierarchy unchanged
+                self.offloaded[key] = val
+                self.resident_bytes += _nbytes(val)
+                self._touch(key)
+                raise
         return 0
 
     def spill(self, key, *, drop: bool = False) -> int:

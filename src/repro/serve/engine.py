@@ -38,6 +38,16 @@ rather than a caveat:
   blocks resume through pipelined two-hop ``disk→host→device`` chains,
   with ``critical-path`` issuing the slow disk loads ahead of background
   spills. Tier placement changes timing only — never tokens.
+* **Predictive cross-tier prefetch (NEO-style).** The scheduler knows
+  which swapped request resumes next — waiting for its admission to
+  discover its blocks live on disk is exactly the reactive stall the
+  compiler-side PrefetchPlan removes from MEMGRAPH plans (DESIGN.md §11).
+  While decode runs, the engine stages the next-scheduled swapped
+  requests' disk-resident blocks back into host RAM on the disk stream
+  (``prefetch_swapped``), bounded by the host budget's free headroom so a
+  prefetch can never trigger spill thrash; a resume then needs only the
+  h2d hop. Prefetch is opportunistic — a block that misses the window
+  simply takes the two-hop chain as before.
 
 Sampling uses a per-``(seed, request, position)`` key schedule, so a
 request's tokens are independent of batch composition, padding, offload,
@@ -93,6 +103,11 @@ class ServeConfig:
     # pipelined two-hop disk→host→device chain. None = unbounded host.
     host_kv_bytes: int | None = None
     disk_bw: float = 2.4e9
+    # NEO-style predictive prefetch: stage the next-scheduled swapped
+    # requests' disk-resident blocks back into host RAM ahead of their
+    # admission, within the host budget's free headroom (timing only —
+    # tokens never depend on it)
+    prefetch_swapped: bool = True
     # simulated PCIe (the container has no accelerator; wire time is slept
     # on the DMA thread, exactly like TurnipRuntime's `latency` injection)
     h2d_bw: float = 12e9
@@ -132,6 +147,8 @@ class ServeStats:
     reload_bytes: int = 0
     disk_spill_bytes: int = 0         # host→disk tier traffic
     disk_load_bytes: int = 0          # disk→host tier traffic
+    prefetch_bytes: int = 0           # disk→host bytes staged *ahead* of a
+    #                                   resume (subset of disk_load_bytes)
     kv_bytes_written: int = 0
 
     @property
@@ -156,7 +173,7 @@ class _Transfer:
     blk: int
     seq: int                          # block-creation order (see below)
     nbytes: int
-    disk_op: str = ""                 # DISK transfers: "spill" | "load"
+    disk_op: str = ""                 # DISK: "spill" | "load" | "prefetch"
 
 
 class ReloadPolicy(DispatchPolicy):
@@ -228,6 +245,10 @@ class CriticalPathReloadPolicy(ReloadPolicy):
             return -1e12
         if tr.disk_op == "spill":
             return 1e12                    # never ahead of a pending load
+        if tr.disk_op == "prefetch":
+            # opportunistic staging: behind any blocked request's load,
+            # ahead of background spills
+            return 1e9
         remaining_work = req.max_new - len(req.out)
         return len(req.inflight) * 1e6 - remaining_work
 
@@ -378,6 +399,7 @@ class Engine:
         self._h2d: _DmaStream | None = None
         self._disk: _DmaStream | None = None
         self._spill_inflight: set[tuple[int, int]] = set()
+        self._prefetch_inflight: set[tuple[int, int]] = set()
 
     # ------------------------------------------------------------- public
     def submit(self, prompt, max_new: int = 32) -> int:
@@ -474,6 +496,7 @@ class Engine:
                 with self._lock:
                     self._schedule_offload_locked()
                     self._schedule_spill_locked()
+                    self._schedule_prefetch_locked()
                     self._schedule_preempt_locked()
                     active = [(s, r) for s, r in enumerate(self._slots)
                               if r is not None
@@ -489,6 +512,7 @@ class Engine:
                 for stream in streams:
                     stream.shutdown()
                 self._spill_inflight.clear()
+                self._prefetch_inflight.clear()
             for stream in streams:
                 stream.join()
         return self.stats
@@ -546,6 +570,49 @@ class Engine:
         block mid-spill and drag the disk read onto the h2d lane via
         read-through. One block's write is cheap; the invariant is not."""
         key = (tr.rid, tr.blk)
+        if tr.disk_op == "prefetch":
+            # predictive staging for a request still waiting in the swapped
+            # queue: bring the blob host-side so its eventual resume is a
+            # single h2d hop. The request may have finished or been
+            # released mid-flight (blob popped) — then there is nothing to
+            # stage and the prefetch is a benign no-op. The tier check is
+            # exact here: all disk ops serialize on this one stream, so a
+            # block the reactive path already staged (and counted) is seen
+            # host-resident and not double-counted.
+            try:
+                staged = self.host.tier_of(key) == "disk"
+                if staged:
+                    self.host.load(key)
+            except KeyError:
+                staged = False
+            with self._lock:
+                self._prefetch_inflight.discard(key)
+                req = self.reqs.get(tr.rid)
+                if staged and (req is None or req.state == DONE
+                               or key not in self._block_seq):
+                    # the request retired while the blob was being read:
+                    # _finish_locked already popped every copy, so the
+                    # freshly staged bytes are an orphan nothing would
+                    # ever release — undo the resurrection
+                    self.host.pop_offload(key)
+                    staged = False
+                if staged:
+                    self.stats.disk_load_bytes += tr.nbytes
+                    self.stats.prefetch_bytes += tr.nbytes
+                if req is not None and tr.blk in req.pending_reload:
+                    # the request was admitted while this prefetch was in
+                    # flight and its swap-in deferred to us: chain the h2d
+                    # hop (or, if the blob vanished under a live request —
+                    # which pop paths forbid, but stay safe — fall back to
+                    # the reactive two-hop load)
+                    if staged or self.host.tier_of(key) == "host":
+                        self._h2d.submit(_Transfer(H2D, tr.rid, tr.blk,
+                                                   tr.seq, tr.nbytes))
+                    else:
+                        self._submit_transfer_locked(self._disk, req,
+                                                     tr.blk, disk_op="load")
+                self._wake.notify_all()
+            return
         if tr.disk_op == "spill":
             with self._lock:
                 self._spill_inflight.discard(key)
@@ -652,7 +719,10 @@ class Engine:
 
         # swap-ins: host-resident blocks reload through the h2d stream;
         # disk-resident blocks take the pipelined two-hop chain (disk
-        # stream load first, h2d hop chained on its completion)
+        # stream load first, h2d hop chained on its completion). A block
+        # whose prefetch is already queued/in service is NOT resubmitted —
+        # the prefetch handler chains the h2d hop itself — so the disk
+        # stream never sleeps a wire time staging the same blob twice.
         while free and self._swapped:
             rid = self._swapped.pop(0)
             req = self.reqs[rid]
@@ -663,7 +733,9 @@ class Engine:
             blocks = range(self.kv.n_token_blocks(req.pos))
             req.pending_reload = set(blocks)
             for blk in blocks:
-                if (self._tiered
+                if (rid, blk) in self._prefetch_inflight:
+                    req.inflight.add(blk)   # h2d chains on the prefetch
+                elif (self._tiered
                         and self.host.tier_of((rid, blk)) == "disk"):
                     self._submit_transfer_locked(self._disk, req, blk,
                                                  disk_op="load")
@@ -777,7 +849,8 @@ class Engine:
         for key in self.host.lru_keys():
             if budget <= 0:
                 break
-            if key not in self._block_seq or key in self._spill_inflight:
+            if (key not in self._block_seq or key in self._spill_inflight
+                    or key in self._prefetch_inflight):
                 continue                    # not a serving block / queued
             rid, blk = key
             req = self.reqs.get(rid)
@@ -790,6 +863,51 @@ class Engine:
                                         self.kv.block_nbytes,
                                         disk_op="spill"))
             budget -= self.kv.block_nbytes
+
+    def _schedule_prefetch_locked(self) -> None:
+        """NEO-style predictive reload: the swapped queue *is* the resume
+        schedule, so stage the next-scheduled requests' disk-resident
+        blocks back into host RAM while decode runs — by admission time
+        only the h2d hop remains. Strictly headroom-bounded: a prefetch
+        never pushes occupancy past ``host_kv_bytes`` (it could only thrash
+        with the LRU spiller), and prefetch/spill never race on one block
+        (each skips keys the other has in flight)."""
+        cfg = self.cfg
+        cap = cfg.host_kv_bytes
+        if (not cfg.prefetch_swapped or not self._tiered
+                or self._disk is None or cap is None or self.kv is None):
+            return
+        # reserve headroom for everything already headed host-side: our
+        # own in-flight prefetches, resuming requests' pending two-hop
+        # reloads (their disk legs stage into the host arena when they
+        # land), and in-flight d2h offload mirrors (put_offload on
+        # arrival). Conservative for blocks already staged or h2d-only —
+        # over-reserving only makes the prefetcher more cautious, never
+        # an over-commit
+        reserved = len(self._prefetch_inflight) + sum(
+            len(self.reqs[r].pending_reload | self.reqs[r].inflight)
+            for r in self._live)
+        headroom = (cap - self.host.resident_bytes
+                    - reserved * self.kv.block_nbytes)
+        for rid in self._swapped:
+            if headroom < self.kv.block_nbytes:
+                return
+            req = self.reqs.get(rid)
+            if req is None:
+                continue
+            for blk in range(self.kv.n_token_blocks(req.pos)):
+                if headroom < self.kv.block_nbytes:
+                    return
+                key = (rid, blk)
+                if (key in self._prefetch_inflight
+                        or key in self._spill_inflight
+                        or self.host.tier_of(key) != "disk"):
+                    continue
+                self._prefetch_inflight.add(key)
+                self._disk.submit(_Transfer(
+                    DISK, rid, blk, self._block_seq.get(key, 0),
+                    self.kv.block_nbytes, disk_op="prefetch"))
+                headroom -= self.kv.block_nbytes
 
     def _schedule_preempt_locked(self) -> None:
         """Swap out requests that exhausted their decode quantum while
@@ -853,7 +971,7 @@ class Engine:
         with self._wake:
             busy = (self._events or self._d2h.pending or self._h2d.pending
                     or (self._disk is not None and self._disk.pending)
-                    or self._spill_inflight
+                    or self._spill_inflight or self._prefetch_inflight
                     or any(self.reqs[r].inflight for r in self._live))
             if not busy and not self._queue and not self._swapped:
                 states = {r: self.reqs[r].state for r in self._live}

@@ -1,7 +1,27 @@
-"""Shared test fixtures: the paper's Fig. 3 TASKGRAPH and random graphs."""
+"""Shared test fixtures and graph generators.
+
+One generator module for every suite (the differential fuzz harness, the
+dispatch sweeps, the tiering tests, and the hypothesis property tests all
+draw from here), so "a random TASKGRAPH" means the same distribution
+everywhere:
+
+* :func:`fig3_taskgraph` — the paper's running example (3-device matmul
+  decomposition);
+* :func:`random_taskgraph` — seeded ``random.Random`` generator (runs
+  without the optional hypothesis dependency — the CI fast lane);
+* :func:`taskgraphs` — the same distribution as a hypothesis strategy
+  (imported lazily so this module stays importable without hypothesis);
+* :func:`int_inputs` / :func:`graph_inputs` — integer-valued float inputs:
+  every op in the vocabulary is then exact, so order-invariance checks can
+  demand *bitwise* equality instead of tolerances.
+"""
 import numpy as np
 
 from repro.core import TaskGraph
+
+SHAPE = (4, 4)
+UNARY = ["relu", "transpose", "copy"]
+BINARY = ["add", "mul", "matmul", "matmul_t"]
 
 
 def fig3_taskgraph(shape=(4, 4)):
@@ -31,3 +51,75 @@ def int_inputs(tg, seed=0, lo=-3, hi=4, dtype=np.float64):
     from repro.core import OpKind
     return {t: rng.integers(lo, hi, v.out.shape).astype(dtype)
             for t, v in tg.vertices.items() if v.kind == OpKind.INPUT}
+
+
+def graph_inputs(tg, seed: int):
+    """Integer-valued inputs for a generated graph (alias of
+    :func:`int_inputs` with the generators' historical signature)."""
+    return int_inputs(tg, seed)
+
+
+def random_taskgraph(rng, *, min_ops: int = 6, max_ops: int = 18):
+    """Seeded random TASKGRAPH: 1-3 devices, unary/binary compute over the
+    exact-arithmetic op vocabulary, with occasional streaming reductions
+    (§B) folded over recent tensors. ``rng`` is a ``random.Random``."""
+    n_dev = rng.randint(1, 3)
+    tg = TaskGraph()
+    tids = []
+    for i in range(rng.randint(1, 3)):
+        for d in range(n_dev):
+            tids.append(tg.add_input(d, SHAPE, name=f"in{d}.{i}"))
+    for i in range(rng.randint(min_ops, max_ops)):
+        d = rng.randrange(n_dev)
+        if rng.random() < 0.5:
+            tids.append(tg.add_compute(d, (rng.choice(tids),), SHAPE,
+                                       op=rng.choice(UNARY), name=f"v{i}"))
+        else:
+            tids.append(tg.add_compute(
+                d, (rng.choice(tids), rng.choice(tids)), SHAPE,
+                op=rng.choice(BINARY), name=f"v{i}"))
+        if i % 7 == 6 and len(tids) >= 4:
+            parts = rng.sample(tids, k=min(len(tids), rng.randint(2, 4)))
+            tids.append(tg.add_reduce(d, parts, streaming=True, name=f"r{i}"))
+    return tg
+
+
+def taskgraphs(*, min_ops: int = 3, max_ops: int = 18):
+    """Hypothesis strategy over the same TASKGRAPH distribution as
+    :func:`random_taskgraph`. Imported lazily: calling this requires
+    hypothesis, merely importing this module does not."""
+    from hypothesis import strategies as st
+
+    @st.composite
+    def _graphs(draw):
+        n_dev = draw(st.integers(1, 3))
+        n_inputs = draw(st.integers(1, 3))
+        n_ops = draw(st.integers(min_ops, max_ops))
+        tg = TaskGraph()
+        tids = []
+        for i in range(n_inputs):
+            for d in range(n_dev):
+                tids.append(tg.add_input(d, SHAPE, name=f"in{d}.{i}"))
+        for i in range(n_ops):
+            d = draw(st.integers(0, n_dev - 1))
+            arity = draw(st.integers(1, 2))
+            if arity == 1:
+                op = draw(st.sampled_from(UNARY))
+                a = draw(st.sampled_from(tids))
+                tids.append(tg.add_compute(d, (a,), SHAPE, op=op,
+                                           name=f"v{i}"))
+            else:
+                op = draw(st.sampled_from(BINARY))
+                a = draw(st.sampled_from(tids))
+                b = draw(st.sampled_from(tids))
+                tids.append(tg.add_compute(d, (a, b), SHAPE, op=op,
+                                           name=f"v{i}"))
+            # occasionally fold a streaming reduction over recent tensors
+            if i % 7 == 6 and len(tids) >= 4:
+                parts = draw(st.lists(st.sampled_from(tids), min_size=2,
+                                      max_size=4, unique=True))
+                tids.append(tg.add_reduce(d, parts, streaming=True,
+                                          name=f"r{i}"))
+        return tg
+
+    return _graphs()

@@ -112,3 +112,60 @@ class TestFallback:
         bad["params"]["w0"] = np.zeros((3, 3), np.float32)
         with pytest.raises(ValueError):
             restore_checkpoint(tmp_path, bad)
+
+
+class TestMidWriteCrash:
+    """A crash while shards are being written (power loss, OOM-kill,
+    raising filesystem) must leave the checkpoint tree exactly as it was:
+    no partial step directory, no leaked tmp dir, prior steps restorable."""
+
+    def _crashing_writer(self, monkeypatch, fail_on_call: int):
+        import repro.ckpt.store as store_mod
+        calls = {"n": 0}
+        real = store_mod._write_shard
+
+        def boom(path, arrays):
+            calls["n"] += 1
+            if calls["n"] == fail_on_call:
+                raise OSError("injected: disk died mid-shard-write")
+            real(path, arrays)
+
+        monkeypatch.setattr(store_mod, "_write_shard", boom)
+        return calls
+
+    def test_crash_mid_write_leaves_no_partial_step(self, tmp_path,
+                                                    monkeypatch):
+        save_small_shards(tmp_path, 3)
+        calls = self._crashing_writer(monkeypatch, fail_on_call=2)
+        with pytest.raises(OSError, match="mid-shard-write"):
+            save_small_shards(tmp_path, 9)
+        assert calls["n"] == 2                      # really died partway
+        # nothing published, nothing leaked
+        names = sorted(p.name for p in tmp_path.iterdir())
+        assert names == ["step_0000000003"]
+        # and the tree still restores cleanly
+        got, step = restore_checkpoint(tmp_path, tree_at(3))
+        assert step == 3
+        np.testing.assert_array_equal(got["params"]["w0"],
+                                      tree_at(3)["params"]["w0"])
+
+    def test_crash_on_first_shard_of_first_checkpoint(self, tmp_path,
+                                                      monkeypatch):
+        self._crashing_writer(monkeypatch, fail_on_call=1)
+        with pytest.raises(OSError):
+            save_small_shards(tmp_path, 1)
+        assert list(tmp_path.iterdir()) == []       # pristine directory
+        with pytest.raises(FileNotFoundError):
+            restore_checkpoint(tmp_path, tree_at(1))
+
+    def test_leftover_tmp_dir_is_invisible(self, tmp_path):
+        """A tmp dir orphaned by a hard kill (no exception handler ran)
+        must be ignored by discovery and restore."""
+        save_small_shards(tmp_path, 4)
+        orphan = tmp_path / ".tmp_orphaned"
+        orphan.mkdir()
+        (orphan / "shard_0.npz").write_bytes(b"garbage")
+        assert latest_step(tmp_path) == 4
+        assert complete_steps(tmp_path) == [4]
+        _, step = restore_checkpoint(tmp_path, tree_at(4))
+        assert step == 4

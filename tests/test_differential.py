@@ -1,0 +1,190 @@
+"""Schedule-fuzz differential harness (the paper's §7 claims as a
+cross-executor equivalence relation).
+
+For random TASKGRAPHs × all four dispatch policies × random host/disk
+capacities, three independent executions of every buildable plan must
+agree **byte-exactly**:
+
+* the *in-memory oracle* — direct dataflow evaluation, no memory plan;
+* a *simulator replay* — the discrete-event simulator picks a schedule
+  under jittered hardware, and that exact schedule (``SimResult.start_at``)
+  is replayed through the sequential interpreter, so the simulator's
+  scheduling choices are proven execution-valid, not just priced;
+* the *threaded runtime* — real threads, condition variables, real disk
+  files for SPILL/LOAD plans.
+
+And ``validate()`` must accept exactly the schedules the executors can
+run: every buildable plan validates under the budgets it was compiled
+for, any budget below the replayed peak is rejected (``RaceError``), and
+an infeasible three-level footprint is rejected at *compile* time
+(``MemgraphOOM``) before any executor sees it.
+
+Two lanes share one checker and one generator (``helpers.py``):
+
+* the **fast lane** (no extra deps, pinned seeds) runs in CI on every
+  push;
+* the **slow lane** is hypothesis-driven (``-m slow``, nightly CI);
+  ``FUZZ_EXAMPLES`` scales the example count.
+"""
+import os
+import random as pyrandom
+
+import numpy as np
+import pytest
+
+from repro.core import BuildConfig, MemgraphOOM, build_memgraph
+from repro.core.dispatch import POLICY_NAMES
+from repro.core.memgraph import RaceError
+from repro.core.runtime import TurnipRuntime, eval_taskgraph, run_in_order
+from repro.core.simulate import HardwareModel, simulate
+
+from helpers import graph_inputs, random_taskgraph
+
+UNITS = dict(size_fn=lambda v: 1)
+
+# capacity draw spaces: None = unbounded tier; small ints force real
+# spill/load traffic; 0 disk makes any spill infeasible (must reject)
+HOST_CAPS = (None, 1, 2, 3)
+DISK_CAPS = (None, 0, 2, 4, 50)
+
+
+def _assert_equal(out, ref, what):
+    assert set(out) == set(ref)
+    for k in ref:
+        np.testing.assert_array_equal(out[k], ref[k],
+                                      err_msg=f"{what}: output {k}")
+
+
+def check_case(tg, seed: int, host_cap, disk_cap, *,
+               policies=POLICY_NAMES) -> str:
+    """One fuzz case; returns 'oom' | 'host' | 'disk' for coverage stats."""
+    cfg = BuildConfig(capacity=3, host_capacity=host_cap,
+                      disk_capacity=disk_cap, rng_seed=seed, **UNITS)
+    try:
+        res = build_memgraph(tg, cfg)
+    except MemgraphOOM as e:
+        # the compile-time feasibility check must say *which* tier cannot
+        # fit — a rejected program needs an actionable error
+        assert any(t in str(e) for t in ("device", "host tier", "disk tier"))
+        return "oom"
+    mg = res.memgraph
+
+    # validate() accepts what the executors are about to run...
+    mg.validate(check_races=True, host_capacity=host_cap,
+                disk_capacity=disk_cap)
+    prof = mg.host_tier_profile()
+    # ...and rejects any budget below the schedule's replayed peaks: the
+    # acceptance set equals the runnable set, in both directions
+    if host_cap is not None and prof["peak_units"] > 0:
+        with pytest.raises(RaceError, match="host-tier budget"):
+            mg.validate(check_races=False,
+                        host_capacity=prof["peak_units"] - 1)
+    if prof["peak_disk_units"] > 0:
+        with pytest.raises(RaceError, match="disk-tier budget"):
+            mg.validate(check_races=False,
+                        disk_capacity=prof["peak_disk_units"] - 1)
+
+    inputs = graph_inputs(tg, seed)
+    ref = eval_taskgraph(tg, inputs)          # the in-memory oracle
+    hw = HardwareModel(transfer_jitter=0.5, compute_jitter=0.2, seed=seed)
+    for policy in policies:
+        # simulator replay: execute exactly the schedule the simulator
+        # chose (ties broken deterministically by mid)
+        sim = simulate(mg, hw, mode="nondet", policy=policy)
+        order = mg.topo_order(key=lambda m: (sim.start_at[m], m))
+        _assert_equal(run_in_order(tg, res, inputs, order), ref,
+                      f"sim-replay/{policy}")
+        # threaded runtime, event-driven nondeterministic dispatch
+        rr = TurnipRuntime(tg, res, mode="nondet", policy=policy,
+                           seed=seed).run(inputs)
+        _assert_equal(rr.outputs, ref, f"threaded/{policy}")
+    # the head-of-line issue-order ablation on one policy (cost-bounded)
+    rr = TurnipRuntime(tg, res, mode="fixed", policy="fixed",
+                       seed=seed).run(inputs)
+    _assert_equal(rr.outputs, ref, "threaded/fixed-mode")
+    return "disk" if res.n_loads else "host"
+
+
+# ------------------------------------------------------------- fast lane
+def test_fuzz_seeded_differential():
+    """Pinned-seed sweep (CI fast lane): the sweep must exercise real
+    disk-tier plans, at least one compile-time rejection, and every
+    dispatch policy — all byte-exact."""
+    outcomes = {"oom": 0, "host": 0, "disk": 0}
+    for seed in range(14):
+        rng = pyrandom.Random(1000 + seed)
+        tg = random_taskgraph(rng)
+        host_cap = rng.choice(HOST_CAPS)
+        disk_cap = rng.choice(DISK_CAPS) if host_cap is not None else None
+        outcomes[check_case(tg, seed, host_cap, disk_cap)] += 1
+    assert outcomes["disk"] >= 3, outcomes    # disk tier really exercised
+    assert outcomes["oom"] >= 1, outcomes     # rejection path exercised
+
+
+def test_disk_budget_rejection_is_exact():
+    """A plan whose spilled working set needs N disk units builds under a
+    budget of N, and is rejected under N-1 — the feasibility check is
+    tight, not merely conservative."""
+    from helpers import fig3_taskgraph
+    tg = fig3_taskgraph()
+    res = build_memgraph(tg, BuildConfig(capacity=3, host_capacity=1,
+                                         **UNITS))
+    need = res.peak_disk
+    assert need > 0
+    ok = build_memgraph(tg, BuildConfig(capacity=3, host_capacity=1,
+                                        disk_capacity=need, **UNITS))
+    ok.memgraph.validate(host_capacity=1, disk_capacity=need)
+    with pytest.raises(MemgraphOOM, match="disk tier"):
+        build_memgraph(tg, BuildConfig(capacity=3, host_capacity=1,
+                                       disk_capacity=need - 1, **UNITS))
+
+
+def test_prefetch_plans_profile_like_reactive_plans():
+    """Prefetch moves LOADs earlier in the schedule; it must never move
+    the budgets: hoisted plans still validate under the same host/disk
+    capacities, and hide real bytes."""
+    n_hoisted = 0
+    for seed in range(10):
+        tg = random_taskgraph(pyrandom.Random(2000 + seed))
+        try:
+            on = build_memgraph(tg, BuildConfig(
+                capacity=3, host_capacity=1 + seed % 3, **UNITS))
+            off = build_memgraph(tg, BuildConfig(
+                capacity=3, host_capacity=1 + seed % 3,
+                prefetch_distance=0, **UNITS))
+        except MemgraphOOM:
+            continue
+        assert off.n_prefetches == 0
+        on.memgraph.validate(check_races=True,
+                             host_capacity=1 + seed % 3)
+        if on.n_prefetches:
+            n_hoisted += 1
+            assert on.stall_bytes_hidden > 0
+            prof = on.memgraph.host_tier_profile()
+            assert prof["n_prefetches"] == on.n_prefetches
+    assert n_hoisted >= 2      # the sweep must hit real prefetch plans
+
+
+# ------------------------------------------------------------- slow lane
+@pytest.mark.slow
+def test_fuzz_hypothesis_differential():
+    """Hypothesis-driven lane (nightly CI: ``-m slow`` with a larger
+    ``FUZZ_EXAMPLES``): same checker, generated graphs and budgets."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import HealthCheck, given, settings, strategies as st
+    from helpers import taskgraphs
+
+    max_examples = int(os.environ.get("FUZZ_EXAMPLES", "25"))
+
+    @settings(max_examples=max_examples, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(tg=taskgraphs(), seed=st.integers(0, 2**16),
+           host_cap=st.sampled_from(HOST_CAPS),
+           disk_cap=st.sampled_from(DISK_CAPS))
+    def inner(tg, seed, host_cap, disk_cap):
+        if host_cap is None:
+            disk_cap = None       # an unbounded host never spills to disk
+        check_case(tg, seed, host_cap, disk_cap,
+                   policies=("random", "critical-path"))
+
+    inner()

@@ -7,7 +7,7 @@ import random as pyrandom
 import numpy as np
 import pytest
 
-from repro.core import (BuildConfig, MemgraphOOM, OpKind, TaskGraph,
+from repro.core import (BuildConfig, MemgraphOOM, TaskGraph,
                         build_memgraph, get_policy)
 from repro.core.dispatch import (COMPUTE, POLICY_NAMES, TRANSFER_KINDS,
                                  CriticalPathPolicy, TransferFirstPolicy,
@@ -15,35 +15,11 @@ from repro.core.dispatch import (COMPUTE, POLICY_NAMES, TRANSFER_KINDS,
 from repro.core.runtime import TurnipRuntime, eval_taskgraph
 from repro.core.simulate import HardwareModel, simulate
 
-from helpers import fig3_taskgraph, int_inputs
-
-SHAPE = (4, 4)
-UNARY = ["relu", "transpose", "copy"]
-BINARY = ["add", "mul", "matmul", "matmul_t"]
-
-
-def random_taskgraph(rng: pyrandom.Random) -> TaskGraph:
-    """Seeded analogue of test_property_memgraph's hypothesis strategy, so
-    the policy sweep runs without the hypothesis dependency."""
-    n_dev = rng.randint(1, 3)
-    tg = TaskGraph()
-    tids = []
-    for i in range(rng.randint(1, 3)):
-        for d in range(n_dev):
-            tids.append(tg.add_input(d, SHAPE, name=f"in{d}.{i}"))
-    for i in range(rng.randint(6, 18)):
-        d = rng.randrange(n_dev)
-        if rng.random() < 0.5:
-            tids.append(tg.add_compute(d, (rng.choice(tids),), SHAPE,
-                                       op=rng.choice(UNARY), name=f"v{i}"))
-        else:
-            tids.append(tg.add_compute(
-                d, (rng.choice(tids), rng.choice(tids)), SHAPE,
-                op=rng.choice(BINARY), name=f"v{i}"))
-        if i % 7 == 6 and len(tids) >= 4:
-            parts = rng.sample(tids, k=min(len(tids), rng.randint(2, 4)))
-            tids.append(tg.add_reduce(d, parts, streaming=True, name=f"r{i}"))
-    return tg
+# the random-graph generator and inputs are the shared ones in helpers.py
+# (one distribution across the dispatch sweep, the tiering tests, and the
+# differential fuzz harness)
+from helpers import (fig3_taskgraph, graph_inputs, int_inputs,
+                     random_taskgraph)
 
 
 def offload_heavy_build(tg: TaskGraph, cap: int = 3):
@@ -54,12 +30,6 @@ def offload_heavy_build(tg: TaskGraph, cap: int = 3):
     except MemgraphOOM:
         return None
     return res
-
-
-def graph_inputs(tg: TaskGraph, seed: int):
-    rng = np.random.default_rng(seed)
-    return {t: rng.integers(-3, 4, v.out.shape).astype(np.float64)
-            for t, v in tg.vertices.items() if v.kind == OpKind.INPUT}
 
 
 @pytest.mark.parametrize("policy", POLICY_NAMES)

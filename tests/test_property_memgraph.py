@@ -14,41 +14,10 @@ from repro.core import (BuildConfig, MemgraphOOM, OpKind, TaskGraph,
                         build_memgraph)
 from repro.core.runtime import eval_taskgraph, run_in_order
 
-SHAPE = (4, 4)
-UNARY = ["relu", "transpose", "copy"]
-BINARY = ["add", "mul", "matmul", "matmul_t"]
-
-
-@st.composite
-def taskgraphs(draw):
-    n_dev = draw(st.integers(1, 3))
-    n_inputs = draw(st.integers(1, 3))
-    n_ops = draw(st.integers(3, 18))
-    tg = TaskGraph()
-    tids = []
-    for i in range(n_inputs):
-        for d in range(n_dev):
-            tids.append(tg.add_input(d, SHAPE, name=f"in{d}.{i}"))
-    for i in range(n_ops):
-        d = draw(st.integers(0, n_dev - 1))
-        arity = draw(st.integers(1, 2))
-        if arity == 1:
-            op = draw(st.sampled_from(UNARY))
-            a = draw(st.sampled_from(tids))
-            tids.append(tg.add_compute(d, (a,), SHAPE, op=op, name=f"v{i}"))
-        else:
-            op = draw(st.sampled_from(BINARY))
-            a = draw(st.sampled_from(tids))
-            b = draw(st.sampled_from(tids))
-            tids.append(tg.add_compute(d, (a, b), SHAPE, op=op,
-                                       name=f"v{i}"))
-        # occasionally fold a streaming reduction over recent tensors
-        if i % 7 == 6 and len(tids) >= 4:
-            parts = draw(st.lists(st.sampled_from(tids), min_size=2,
-                                  max_size=4, unique=True))
-            tids.append(tg.add_reduce(d, parts, streaming=True,
-                                      name=f"r{i}"))
-    return tg
+# the shared TASKGRAPH strategy (helpers.py): one distribution across the
+# property tests, the seeded dispatch/tiering sweeps, and the differential
+# fuzz harness
+from helpers import taskgraphs
 
 
 @st.composite

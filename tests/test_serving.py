@@ -212,6 +212,38 @@ def test_tiered_kv_matches_oracle_every_policy(lm, policy):
         assert eng.host.disk.resident_bytes == 0
 
 
+def test_swapped_queue_prefetch_fires_and_stays_oracle_exact(lm):
+    """NEO-style predictive prefetch (DESIGN.md §11): with a host budget
+    wide enough to hold a couple of blocks, the engine stages the
+    next-scheduled swapped request's disk-resident blocks back to host
+    *before* admission (prefetch_bytes > 0) — and tokens are identical to
+    the oracle and to a prefetch-off run (timing only, never results)."""
+    model, params = lm
+    prompts = [list(range(1, 25)), list(range(30, 48)), [7, 8, 9, 10, 11]]
+    want = oracle(lm, prompts, max_new=8, max_len=64)
+    # a ~3-block host budget: swapped-out requests' mirrors spill to disk,
+    # yet the prefetcher keeps headroom (net of in-flight reload
+    # reservations) to stage the next resume back in
+    blk = PagedKVCache(model, 1, 64, block_size=8).block_nbytes
+
+    def run(prefetch):
+        cfg = ServeConfig(max_len=64, batch_buckets=(1,), block_size=8,
+                          offload=True, hot_window=0, offload_fraction=1.0,
+                          preempt_every=3, h2d_bw=500e6, d2h_bw=500e6,
+                          disk_bw=300e6, host_kv_bytes=3 * blk,
+                          prefetch_swapped=prefetch)
+        with Engine(model, params, cfg) as eng:
+            out = eng.generate(prompts, max_new=8)
+            return out, eng.stats
+
+    out_on, st_on = run(True)
+    out_off, st_off = run(False)
+    assert out_on == want and out_off == want
+    assert st_on.disk_spill_bytes > 0            # the disk tier was real
+    assert st_on.prefetch_bytes > 0              # prediction actually fired
+    assert st_off.prefetch_bytes == 0
+
+
 def test_tiered_kv_roomy_host_never_touches_disk(lm):
     """A host tier wider than the KV working set must behave exactly like
     the plain HostStore path: zero disk traffic."""

@@ -1,9 +1,13 @@
-"""The tiered storage hierarchy (DESIGN.md §10): DiskStore/TieredStore
-semantics, compile-time spill/load chains, per-tier budget validation, and
-tier transparency — bounded-host plans reproduce the unbounded oracle
-bit-for-bit on the threaded runtime under every dispatch policy (a seeded
-mirror of the hypothesis property, so it runs without the extra dep)."""
+"""The tiered storage hierarchy (DESIGN.md §10/§11): DiskStore/TieredStore
+semantics, disk-tier fault injection (truncated/missing blobs, full-disk
+refusal — typed errors, promptly, never a hang), compile-time spill/load
+chains, per-tier budget validation, and tier transparency — bounded-host
+plans reproduce the unbounded oracle bit-for-bit on the threaded runtime
+under every dispatch policy (a seeded mirror of the hypothesis property,
+so it runs without the extra dep)."""
 import random as pyrandom
+import threading
+import time
 
 import numpy as np
 import pytest
@@ -16,9 +20,10 @@ from repro.core.runtime import (DiskStore, HostStore, TieredStore,
                                 TurnipRuntime, eval_taskgraph, make_store,
                                 run_in_order)
 from repro.core.simulate import HardwareModel, simulate
+from repro.core.stores import DiskCorruptionError, DiskFullError
 
-from helpers import fig3_taskgraph, int_inputs
-from test_dispatch import graph_inputs, random_taskgraph
+from helpers import (fig3_taskgraph, graph_inputs, int_inputs,
+                     random_taskgraph)
 
 UNITS = dict(size_fn=lambda v: 1)
 
@@ -94,6 +99,124 @@ class TestTieredStore:
         hs.put_offload("a", np.ones(16))
         hs.pop_offload("a")
         assert hs.peak_resident_bytes == 128 and hs.resident_bytes == 0
+
+
+# ------------------------------------------------- disk-tier faults (§11)
+class TestDiskFaults:
+    """Truncated/missing spill files and full-disk refusal raise typed
+    errors promptly — no executor or stream may hang on rotten bytes."""
+
+    def test_missing_blob_raises_typed(self, tmp_path):
+        ds = DiskStore(tmp_path)
+        ds.put("k", np.arange(8, dtype=np.float32))
+        path, _ = ds._files["k"]
+        path.unlink()
+        with pytest.raises(DiskCorruptionError, match="missing or corrupt"):
+            ds.get("k")
+        ds.close()
+
+    def test_truncated_blob_raises_typed(self, tmp_path):
+        ds = DiskStore(tmp_path)
+        ds.put("k", np.arange(64, dtype=np.float64))
+        path, _ = ds._files["k"]
+        path.write_bytes(path.read_bytes()[:13])      # torn mid-write
+        with pytest.raises(DiskCorruptionError):
+            ds.get("k")
+        # an unknown key is caller error, not corruption
+        with pytest.raises(KeyError):
+            ds.get("never-put")
+        ds.close()
+
+    def test_full_disk_refusal_prompt_and_typed(self):
+        ds = DiskStore(capacity=100)
+        ds.put("a", np.zeros(10, np.float64))          # 80 B
+        with pytest.raises(DiskFullError, match="disk tier full"):
+            ds.put("b", np.zeros(10, np.float64))
+        # refusal left the tier unchanged; freeing space readmits
+        assert ds.resident_bytes == 80 and "b" not in ds
+        ds.drop("a")
+        ds.put("b", np.zeros(10, np.float64))
+        # overwriting charges only the delta, not put-size twice
+        ds.put("b", np.zeros(12, np.float64))
+        assert ds.resident_bytes == 96
+        ds.close()
+
+    def test_tiered_auto_spill_surfaces_refusal(self):
+        ts = TieredStore({}, host_capacity=100, disk_capacity=100)
+        ts.put_offload("a", np.zeros(10))
+        ts.put_offload("b", np.full(10, 2.0))          # spills "a": disk 80
+        with pytest.raises(DiskFullError):
+            ts.put_offload("c", np.zeros(10))          # next spill overflows
+        # refusal rolled the hierarchy back: the spill victim's only copy
+        # went back to the host tier, the refused admission was undone,
+        # and the host budget still holds
+        assert ts.tier_of("b") == "host"
+        np.testing.assert_array_equal(ts.peek_offload("b"), np.full(10, 2.0))
+        assert ts.tier_of("c") is None
+        assert ts.resident_bytes <= 100
+        ts.close()
+
+    def test_plan_driven_spill_refusal_keeps_host_copy(self):
+        ts = TieredStore({}, auto_spill=False, disk=DiskStore(capacity=0))
+        ts.put_offload("k", np.arange(4.0))
+        with pytest.raises(DiskFullError):
+            ts.spill("k")
+        assert ts.tier_of("k") == "host"               # nothing changed
+        np.testing.assert_array_equal(ts.get_offload("k"), np.arange(4.0))
+        ts.close()
+
+    def test_runtime_surfaces_load_fault_and_joins_all_streams(self):
+        """A rotten blob hit by a LOAD on the disk engine must surface as
+        DiskCorruptionError from run() — promptly, with every stream
+        (compute, DMA, *and* disk) deterministically joined on the error
+        path. A silently dead disk thread would wedge the consumers."""
+
+        class _RottenDisk(DiskStore):
+            def get(self, key, *, count: bool = True):
+                raise DiskCorruptionError(f"injected rot for {key!r}")
+
+        tg = fig3_taskgraph()
+        res = build_memgraph(tg, BuildConfig(capacity=3, host_capacity=1,
+                                             **UNITS))
+        assert res.n_loads > 0
+        store = TieredStore(int_inputs(tg), auto_spill=False,
+                            disk=_RottenDisk())
+        before = set(threading.enumerate())
+        t0 = time.monotonic()
+        try:
+            with pytest.raises(DiskCorruptionError, match="injected rot"):
+                TurnipRuntime(tg, res, mode="nondet", policy="random",
+                              seed=0,
+                              store_factory=lambda inputs: store
+                              ).run(int_inputs(tg))
+        finally:
+            store.close()
+        assert time.monotonic() - t0 < 30            # prompt, not a hang
+        leaked = {t for t in set(threading.enumerate()) - before
+                  if t.name.startswith("turnip-")}
+        assert not leaked, f"streams leaked on error path: {leaked}"
+
+    def test_runtime_surfaces_spill_fault_promptly(self):
+        """Same discipline for the write side: a full disk met by a SPILL
+        vertex raises DiskFullError out of run(), threads joined."""
+        tg = fig3_taskgraph()
+        res = build_memgraph(tg, BuildConfig(capacity=3, host_capacity=1,
+                                             **UNITS))
+        assert res.n_spills > 0
+        store = TieredStore(int_inputs(tg), auto_spill=False,
+                            disk=DiskStore(capacity=0))
+        before = set(threading.enumerate())
+        try:
+            with pytest.raises(DiskFullError):
+                TurnipRuntime(tg, res, mode="nondet", policy="random",
+                              seed=0,
+                              store_factory=lambda inputs: store
+                              ).run(int_inputs(tg))
+        finally:
+            store.close()
+        leaked = {t for t in set(threading.enumerate()) - before
+                  if t.name.startswith("turnip-")}
+        assert not leaked, f"streams leaked on error path: {leaked}"
 
 
 # ------------------------------------------------------- compiled plans

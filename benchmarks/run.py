@@ -10,6 +10,9 @@ Prints ``name,us_per_call,derived`` CSV (scaffold contract). Paper artifacts:
 * serving — continuous-batching decode with KV offload + reload policies
 * tiered_offload — bounded host tier + disk spill: throughput vs host-tier
   fraction, nondet-vs-fixed under two-hop reload latency (DESIGN.md §10)
+* shared_pool — runtime + serving on one arbitrated HostPool: byte-identical
+  to isolated pools, bounded combined occupancy, priced revocation stalls
+  (DESIGN.md §12)
 * roofline — three-term model per dry-run cell (skipped when no artifacts)
 
 Figures run **isolated**: one broken benchmark emits a ``FAILED`` CSV row
@@ -43,7 +46,7 @@ def main() -> int:
     quick = os.environ.get("QUICK", "1") != "0"
     from . import (fig10_prefill, fig11_lora, stall_ablation,
                    threaded_runtime, memgraph_build, serving,
-                   tiered_offload)
+                   shared_pool, tiered_offload)
     figures = [
         ("fig10_prefill", lambda: fig10_prefill.run(quick=quick)),
         ("fig11_lora", lambda: fig11_lora.run(quick=quick)),
@@ -52,6 +55,7 @@ def main() -> int:
         ("memgraph_build", lambda: memgraph_build.run(quick=quick)),
         ("serving", lambda: serving.run(quick=quick)),
         ("tiered_offload", lambda: tiered_offload.run(quick=quick)),
+        ("shared_pool", lambda: shared_pool.run(quick=quick)),
         ("roofline", _roofline),
     ]
     print("name,us_per_call,derived")

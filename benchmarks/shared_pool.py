@@ -1,0 +1,165 @@
+"""Shared host pool benchmark: one arbitrated budget, two consumers
+(DESIGN.md §12).
+
+TURNIP treats CPU RAM as the cheap tier that makes a small device budget
+survivable — but CPU RAM is one physical pool, and the MEMGRAPH runtime's
+offload traffic and the serving engine's KV mirror used to budget it
+independently. This benchmark runs both against ONE
+:class:`~repro.core.pool.HostPool` and answers three questions:
+
+1. **Does arbitration preserve results?** For every arbitration policy
+   (static / demand / priority), a MEMGRAPH plan and the serving engine
+   run *concurrently* on one pool; the plan's outputs must be
+   byte-identical to an isolated-pool run and the engine's tokens must
+   match the isolated engine token-for-token. Leases move grants, fire
+   revocations, and defer transfers — timing only, never results.
+
+2. **Is the bound real?** The pool's ``peak_bytes`` (reservations + plan
+   occupancy) must never exceed its capacity, while each consumer still
+   makes progress — the whole point of pool-level arbitration over
+   per-consumer budgets that can jointly overcommit.
+
+3. **What does contention cost?** The discrete-event simulator prices the
+   cross-consumer revocation stalls (``HardwareModel.pool_contention`` /
+   ``revoke_stall``): the same plan is simulated with an isolated pool
+   (contention 0) and under serving pressure, quantifying the makespan a
+   co-resident consumer costs a MEMGRAPH plan.
+
+CSV contract: ``name,us_per_call,derived`` via :func:`benchmarks.common.emit`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+import threading
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax                                                     # noqa: E402
+import numpy as np                                             # noqa: E402
+
+from repro.configs.base import ArchConfig                      # noqa: E402
+from repro.core import (ARBITRATION_POLICY_NAMES, BuildConfig,  # noqa: E402
+                        HostPool, build_memgraph)
+from repro.core.runtime import TurnipRuntime, eval_taskgraph   # noqa: E402
+from repro.core.simulate import simulate                       # noqa: E402
+from repro.models import build_model                           # noqa: E402
+from repro.serve import (Engine, PagedKVCache, ServeConfig,    # noqa: E402
+                         naive_generate)
+
+from .common import P100_SERVER, emit                          # noqa: E402
+from .tiered_offload import activation_workload                # noqa: E402
+
+ARCH = ArchConfig(name="pool-demo", family="dense", n_layers=2,
+                  d_model=64, n_heads=2, n_kv_heads=2, d_ff=128,
+                  vocab_size=256, dtype="float32")
+MAX_LEN = 64
+BLOCK = 8
+
+
+def _serve_cfg() -> ServeConfig:
+    return ServeConfig(max_len=MAX_LEN, batch_buckets=(1,), block_size=BLOCK,
+                       offload=True, hot_window=0, offload_fraction=1.0,
+                       preempt_every=3, h2d_bw=500e6, d2h_bw=500e6,
+                       disk_bw=300e6)
+
+
+def run(quick: bool = True) -> list[dict]:
+    # ---- the two workloads -------------------------------------------
+    tg = activation_workload(n_layers=6 if quick else 12, batch=16, d=64)
+    act_bytes = tg.vertices[0].out.nbytes
+    res = build_memgraph(tg, BuildConfig(capacity=6 * act_bytes,
+                                         host_capacity=6 * act_bytes))
+    assert res.n_spills > 0, "plan never pressed the host tier"
+    rng = np.random.default_rng(0)
+    inputs = {t: rng.standard_normal(v.out.shape).astype(np.float32) * 0.1
+              for t, v in tg.vertices.items() if v.kind.value == "input"}
+    ref = eval_taskgraph(tg, inputs)
+
+    model = build_model(ARCH)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = [list(rng.integers(1, ARCH.vocab_size, n))
+               for n in (24, 18, 9)]
+    max_new = 6
+    want = [naive_generate(model, params, p, max_new=max_new,
+                           max_len=MAX_LEN, rid=i, seed=0)
+            for i, p in enumerate(prompts)]
+    blk = PagedKVCache(model, 1, MAX_LEN, block_size=BLOCK).block_nbytes
+
+    # ---- isolated baseline: each consumer on a private pool ----------
+    rr_iso = TurnipRuntime(tg, res, mode="nondet", policy="critical-path",
+                           seed=0).run(inputs)
+    for k in ref:
+        np.testing.assert_array_equal(rr_iso.outputs[k], ref[k])
+    with Engine(model, params, _serve_cfg()) as eng:
+        out_iso = eng.generate(prompts, max_new=max_new)
+    assert out_iso == want
+    emit("shared_pool/isolated", rr_iso.makespan * 1e6,
+         f"runtime_peak_host_B={rr_iso.peak_host_bytes};"
+         f"tokens={sum(len(o) for o in out_iso)}")
+
+    rows: list[dict] = []
+    # ---- 1+2: both consumers, one pool, every arbitration policy ------
+    mem_floor = rr_iso.peak_host_bytes
+    capacity = 8 * blk + mem_floor
+    for arb in ARBITRATION_POLICY_NAMES:
+        pool = HostPool(capacity, policy=arb)
+        mem_lease = pool.lease("memgraph", min_bytes=mem_floor, priority=1)
+        box: dict = {}
+
+        def run_runtime():
+            rt = TurnipRuntime(tg, res, mode="nondet",
+                               policy="critical-path", seed=0,
+                               host_lease=mem_lease)
+            box["rr"] = rt.run(inputs)
+
+        with Engine(model, params, _serve_cfg(), pool=pool) as eng:
+            th = threading.Thread(target=run_runtime)
+            th.start()
+            out = eng.generate(prompts, max_new=max_new)
+            th.join(120)
+            assert not th.is_alive(), f"pooled runtime wedged under {arb}"
+            st = eng.stats
+            snap = pool.snapshot()      # before close() retires the leases
+        rr = box["rr"]
+        # the headline invariants: byte-identical results, bounded pool
+        assert out == want, f"{arb}: serving tokens diverged"
+        for k in ref:
+            np.testing.assert_array_equal(
+                rr.outputs[k], ref[k],
+                err_msg=f"{arb}: runtime output {k} diverged")
+        assert snap["peak_bytes"] <= snap["capacity"], \
+            f"{arb}: pool burst its budget ({snap})"
+        assert snap["used_bytes"] == snap["leases"]["memgraph"]["used"], \
+            f"{arb}: serving leases did not drain"
+        rows.append(dict(policy=arb, makespan_ms=rr.makespan * 1e3,
+                         peak=snap["peak_bytes"], cap=snap["capacity"],
+                         revocations=snap["revocations"],
+                         deferrals=st.lease_deferrals))
+        emit(f"shared_pool/{arb}", rr.makespan * 1e6,
+             f"peak_B={snap['peak_bytes']}/{snap['capacity']};"
+             f"revocations={snap['revocations']};"
+             f"deferrals={st.lease_deferrals};"
+             f"kv_refusals={snap['leases']['kv']['refusals']};"
+             f"byte_identical=1")
+
+    # ---- 3: the simulator prices cross-consumer revocation stalls -----
+    hw = dataclasses.replace(P100_SERVER["hw"], transfer_jitter=0.0)
+    s_iso = simulate(res.memgraph, hw, mode="nondet", policy="critical-path")
+    hw_shared = dataclasses.replace(hw, pool_contention=0.3,
+                                    revoke_stall=2e-3)
+    s_shared = simulate(res.memgraph, hw_shared, mode="nondet",
+                        policy="critical-path")
+    assert s_shared.makespan >= s_iso.makespan
+    rows.append(dict(sim_iso_ms=s_iso.makespan * 1e3,
+                     sim_shared_ms=s_shared.makespan * 1e3))
+    emit("shared_pool/contention_price", s_shared.makespan * 1e6,
+         f"isolated_ms={s_iso.makespan*1e3:.2f};"
+         f"shared_ms={s_shared.makespan*1e3:.2f};"
+         f"slowdown={s_shared.makespan/max(s_iso.makespan, 1e-12):.2f}x")
+    return rows
+
+
+if __name__ == "__main__":   # PYTHONPATH=src python -m benchmarks.shared_pool
+    run(quick=True)

@@ -5,6 +5,8 @@ from .memgraph import DepKind, Loc, MemGraph, MemOp, MemVertex, RaceError
 from .build import BuildConfig, BuildResult, MemgraphOOM, build_memgraph
 from .dispatch import DispatchPolicy, POLICY_NAMES, get_policy
 from .stores import DiskStore, HostStore, TieredStore
+from .pool import (ARBITRATION_POLICY_NAMES, ArbitrationPolicy, HostPool,
+                   Lease, LeaseRefusal, get_arbitration_policy)
 
 __all__ = [
     "OpKind", "TaskGraph", "TaskVertex", "TensorSpec",
@@ -12,4 +14,6 @@ __all__ = [
     "BuildConfig", "BuildResult", "MemgraphOOM", "build_memgraph",
     "DispatchPolicy", "POLICY_NAMES", "get_policy",
     "DiskStore", "HostStore", "TieredStore",
+    "ARBITRATION_POLICY_NAMES", "ArbitrationPolicy", "HostPool",
+    "Lease", "LeaseRefusal", "get_arbitration_policy",
 ]

@@ -100,6 +100,14 @@ class BuildConfig:
     # (SPILL vertices) and reloads them through two-hop LOAD→RELOAD
     # chains (DESIGN.md §10).
     host_capacity: int | None = None
+    # shared-pool mode (DESIGN.md §12): a repro.core.pool.Lease instead of
+    # a private budget. The feasibility check charges the *leased share* —
+    # the lease's inviolable floor (min_bytes; a floorless lease is
+    # refused, its grant being revocable) — never the whole pool, so a
+    # plan compiled under a lease stays feasible no matter how the
+    # arbiter moves the other consumers' slack. host_capacity is ignored
+    # when a lease is set (the lease IS the capacity request).
+    host_lease: Any = None
     # disk-tier budget (same units). None = unbounded disk. Bounded, the
     # builder replays blob creation/release and raises MemgraphOOM at
     # compile time when the three-level footprint cannot fit (§11).
@@ -112,6 +120,24 @@ class BuildConfig:
 
     def size_of(self, v: TaskVertex) -> int:
         return (self.size_fn or (lambda u: u.out.nbytes))(v)
+
+    def host_budget(self) -> int | None:
+        """The host-tier units this plan may charge: the leased share
+        under a pool, else the private ``host_capacity``.
+
+        The leased share is the lease's *floor* (``min_bytes``) — the only
+        number the arbiter guarantees for the plan's whole lifetime. A
+        floorless lease is refused here: its grant is revocable, so a plan
+        compiled against it could later hold more than the arbiter can
+        honor and silently burst the pool bound (DESIGN.md §12)."""
+        if self.host_lease is not None:
+            if not self.host_lease.min_bytes:
+                raise ValueError(
+                    f"host_lease {self.host_lease.name!r} has no floor: "
+                    "compile-time feasibility needs an inviolable share — "
+                    "request the lease with min_bytes=<host budget>")
+            return self.host_lease.min_bytes
+        return self.host_capacity
 
     def cap_of(self, device: int) -> int:
         if isinstance(self.capacity, dict):
@@ -162,10 +188,10 @@ def build_memgraph(
     at those points. A plan with nothing to hoist returns pass 1 as-is."""
     builder = _Builder(tg, config, order)
     res = builder.run()
-    if (config.host_capacity is None or config.prefetch_distance <= 0
+    if (config.host_budget() is None or config.prefetch_distance <= 0
             or not builder.load_records):
         return res
-    plan = PrefetchPlan(config.host_capacity, builder.occ_at,
+    plan = PrefetchPlan(config.host_budget(), builder.occ_at,
                         config.prefetch_distance)
     hints = plan.compute(builder.load_records)
     if not hints:
@@ -222,8 +248,9 @@ class _Builder:
         self.groups: dict[int, tuple[int, int]] = {}
 
         # the host tier: one CPU-RAM arena shared by all devices, with
-        # Belady-over-the-schedule victim choice (DESIGN.md §10)
-        self.hostplan = HostPlan(config.host_capacity, self._host_next_use)
+        # Belady-over-the-schedule victim choice (DESIGN.md §10). Under a
+        # pool (§12) the budget is the leased share, not the whole pool.
+        self.hostplan = HostPlan(config.host_budget(), self._host_next_use)
         self.host_key_of: dict[int, int] = {}      # tid -> host-store key
 
         self.seq = 0
@@ -334,7 +361,7 @@ class _Builder:
                 f"disk tier of {cap} units cannot hold the spilled working "
                 f"set: {self.disk_units} units live after spilling task "
                 f"{tid} — the three-level footprint does not fit "
-                f"(host={self.cfg.host_capacity}, disk={cap})")
+                f"(host={self.cfg.host_budget()}, disk={cap})")
 
     def _emit_disk_drop(self, e: HostEntry) -> int:
         """Release a dead, non-resident entry's disk blob: a zero-host-unit
@@ -369,8 +396,9 @@ class _Builder:
                                    exclude=exclude)
         if deps is None:
             raise MemgraphOOM(
-                f"host tier of {self.cfg.host_capacity} units cannot stage "
-                f"{size} units for task {tid}")
+                f"host tier of {self.cfg.host_budget()} units"
+                f"{' (leased share)' if self.cfg.host_lease is not None else ''}"
+                f" cannot stage {size} units for task {tid}")
         for d in deps:
             self.mg.add_dep(d, producer_mid, DepKind.MEM)
         self._win_max = max(self._win_max, self.hostplan.used_units)

@@ -54,14 +54,22 @@ __all__ = ["HostStore", "DiskStore", "TieredStore", "SlotTable", "ByteArena",
            "run_in_order", "TurnipRuntime", "RunResult", "make_store"]
 
 
-def make_store(mg: MemGraph, inputs: dict[int, np.ndarray]) -> HostStore:
+def make_store(mg: MemGraph, inputs: dict[int, np.ndarray], *,
+               lease=None) -> HostStore:
     """The store a plan needs: a plain :class:`HostStore`, or — when the
     compiler emitted disk-tier SPILL/LOAD vertices — a :class:`TieredStore`
-    whose spills actually hit files. The caller owns ``close()``."""
-    if any(v.op in (MemOp.SPILL, MemOp.LOAD) for v in mg.vertices.values()):
+    whose spills actually hit files. The caller owns ``close()``.
+
+    ``lease``: a :class:`~repro.core.pool.Lease` when the plan's host
+    copies live in a shared arbitrated pool (DESIGN.md §12) — occupancy
+    is mirrored into the lease so the arbiter sees this consumer's
+    pressure. A leased store is always tiered (even for plans with no
+    disk vertices) so occupancy accounting rides the same hooks."""
+    if lease is not None or any(v.op in (MemOp.SPILL, MemOp.LOAD)
+                                for v in mg.vertices.values()):
         # capacity enforcement lives in the plan (auto_spill off): the
         # SPILL/LOAD vertices are the Belady-chosen tier traffic
-        return TieredStore(inputs, auto_spill=False)
+        return TieredStore(inputs, auto_spill=False, lease=lease)
     return HostStore(inputs)
 
 
@@ -317,9 +325,13 @@ class TurnipRuntime:
                  backend: str = "slots",
                  capacities: dict[int, int] | None = None,
                  store_factory: Callable[[dict], HostStore] | None = None,
+                 host_lease=None,
                  seed: int | None = None) -> None:
         if mode not in ("nondet", "fixed"):
             raise ValueError(mode)
+        if host_lease is not None and store_factory is not None:
+            raise ValueError("pass host_lease OR store_factory, not both "
+                             "(attach the lease inside the factory instead)")
         self.tg, self.res, self.mg = tg, res, res.memgraph
         self.n_streams = n_streams
         self.n_transfer_streams = n_transfer_streams
@@ -329,6 +341,10 @@ class TurnipRuntime:
         self.backend = backend
         self.capacities = capacities
         self.store_factory = store_factory
+        # shared-pool mode (DESIGN.md §12): the runtime-owned store joins
+        # an arbitrated HostPool under this lease — occupancy is mirrored
+        # so serving pressure and MEMGRAPH offload traffic meet one budget
+        self.host_lease = host_lease
 
     def run(self, inputs: dict[int, np.ndarray]) -> RunResult:
         mg = self.mg
@@ -339,7 +355,7 @@ class TurnipRuntime:
         else:
             mem = SlotTable()
         owns_store = self.store_factory is None
-        host = (make_store(mg, inputs) if owns_store
+        host = (make_store(mg, inputs, lease=self.host_lease) if owns_store
                 else self.store_factory(inputs))
         try:
             return self._run(inputs, mem, host)

@@ -61,6 +61,16 @@ class HardwareModel:
     # so fixed-vs-nondet comparisons are paired.
     transfer_jitter: float = 0.0
     compute_jitter: float = 0.0
+    # Shared-pool contention (DESIGN.md §12): when the host arena is an
+    # arbitrated HostPool, another consumer's pressure can revoke this
+    # plan's slack mid-flight, turning a host-resident staging into a
+    # re-stage from disk. pool_contention is the probability a disk-tier
+    # op hits a revoked extent and pays revoke_stall extra seconds — a
+    # seeded per-vertex Bernoulli draw (common random numbers, like the
+    # jitter), so fixed-vs-nondet and pooled-vs-isolated comparisons are
+    # paired. 0 (default) prices an isolated pool exactly as before.
+    pool_contention: float = 0.0
+    revoke_stall: float = 500e-6
     seed: int = 0
 
     def duration(self, v: MemVertex) -> float:
@@ -79,6 +89,7 @@ class HardwareModel:
             # fixed-vs-nondet comparisons stay common-random-numbers even
             # when the nondeterminism source is the disk tier
             base = self.disk_latency + v.nbytes / self.disk_bw
+            base += self._revoked(v.mid) * self.revoke_stall
             return base * self._jit(v.mid, self.transfer_jitter)
         bw = {_H2D: self.h2d_bw, _D2H: self.d2h_bw, _D2D: self.d2d_bw}[eng]
         base = self.dma_latency + v.nbytes / bw
@@ -91,6 +102,16 @@ class HardwareModel:
         import random
         r = random.Random((self.seed << 20) ^ mid)
         return math.exp(r.gauss(0.0, sigma) - sigma * sigma / 2.0)
+
+    def _revoked(self, mid: int) -> int:
+        """Paired per-vertex draw: does this disk op hit a revoked extent?
+        (Distinct stream from the jitter draw so enabling contention never
+        reshuffles the jitter multipliers.)"""
+        if self.pool_contention <= 0.0:
+            return 0
+        import random
+        r = random.Random((self.seed << 21) ^ (mid * 2654435761))
+        return int(r.random() < self.pool_contention)
 
 
 @dataclasses.dataclass

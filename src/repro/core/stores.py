@@ -97,8 +97,16 @@ class HostStore:
     def _touch(self, key) -> None:
         """Record a use of ``key`` for recency-based victim choice."""
 
-    def _admit_locked(self, key) -> None:
-        """Called (lock held) after ``key`` lands in the host arena."""
+    def _admit_locked(self, key, *, fresh: bool = True) -> None:
+        """Called (lock held) after ``key`` lands in the host arena.
+        ``fresh`` distinguishes a new write (which supersedes any older
+        copy on a lower tier) from a disk→host staging (whose disk copy
+        stays authoritative)."""
+
+    def _account_locked(self, delta: int) -> None:
+        """Called (lock held) on every ``resident_bytes`` change — the
+        seam a pool :class:`~repro.core.pool.Lease` mirrors occupancy
+        through."""
 
     def put_offload(self, key, value) -> None:
         """Store an offloaded tensor (or flat dict of tensors — a serving
@@ -106,13 +114,13 @@ class HostStore:
         n = _nbytes(value)
         with self._lock:
             prev = self.offloaded.get(key)
-            if prev is not None:
-                self.resident_bytes -= _nbytes(prev)
+            prev_n = _nbytes(prev) if prev is not None else 0
             self.offloaded[key] = value
             self.offload_bytes += n
-            self.resident_bytes += n
+            self.resident_bytes += n - prev_n
             self.peak_resident_bytes = max(self.peak_resident_bytes,
                                            self.resident_bytes)
+            self._account_locked(n - prev_n)
             self._admit_locked(key)
 
     def get_offload(self, key):
@@ -129,6 +137,7 @@ class HostStore:
             val = self.offloaded.pop(key, None)
             if val is not None:
                 self.resident_bytes -= _nbytes(val)
+                self._account_locked(-_nbytes(val))
 
     def peek_offload(self, key):
         """Read a value without counting traffic (final-output collection).
@@ -221,32 +230,49 @@ class DiskStore:
                                            self.resident_bytes)
         return n
 
+    def _read_blob(self, path: pathlib.Path):
+        """The raw file read (a test seam for fault/race injection)."""
+        with np.load(path) as data:
+            if set(data.files) == {self._ARR}:
+                return data[self._ARR]
+            return {k: data[k] for k in data.files}
+
     def get(self, key, *, count: bool = True):
         """Read ``key``'s blob back. An unknown key raises ``KeyError``; a
         known key whose backing file is missing or unreadable raises
         :class:`DiskCorruptionError` immediately (fail fast on the disk
-        stream — a LOAD must never hang its consumers on rotten bytes)."""
+        stream — a LOAD must never hang its consumers on rotten bytes).
+
+        The path is resolved under the lock but the file is read outside
+        it (so slow I/O never serializes the tier); a concurrent
+        :meth:`drop` can therefore unlink the blob mid-read. That is a
+        healthy, legitimately-freed key — not corruption — so a failed
+        read re-checks membership and raises ``KeyError`` for the
+        dropped-key case instead of miscalling it rot."""
         with self._lock:
             path, n = self._files[key]
             if count:
                 self.read_bytes += n
         try:
-            with np.load(path) as data:
-                if set(data.files) == {self._ARR}:
-                    return data[self._ARR]
-                return {k: data[k] for k in data.files}
-        except (OSError, EOFError, ValueError) as e:
+            return self._read_blob(path)
+        except BaseException as e:
+            corrupt = isinstance(e, (OSError, EOFError, ValueError))
             # FileNotFoundError, zipfile.BadZipFile (an OSError subclass is
             # not guaranteed — np.load surfaces truncation as ValueError or
             # zipfile errors depending on where the bytes end)
+            if not corrupt and type(e).__module__ != "zipfile":
+                raise
+            with self._lock:
+                entry = self._files.get(key)
+            if entry is None or entry[0] != path:
+                # drop/get race: the key was freed (or freed and re-put —
+                # a re-put always gets a fresh path) while we read the old
+                # blob. The caller raced a legitimate release; the tier is
+                # healthy, so this is a stale lookup, not corruption.
+                raise KeyError(key) from None
             raise DiskCorruptionError(
                 f"spill blob for {key!r} missing or corrupt at {path}: "
                 f"{e}") from e
-        except Exception as e:
-            if type(e).__module__ == "zipfile":
-                raise DiskCorruptionError(
-                    f"spill blob for {key!r} truncated at {path}: {e}") from e
-            raise
 
     def drop(self, key) -> None:
         with self._lock:
@@ -298,13 +324,20 @@ class TieredStore(HostStore):
                  disk: DiskStore | None = None,
                  directory: str | os.PathLike | None = None,
                  disk_capacity: int | None = None,
-                 auto_spill: bool = True) -> None:
+                 auto_spill: bool = True,
+                 lease: Any = None) -> None:
         super().__init__(inputs)
         self.host_capacity = host_capacity
         self.disk = (disk if disk is not None
                      else DiskStore(directory, capacity=disk_capacity))
         self._owns_disk = disk is None
         self.auto_spill = auto_spill
+        # a pool Lease (repro.core.pool): occupancy deltas are mirrored
+        # into it, and — for auto-LRU stores — the *dynamic* grant is the
+        # effective host bound, so an arbiter revoking slack makes the
+        # next admission spill down without any inline write on the
+        # revoker's thread
+        self.lease = lease
         self._lru: dict[Any, int] = {}       # key -> last-touch counter
         self._tick = 0
 
@@ -313,35 +346,67 @@ class TieredStore(HostStore):
         self._tick += 1
         self._lru[key] = self._tick
 
-    def _admit_locked(self, key) -> None:
+    def _host_limit(self) -> int | None:
+        """The effective host bound: the lease's arbitrated grant when the
+        store belongs to a pool, else the static ``host_capacity``."""
+        if self.lease is not None:
+            return self.lease.grant
+        return self.host_capacity
+
+    def _account_locked(self, delta: int) -> None:
+        if self.lease is not None:
+            self.lease.account(delta)
+
+    def _admit_locked(self, key, *, fresh: bool = True) -> None:
         self._touch(key)
-        if not self.auto_spill or self.host_capacity is None:
-            return
-        try:
-            while (self.resident_bytes > self.host_capacity
-                   and len(self.offloaded) > 1):
-                victim = min((k for k in self.offloaded if k != key),
-                             key=lambda k: self._lru.get(k, 0), default=None)
-                if victim is None:
-                    break
-                self._spill_locked(victim)
-        except DiskFullError:
-            # the cascaded spill could not make room: refuse the admission
-            # itself, or the host tier would exceed host_capacity by one
-            # refused value per retry. The victim's bytes were already
-            # restored by _spill_locked; dropping the admitted key returns
-            # the hierarchy to its pre-put state before the error surfaces.
-            val = self.offloaded.pop(key, None)
-            if val is not None:
-                self.resident_bytes -= _nbytes(val)
-            self._lru.pop(key, None)
-            raise
+        if self.auto_spill and self._host_limit() is not None:
+            try:
+                # the limit is re-read per victim: under a lease it is the
+                # *dynamic* arbitrated grant, and each spill's accounting
+                # can move it (a demand arbiter re-splits as our occupancy
+                # drops)
+                while (self.resident_bytes > (self._host_limit() or 0)
+                       and len(self.offloaded) > 1):
+                    victim = min((k for k in self.offloaded if k != key),
+                                 key=lambda k: self._lru.get(k, 0),
+                                 default=None)
+                    if victim is None:
+                        break
+                    self._spill_locked(victim)
+            except DiskFullError:
+                # the cascaded spill could not make room: refuse the
+                # admission itself, or the host tier would exceed the
+                # bound by one refused value per retry. The victim's bytes
+                # were already restored by _spill_locked; dropping the
+                # admitted key returns the hierarchy to its pre-put state
+                # before the error surfaces — including the key's old disk
+                # twin, which is only superseded below once the admission
+                # stands (a refusal must never lose the last copy).
+                val = self.offloaded.pop(key, None)
+                if val is not None:
+                    self.resident_bytes -= _nbytes(val)
+                    self._account_locked(-_nbytes(val))
+                self._lru.pop(key, None)
+                if fresh:
+                    raise
+                # staged admission (disk→host load): the disk copy is
+                # still authoritative, so nothing is lost — the read is
+                # served without admitting the bytes, and no error
+                # surfaces for a read that used to succeed
+                return
+        if fresh:
+            # the admitted write supersedes any disk twin: the blob holds
+            # the *old* bytes, and leaving it would make a later spill
+            # dedup ("immutable disk copy already exists") resurrect them
+            # on read-through — silent data corruption
+            self.disk.drop(key)
 
     # ------------------------------------------------------------- tiers
     def _spill_locked(self, key, *, drop: bool = False) -> int:
         val = self.offloaded.pop(key, None)
         if val is not None:
             self.resident_bytes -= _nbytes(val)
+            self._account_locked(-_nbytes(val))
         self._lru.pop(key, None)
         if drop:
             self.disk.drop(key)
@@ -355,6 +420,7 @@ class TieredStore(HostStore):
                 # caller with the hierarchy unchanged
                 self.offloaded[key] = val
                 self.resident_bytes += _nbytes(val)
+                self._account_locked(_nbytes(val))
                 self._touch(key)
                 raise
         return 0
@@ -371,7 +437,15 @@ class TieredStore(HostStore):
     def load(self, key):
         """Stage ``key``'s disk copy back into host RAM (disk-read traffic
         counted; the disk copy stays valid). Idempotent when the bytes are
-        already host-resident."""
+        already host-resident.
+
+        Staging is an *admission*: it runs through the same eviction path
+        as :meth:`put_offload` (``fresh=False`` — the disk twin stays
+        authoritative), so a burst of read-throughs under ``auto_spill``
+        evicts LRU victims instead of silently pushing ``resident_bytes``
+        past the host bound. If eviction cannot make room (disk full),
+        the bytes are served without being admitted — the read succeeds
+        and the budget holds."""
         with self._lock:
             if key in self.offloaded:
                 self._touch(key)
@@ -383,8 +457,11 @@ class TieredStore(HostStore):
                 self.resident_bytes += _nbytes(val)
                 self.peak_resident_bytes = max(self.peak_resident_bytes,
                                                self.resident_bytes)
-            self._touch(key)
-            return self.offloaded[key]
+                self._account_locked(_nbytes(val))
+                self._admit_locked(key, fresh=False)
+            else:
+                self._touch(key)
+            return self.offloaded.get(key, val)
 
     # --------------------------------------------------- HostStore surface
     def get_offload(self, key):
@@ -411,7 +488,10 @@ class TieredStore(HostStore):
             if key in self.offloaded:
                 return self.offloaded[key]
         if key in self.disk:
-            return self.disk.get(key, count=False)
+            try:
+                return self.disk.get(key, count=False)
+            except KeyError:        # dropped between the check and the read
+                return None
         return None
 
     def tier_of(self, key) -> str | None:
@@ -427,5 +507,11 @@ class TieredStore(HostStore):
             return sorted(self.offloaded, key=lambda k: self._lru.get(k, 0))
 
     def close(self) -> None:
+        if self.lease is not None:
+            # the arena is being released: give the pool its bytes back
+            # even if values are still readable by a holder of the store
+            with self._lock:
+                self._account_locked(-self.resident_bytes)
+                self.lease = None
         if self._owns_disk:
             self.disk.close()

@@ -49,6 +49,17 @@ rather than a caveat:
   h2d hop. Prefetch is opportunistic — a block that misses the window
   simply takes the two-hop chain as before.
 
+* **Arbitrated shared host pool (DESIGN.md §12).** Pass
+  ``Engine(pool=HostPool(...))`` and the KV mirror lives in a pool-level
+  budget shared with other consumers (a runtime's MEMGRAPH offloads):
+  the engine holds ``kv`` and ``prefetch`` leases and *reserves* every
+  host-bound block against its lease before the transfer is submitted —
+  a refusal defers the transfer (mirrors skip, preemption waits,
+  admissions re-queue) and the recorded pressure drives the engine's own
+  LRU spills on the disk stream. Revocations (another consumer
+  outranking us) arrive as a flag; the next scheduler pass drains the
+  overage. Arbitration changes timing only — tokens never move.
+
 Sampling uses a per-``(seed, request, position)`` key schedule, so a
 request's tokens are independent of batch composition, padding, offload,
 and reload order — :func:`naive_generate` is the unbatched oracle any
@@ -143,6 +154,9 @@ class ServeStats:
     prefill_time: float = 0.0
     stall_time: float = 0.0           # wall time with no resident row to step
     swaps: int = 0
+    revocations: int = 0              # pool grant shrinkages signalled to us
+    lease_deferrals: int = 0          # transfers deferred by a refused
+    #                                   reservation (shared-pool mode)
     offload_bytes: int = 0
     reload_bytes: int = 0
     disk_spill_bytes: int = 0         # host→disk tier traffic
@@ -350,23 +364,51 @@ class Engine:
     """Continuous-batching decode engine over a block-paged KV cache."""
 
     def __init__(self, model, params, cfg: ServeConfig = ServeConfig(), *,
-                 host: HostStore | None = None):
+                 host: HostStore | None = None, pool=None):
         """``host``: pass a runtime's :class:`HostStore` (or
         :class:`TieredStore`) to share one pinned host pool (and its
         traffic counters) with it; by default the engine owns a private
         arena — tiered (host + disk) when ``cfg.host_kv_bytes`` bounds the
-        KV mirror, plain otherwise."""
+        KV mirror, plain otherwise.
+
+        ``pool``: a :class:`~repro.core.pool.HostPool` (DESIGN.md §12).
+        The engine takes two leases — ``kv`` (resident KV mirror bytes,
+        high priority: these blocks resume blocked requests) and
+        ``prefetch`` (opportunistic predictive staging, lowest priority)
+        — and *reserves* every host-bound block against its lease before
+        the transfer is submitted, so KV bytes can never land past the
+        arbitrated share: a refused reservation defers the transfer and
+        the recorded pressure drives the engine's own LRU spills on its
+        disk stream. Under a pool the budget is the lease's arbitrated
+        *grant*, not ``cfg.host_kv_bytes`` — but a nonzero
+        ``host_kv_bytes`` carries its sizing intent into the arbiter as
+        the kv lease's inviolable floor (``min_bytes``; lease creation
+        raises if the floors jointly exceed the pool). The engine keeps
+        its own store; the pool — not a shared store object — is the
+        sharing surface, so don't pass a lease-attached store as ``host``
+        (its occupancy accounting would double-count the engine's
+        reservations)."""
         if model.cfg.family not in ("dense", "moe"):
             raise ValueError("serving engine requires a KV-cache family "
                              f"(dense/moe), got {model.cfg.family!r}")
         if cfg.max_len % cfg.block_size:
             raise ValueError("max_len must be a multiple of block_size")
+        if pool is not None and getattr(host, "lease", None) is not None:
+            raise ValueError("shared store already lease-attached: pool "
+                             "arbitration would double-count its bytes")
         self.model = model
         self.params = params
         self.cfg = cfg
+        self._pool = pool
         if host is not None:
             self.host = host
             self._owns_host = False
+        elif pool is not None:
+            # pooled: budget enforcement is reservation-driven at the
+            # engine level (charge-before-submit), so the store itself is
+            # unbounded and spills stay engine-driven on the disk stream
+            self.host = TieredStore({}, auto_spill=False)
+            self._owns_host = True
         elif cfg.host_kv_bytes is not None:
             # spills are engine-driven (auto_spill off) so the disk I/O
             # cost lands on the disk stream's timeline, not inside put
@@ -377,6 +419,25 @@ class Engine:
             self.host = HostStore({})
             self._owns_host = True
         self._tiered = isinstance(self.host, TieredStore)
+        # per-key reservation ledger: key -> (lease, charged bytes). A key
+        # appears here from the moment its host-bound transfer is charged
+        # until its host copy is spilled/popped — the release always uses
+        # the exact bytes that were charged.
+        self._charged: dict[tuple[int, int], tuple] = {}
+        # revocation pressure signal (set from arbitrary threads via the
+        # pool's callback — a leaf lock, never the engine lock, so a
+        # same-thread revocation during our own charge cannot deadlock)
+        self._revoke_lock = threading.Lock()
+        self._revoked_pending = 0
+        if pool is not None:
+            self._kv_lease = pool.lease(
+                "kv", min_bytes=cfg.host_kv_bytes or 0, weight=2.0,
+                priority=2, on_revoke=self._on_revoke)
+            self._pf_lease = pool.lease(
+                "prefetch", weight=1.0, priority=0,
+                on_revoke=self._on_revoke)
+        else:
+            self._kv_lease = self._pf_lease = None
         self.reqs: dict[int, Request] = {}
         self._live: set[int] = set()                # rids not yet DONE
         self.stats = ServeStats()
@@ -400,6 +461,52 @@ class Engine:
         self._disk: _DmaStream | None = None
         self._spill_inflight: set[tuple[int, int]] = set()
         self._prefetch_inflight: set[tuple[int, int]] = set()
+        self._idle_spins = 0            # consecutive no-progress stalls
+        self._idle_pool_state = None    # last observed (pool used, grant)
+
+    # ---------------------------------------------- pool lease bookkeeping
+    def _on_revoke(self, deficit: int) -> None:
+        """Pool callback: another consumer's pressure shrank one of our
+        grants below its charged bytes. Must stay cheap and lock-light —
+        it can fire on any thread, including one already inside the
+        engine lock — so it only records the pressure; the scheduler's
+        next spill pass drains it through the disk stream (never a
+        blocking inline write on the revoker's thread)."""
+        with self._revoke_lock:
+            self._revoked_pending += deficit
+
+    def _charge_key_locked(self, key, lease, *, urgent: bool = True) -> bool:
+        """Reserve one block's bytes on ``lease`` before submitting its
+        host-bound transfer. True when the bytes may move (already charged,
+        or the reservation fit); False defers the transfer."""
+        if self._pool is None:
+            return True
+        if key in self._charged:
+            return True
+        n = self.kv.block_nbytes
+        if not lease.try_charge(n, urgent=urgent):
+            self.stats.lease_deferrals += 1
+            return False
+        self._charged[key] = (lease, n)
+        return True
+
+    def _release_key_locked(self, key) -> None:
+        if self._pool is None:
+            return
+        entry = self._charged.pop(key, None)
+        if entry is not None:
+            entry[0].release(entry[1])
+
+    def _transfer_key_locked(self, key, dst) -> None:
+        """Move a charged key's reservation to ``dst`` (prefetch→kv when a
+        staged block's request is admitted: the bytes are already host-
+        resident, so the move is forced — dst drains any overage through
+        its own spills)."""
+        entry = self._charged.get(key)
+        if entry is None or entry[0] is dst:
+            return
+        self._pool.transfer(entry[0], dst, entry[1])
+        self._charged[key] = (dst, entry[1])
 
     # ------------------------------------------------------------- public
     def submit(self, prompt, max_new: int = 32) -> int:
@@ -432,6 +539,12 @@ class Engine:
         long-lived service should close the engine when retiring it."""
         if self._owns_host:
             self.host.close()
+        if self._pool is not None:
+            # retire our leases: their shares return to the pool (any
+            # still-charged bytes are dropped with the store)
+            self._kv_lease.close()
+            self._pf_lease.close()
+            self._charged.clear()
 
     def __enter__(self) -> "Engine":
         return self
@@ -524,10 +637,12 @@ class Engine:
         with self._lock:
             req = self.reqs.get(tr.rid)
             if req is None:                           # released mid-flight
+                self._release_key_locked((tr.rid, tr.blk))
                 self._wake.notify_all()
                 return
             if req.state == DONE or req.slot < 0:
                 req.inflight.discard(tr.blk)
+                self._release_key_locked((tr.rid, tr.blk))
                 self._wake.notify_all()
                 return
             snapshot = self.kv.cache                  # immutable leaf refs
@@ -547,6 +662,10 @@ class Engine:
                 req.mirrored.add(tr.blk)
                 if req.state == SWAPPING and not req.inflight:
                     self._events.append(("swap-done", tr.rid))
+            else:
+                # payload dropped: the reservation made at submit time has
+                # nothing backing it any more
+                self._release_key_locked((tr.rid, tr.blk))
             self._wake.notify_all()
 
     def _service_h2d(self, tr: _Transfer) -> None:
@@ -596,6 +715,14 @@ class Engine:
                     # ever release — undo the resurrection
                     self.host.pop_offload(key)
                     staged = False
+                if (self._pool is not None
+                        and self._charged.get(key, (None,))[0]
+                        is self._pf_lease
+                        and self.host.tier_of(key) != "host"):
+                    # the reservation has no host bytes behind it (blob
+                    # vanished mid-flight, or the staging was undone):
+                    # give the prefetch share back
+                    self._release_key_locked(key)
                 if staged:
                     self.stats.disk_load_bytes += tr.nbytes
                     self.stats.prefetch_bytes += tr.nbytes
@@ -627,6 +754,9 @@ class Engine:
                     # the h2d lane via read-through). The write itself is
                     # one small block; the wire time was slept off-lock.
                     self.stats.disk_spill_bytes += self.host.spill(key)
+                    # the host copy moved down a tier: its reservation is
+                    # what the arbiter has been waiting for
+                    self._release_key_locked(key)
                 self._wake.notify_all()
             return
         # load: read-through staging is idempotent, so a racy spill/reload
@@ -668,6 +798,7 @@ class Engine:
                         tail = req.pos // self.cfg.block_size
                         req.mirrored.discard(tail)
                         self.host.pop_offload((rid, tail))
+                        self._release_key_locked((rid, tail))
             elif ev[0] == "swap-done":
                 req = self.reqs.get(ev[1])
                 if req is None or req.state != SWAPPING:
@@ -724,13 +855,45 @@ class Engine:
         # the prefetch handler chains the h2d hop itself — so the disk
         # stream never sleeps a wire time staging the same blob twice.
         while free and self._swapped:
-            rid = self._swapped.pop(0)
+            rid = self._swapped[0]
             req = self.reqs[rid]
+            blocks = range(self.kv.n_token_blocks(req.pos))
+            if self._pool is not None:
+                # reserve the resume's host-side staging before taking the
+                # slot: disk-resident blocks land in host RAM on their way
+                # up, and admitting a request whose staging cannot be
+                # charged would burst past the arbitrated share. A refusal
+                # defers the admission (FIFO preserved: later swapped
+                # requests wait too) and the recorded pressure drives the
+                # spill stream until the resume fits.
+                charged_now = []
+                ok = True
+                for blk in blocks:
+                    key = (rid, blk)
+                    if (key in self._charged
+                            or key in self._prefetch_inflight
+                            or not self._tiered
+                            or self.host.tier_of(key) != "disk"):
+                        continue
+                    if self._charge_key_locked(key, self._kv_lease):
+                        charged_now.append(key)
+                    else:
+                        ok = False
+                        break
+                if not ok:
+                    for key in charged_now:
+                        self._release_key_locked(key)
+                    break
+                for blk in blocks:
+                    # staged (or in-flight) prefetches now back a resuming
+                    # request: their bytes outrank opportunistic staging,
+                    # so the reservation migrates prefetch -> kv
+                    self._transfer_key_locked((rid, blk), self._kv_lease)
+            self._swapped.pop(0)
             slot = free.pop(0)
             self._slots[slot] = rid
             req.slot = slot
             req.state = RELOADING
-            blocks = range(self.kv.n_token_blocks(req.pos))
             req.pending_reload = set(blocks)
             for blk in blocks:
                 if (rid, blk) in self._prefetch_inflight:
@@ -806,11 +969,14 @@ class Engine:
             req.slot = -1
         for blk in req.mirrored:
             self.host.pop_offload((req.rid, blk))
+            self._release_key_locked((req.rid, blk))
         req.mirrored.clear()
         req.pending_reload.clear()
         for blk in range(self.kv.n_token_blocks(req.pos)):
             self._block_seq.pop((req.rid, blk), None)
         # in-flight d2h mirrors see state == DONE and drop their payload
+        # (and release their reservations); in-flight prefetches release
+        # theirs on completion when no host bytes landed
 
     # ------------------------------------------------- offload scheduling
     def _schedule_offload_locked(self) -> None:
@@ -830,6 +996,13 @@ class Engine:
                       * self.kv.n_token_blocks(req.pos))
             for blk in range(min(cold, cap)):
                 if blk not in req.mirrored and blk not in req.inflight:
+                    # shared pool: reserve before the bytes move; a refusal
+                    # defers this (and every later) mirror until the spill
+                    # stream frees share — eager mirroring is optional
+                    # work, never worth bursting the budget for
+                    if not self._charge_key_locked((rid, blk),
+                                                   self._kv_lease):
+                        return
                     self._submit_transfer_locked(self._d2h, req, blk)
 
     def _schedule_spill_locked(self) -> None:
@@ -839,11 +1012,28 @@ class Engine:
         (never the h2d/d2h DMA lanes); victim choice is LRU because at
         runtime the request future is unknown — the serving counterpart of
         the compiler's Belady-over-the-schedule spills."""
-        cap = self.cfg.host_kv_bytes
-        if not self._tiered or cap is None or self._disk is None:
+        if not self._tiered or self._disk is None or self.kv is None:
             return
-        budget = (self.host.resident_bytes
-                  - len(self._spill_inflight) * self.kv.block_nbytes - cap)
+        blk_n = self.kv.block_nbytes
+        if self._pool is not None:
+            # arbitrated budget: drain (a) bytes held past the current
+            # grants — a revocation leaves `overage` and fires the
+            # pressure callback — and (b) the recorded deficit of refused
+            # reservations, so deferred transfers eventually fit. Spills
+            # already in flight count as freed.
+            with self._revoke_lock:
+                if self._revoked_pending:
+                    self.stats.revocations += 1
+                    self._revoked_pending = 0
+            budget = (self._kv_lease.overage + self._kv_lease.pressure
+                      + self._pf_lease.overage + self._pf_lease.pressure
+                      - len(self._spill_inflight) * blk_n)
+        else:
+            cap = self.cfg.host_kv_bytes
+            if cap is None:
+                return
+            budget = (self.host.resident_bytes
+                      - len(self._spill_inflight) * blk_n - cap)
         if budget <= 0:
             return
         for key in self.host.lru_keys():
@@ -875,39 +1065,57 @@ class Engine:
         cfg = self.cfg
         cap = cfg.host_kv_bytes
         if (not cfg.prefetch_swapped or not self._tiered
-                or self._disk is None or cap is None or self.kv is None):
+                or self._disk is None or self.kv is None):
             return
-        # reserve headroom for everything already headed host-side: our
-        # own in-flight prefetches, resuming requests' pending two-hop
-        # reloads (their disk legs stage into the host arena when they
-        # land), and in-flight d2h offload mirrors (put_offload on
-        # arrival). Conservative for blocks already staged or h2d-only —
-        # over-reserving only makes the prefetcher more cautious, never
-        # an over-commit
-        reserved = len(self._prefetch_inflight) + sum(
-            len(self.reqs[r].pending_reload | self.reqs[r].inflight)
-            for r in self._live)
-        headroom = (cap - self.host.resident_bytes
-                    - reserved * self.kv.block_nbytes)
+        if self._pool is None and cap is None:
+            return
+        if self._pool is None:
+            # reserve headroom for everything already headed host-side:
+            # our own in-flight prefetches, resuming requests' pending
+            # two-hop reloads (their disk legs stage into the host arena
+            # when they land), and in-flight d2h offload mirrors
+            # (put_offload on arrival). Conservative for blocks already
+            # staged or h2d-only — over-reserving only makes the
+            # prefetcher more cautious, never an over-commit
+            reserved = len(self._prefetch_inflight) + sum(
+                len(self.reqs[r].pending_reload | self.reqs[r].inflight)
+                for r in self._live)
+            headroom = (cap - self.host.resident_bytes
+                        - reserved * self.kv.block_nbytes)
         for rid in self._swapped:
-            if headroom < self.kv.block_nbytes:
+            if self._pool is None and headroom < self.kv.block_nbytes:
                 return
             req = self.reqs.get(rid)
             if req is None:
                 continue
             for blk in range(self.kv.n_token_blocks(req.pos)):
-                if headroom < self.kv.block_nbytes:
+                if self._pool is None and headroom < self.kv.block_nbytes:
                     return
                 key = (rid, blk)
                 if (key in self._prefetch_inflight
                         or key in self._spill_inflight
                         or self.host.tier_of(key) != "disk"):
                     continue
+                if self._pool is not None:
+                    if self._kv_lease.pressure > 0:
+                        # mandatory work is waiting on the spill stream:
+                        # staging now would hand the spiller fresh LRU
+                        # victims and churn the disk stream in a loop
+                        # (stage → spill-for-pressure → restage) without
+                        # ever helping the blocked resume
+                        return
+                    # the prefetch lease IS the headroom: an opportunistic
+                    # (non-urgent) reservation that never records
+                    # pressure — a refusal just means no staging now
+                    if not self._charge_key_locked(key, self._pf_lease,
+                                                   urgent=False):
+                        return
                 self._prefetch_inflight.add(key)
                 self._disk.submit(_Transfer(
                     DISK, rid, blk, self._block_seq.get(key, 0),
                     self.kv.block_nbytes, disk_op="prefetch"))
-                headroom -= self.kv.block_nbytes
+                if self._pool is None:
+                    headroom -= self.kv.block_nbytes
 
     def _schedule_preempt_locked(self) -> None:
         """Swap out requests that exhausted their decode quantum while
@@ -927,18 +1135,41 @@ class Engine:
                 continue
             if len(req.out) >= req.max_new - 1:     # about to finish anyway
                 continue
+            pending = [blk for blk in range(self.kv.n_token_blocks(req.pos))
+                       if blk not in req.mirrored and blk not in req.inflight]
+            if self._pool is not None:
+                # a swap-out must mirror *every* unmirrored block — all or
+                # nothing. Reserve the full set up front; if the share
+                # cannot take it, skip preempting this request this round
+                # (the recorded pressure spills other blocks; we retry on
+                # the next pass) rather than strand it half-swapped
+                charged_now = []
+                ok = True
+                for blk in pending:
+                    key = (rid, blk)
+                    if key in self._charged:
+                        continue
+                    if self._charge_key_locked(key, self._kv_lease):
+                        charged_now.append(key)
+                    else:
+                        ok = False
+                        break
+                if not ok:
+                    for key in charged_now:
+                        self._release_key_locked(key)
+                    continue
             req.state = SWAPPING
             self.stats.swaps += 1
             waiting -= 1
-            for blk in range(self.kv.n_token_blocks(req.pos)):
-                if blk not in req.mirrored and blk not in req.inflight:
-                    self._submit_transfer_locked(self._d2h, req, blk)
+            for blk in pending:
+                self._submit_transfer_locked(self._d2h, req, blk)
             if not req.inflight:                    # everything was mirrored
                 self._events.append(("swap-done", rid))
 
     # -------------------------------------------------------------- decode
     def _decode_once(self, active: list[tuple[int, int]]) -> None:
         with self._lock:
+            self._idle_spins = 0               # decode is forward progress
             bucket = self.kv.bucket
             cache = self.kv.cache
             toks = np.zeros((bucket, 1), np.int32)
@@ -976,6 +1207,26 @@ class Engine:
             if not busy and not self._queue and not self._swapped:
                 states = {r: self.reqs[r].state for r in self._live}
                 raise RuntimeError(f"serving scheduler wedged: {states}")
+            if busy:
+                self._idle_spins = 0
+            elif self._pool is not None:
+                # deferred admissions with nothing in flight: room must
+                # come from our own spills or from a co-consumer draining
+                # its share. Any movement of pool occupancy or our grant
+                # is progress (the other consumer may just be slow — not
+                # deadlocked), so the counter resets on it; only a pool
+                # that is provably static gets the loud failure.
+                state = (self._pool.used_bytes, self._kv_lease.grant)
+                if state != self._idle_pool_state:
+                    self._idle_pool_state = state
+                    self._idle_spins = 0
+                self._idle_spins += 1
+                if self._idle_spins > 100:
+                    raise RuntimeError(
+                        "shared-pool deadlock: swapped requests cannot "
+                        "reserve their resume staging, no spillable bytes "
+                        "remain, and no other consumer is releasing any — "
+                        f"pool {self._pool.snapshot()}")
             self._wake.wait(timeout=0.1)
         self.stats.stall_time += time.perf_counter() - t0
 

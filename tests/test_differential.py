@@ -13,6 +13,13 @@ agree **byte-exactly**:
 * the *threaded runtime* — real threads, condition variables, real disk
   files for SPILL/LOAD plans.
 
+Spill plans additionally run a **shared-pool lane**: the same plan over a
+store leased from an arbitrated :class:`~repro.core.pool.HostPool` with a
+second consumer charging a random share under a random arbitration policy
+(DESIGN.md §12) — grants move, outputs must not. The nightly hypothesis
+lane (``FUZZ_EXAMPLES``) sweeps these pool configurations with generated
+graphs and budgets.
+
 And ``validate()`` must accept exactly the schedules the executors can
 run: every buildable plan validates under the budgets it was compiled
 for, any budget below the replayed peak is rejected (``RaceError``), and
@@ -32,7 +39,7 @@ import random as pyrandom
 import numpy as np
 import pytest
 
-from repro.core import BuildConfig, MemgraphOOM, build_memgraph
+from repro.core import BuildConfig, HostPool, MemgraphOOM, build_memgraph
 from repro.core.dispatch import POLICY_NAMES
 from repro.core.memgraph import RaceError
 from repro.core.runtime import TurnipRuntime, eval_taskgraph, run_in_order
@@ -41,6 +48,7 @@ from repro.core.simulate import HardwareModel, simulate
 from helpers import graph_inputs, random_taskgraph
 
 UNITS = dict(size_fn=lambda v: 1)
+ARB_POLICIES = ("static", "demand", "priority")
 
 # capacity draw spaces: None = unbounded tier; small ints force real
 # spill/load traffic; 0 disk makes any spill infeasible (must reject)
@@ -102,6 +110,28 @@ def check_case(tg, seed: int, host_cap, disk_cap, *,
     rr = TurnipRuntime(tg, res, mode="fixed", policy="fixed",
                        seed=seed).run(inputs)
     _assert_equal(rr.outputs, ref, "threaded/fixed-mode")
+
+    # shared-pool lane (DESIGN.md §12): the same plan over a store whose
+    # host arena is a lease of an arbitrated HostPool, with a second
+    # consumer charging a random share under a random arbitration policy.
+    # Arbitration moves grants and fires revocations; it must never move
+    # bytes the plan depends on — outputs stay byte-exact, and the lease
+    # drains once the runtime releases its store.
+    if host_cap is not None and res.n_spills:
+        rngp = pyrandom.Random(seed * 31 + 7)
+        pool = HostPool(1 << 20, policy=rngp.choice(ARB_POLICIES))
+        mem_lease = pool.lease("memgraph", min_bytes=rngp.choice(
+            (0, 1 << 16)), weight=1.0, priority=1)
+        other = pool.lease("kv", weight=rngp.random() * 4 + 0.1, priority=2)
+        other.try_charge(rngp.randrange(1 << 19))      # the random split
+        for policy in ("random", "critical-path"):
+            rr = TurnipRuntime(tg, res, mode="nondet", policy=policy,
+                               seed=seed, host_lease=mem_lease).run(inputs)
+            _assert_equal(rr.outputs, ref, f"pooled/{policy}")
+            assert pool.used_bytes == other.used, \
+                "runtime store release did not drain its lease"
+        assert mem_lease.peak > 0          # the lane really accounted bytes
+        assert pool.peak_bytes <= pool.capacity + mem_lease.peak
     return "disk" if res.n_loads else "host"
 
 

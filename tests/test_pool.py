@@ -1,0 +1,226 @@
+"""HostPool arbitration (DESIGN.md §12): grants honor floors and never
+overcommit; static/demand/priority splits behave as documented; refused
+charges record pressure; revocation fires the callback with the deficit
+(outside the pool lock, as a cheap signal); leases attached to a
+TieredStore mirror occupancy and bound auto-LRU admission by the dynamic
+grant."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (ARBITRATION_POLICY_NAMES, HostPool, LeaseRefusal,
+                        TieredStore, get_arbitration_policy)
+
+
+class TestArbitration:
+    def test_static_split_floors_then_weights(self):
+        p = HostPool(1000, policy="static")
+        a = p.lease("a", min_bytes=400, weight=1.0)
+        b = p.lease("b", weight=2.0)
+        assert a.grant == 400 + 200 and b.grant == 400
+        assert a.grant + b.grant <= p.capacity
+
+    def test_floor_feasibility_enforced_at_lease_time(self):
+        p = HostPool(100)
+        p.lease("a", min_bytes=80)
+        with pytest.raises(ValueError, match="infeasible"):
+            p.lease("b", min_bytes=30)
+
+    def test_demand_split_follows_load(self):
+        p = HostPool(1000, policy="demand")
+        a = p.lease("a")
+        b = p.lease("b")
+        assert a.try_charge(600)          # demand rebalance grows a's grant
+        assert a.used == 600
+        assert b.try_charge(300)
+        assert a.used + b.used <= p.capacity
+
+    def test_priority_outranks(self):
+        p = HostPool(1000, policy="priority")
+        low = p.lease("memgraph", min_bytes=200, priority=1)
+        high = p.lease("kv", priority=2)
+        assert high.try_charge(800)       # squeezed everything but the floor
+        assert low.grant == 200
+        assert not low.try_charge(300)    # only the floor is chargeable
+        assert low.try_charge(200)
+
+    def test_grants_never_violate_floor_or_capacity(self):
+        for name in ARBITRATION_POLICY_NAMES:
+            p = HostPool(997, policy=name)
+            leases = [p.lease("a", min_bytes=100, weight=1, priority=2),
+                      p.lease("b", min_bytes=37, weight=3, priority=1),
+                      p.lease("c", weight=2, priority=0)]
+            for i, l in enumerate(leases):
+                l.try_charge(137 * (i + 1))
+            total = sum(l.grant for l in p.leases())
+            assert total <= p.capacity, name
+            for l in p.leases():
+                assert l.grant >= l.min_bytes, (name, l.name)
+
+    def test_unknown_policy_rejected(self):
+        with pytest.raises(ValueError, match="unknown arbitration"):
+            get_arbitration_policy("belady")
+        with pytest.raises(ValueError):
+            HostPool(10, policy="nope")
+
+
+class TestChargeDiscipline:
+    def test_refusal_counts_and_pressure(self):
+        p = HostPool(100, policy="static")
+        a = p.lease("a")
+        assert a.try_charge(60)
+        assert not a.try_charge(60)
+        assert a.refusals == 1 and a.pressure == 20
+        # opportunistic refusals never record pressure
+        a.pressure = 0
+        assert not a.try_charge(60, urgent=False)
+        assert a.refusals == 2 and a.pressure == 0
+        a.release(30)
+        assert a.try_charge(60)           # success clears pressure
+        assert a.pressure == 0 and a.used == 90
+
+    def test_charge_raises_typed_refusal(self):
+        p = HostPool(50)
+        a = p.lease("a")
+        with pytest.raises(LeaseRefusal, match="does not fit"):
+            a.charge(60)
+
+    def test_peak_and_pool_counters(self):
+        p = HostPool(1000)
+        a = p.lease("a")
+        b = p.lease("b")
+        a.charge(300)
+        b.charge(200)
+        a.release(300)
+        assert a.peak == 300 and a.used == 0
+        assert p.used_bytes == 200 and p.peak_bytes == 500
+        snap = p.snapshot()
+        assert snap["leases"]["a"]["peak"] == 300
+        assert snap["peak_bytes"] == 500
+
+    def test_transfer_moves_bytes_between_leases(self):
+        p = HostPool(1000)
+        a, b = p.lease("a"), p.lease("b")
+        a.charge(400)
+        p.transfer(a, b, 150)
+        assert a.used == 250 and b.used == 150
+        assert p.used_bytes == 400        # pool-level occupancy unchanged
+
+    def test_close_lease_returns_share(self):
+        p = HostPool(100, policy="static")
+        a = p.lease("a")
+        b = p.lease("b")
+        a.charge(40)
+        a.close()
+        assert a.closed and p.used_bytes == 0
+        assert b.grant == 100             # the whole pool again
+
+
+class TestRevocation:
+    def test_priority_pressure_revokes_lower_lease(self):
+        fired = []
+        p = HostPool(1000, policy="priority")
+        low = p.lease("prefetch", priority=0,
+                      on_revoke=lambda d: fired.append(d))
+        high = p.lease("kv", priority=2)
+        assert low.try_charge(700)        # idle pool: prefetch takes slack
+        # the outranking charge shrinks low's grant (revocation fires with
+        # the deficit) but does NOT admit yet: low still physically holds
+        # its 700 B, and granting held bytes away would burst the pool
+        assert not high.try_charge(600)
+        assert fired and fired[0] > 0     # deficit delivered to the callback
+        assert low.revoked_bytes >= fired[0]
+        assert p.revocations >= 1
+        assert low.overage > 0            # what low's spill path must drain
+        assert high.pressure > 0          # the deferral is recorded
+        low.release(low.overage)          # the spill stream drains it...
+        assert high.try_charge(600)       # ...and the deferred charge fits
+        assert p.used_bytes <= p.capacity
+        assert p.peak_bytes <= p.capacity  # the bound held throughout
+
+    def test_callback_fires_outside_pool_lock(self):
+        """The callback may call straight back into the pool (a consumer
+        waking its scheduler might read counters) — firing under the pool
+        lock would deadlock."""
+        p = HostPool(100, policy="priority")
+        seen = []
+        low = p.lease("low", priority=0,
+                      on_revoke=lambda d: seen.append(p.snapshot()))
+        high = p.lease("high", priority=1)
+        low.try_charge(90)
+        high.try_charge(50)
+        assert seen                        # re-entry completed, no deadlock
+
+
+class TestLeasedTieredStore:
+    def test_occupancy_mirrors_into_lease(self):
+        p = HostPool(10_000)
+        l = p.lease("memgraph")
+        ts = TieredStore({}, auto_spill=False, lease=l)
+        ts.put_offload("k", np.ones(16))             # 128 B
+        assert l.used == 128 and p.used_bytes == 128
+        ts.spill("k")
+        assert l.used == 0
+        ts.load("k")
+        assert l.used == 128
+        ts.pop_offload("k")
+        assert l.used == 0 and l.peak == 128
+        ts.close()
+
+    def test_auto_lru_bounded_by_dynamic_grant(self):
+        """An auto-LRU store under a lease spills to the *arbitrated*
+        grant: a competitor's pressure shrinks the grant (revocation), the
+        next admission spills down to it — lazily, on the store's own
+        thread — and once the overage drains the competitor's deferred
+        charge fits. Timing moved; no bytes were lost."""
+        p = HostPool(700, policy="demand")
+        l = p.lease("a")
+        other = p.lease("b")
+        ts = TieredStore({}, auto_spill=True, lease=l)
+        vals = {k: np.full(16, i, np.float64) for i, k in
+                enumerate("wxyz")}                   # 128 B each
+        for k, v in vals.items():
+            ts.put_offload(k, v)
+        # demand-proportional: the store's own growth grew its grant
+        assert ts.resident_bytes == 512 <= l.grant
+        # a competitor demands more than the pool has free: refused (the
+        # store still *holds* 512), but the rebalance shrinks our grant
+        # below occupancy — recorded as a revocation with an overage
+        assert not other.try_charge(350)
+        assert l.grant < 512 and l.overage > 0
+        assert p.revocations >= 1 and other.pressure > 0
+        # the store's next admissions LRU-spill down to the shrunk grant
+        ts.put_offload("new", np.ones(16))
+        assert ts.resident_bytes <= l.grant
+        for k in list(ts.lru_keys())[:-1]:           # drain the rest
+            ts.spill(k)
+        assert other.try_charge(350)                 # deferred charge fits
+        assert p.used_bytes <= p.capacity
+        assert p.peak_bytes <= p.capacity
+        # tier transparency survived the squeeze: every value intact
+        for k, v in vals.items():
+            np.testing.assert_array_equal(ts.peek_offload(k), v)
+        ts.close()
+        assert l.used == 0
+
+    def test_build_refuses_floorless_lease(self):
+        """Compile-time feasibility may only charge the lease's inviolable
+        floor — a floorless lease's grant is revocable, so compiling
+        against it could later burst the pool bound."""
+        from repro.core import BuildConfig
+        p = HostPool(100)
+        cfg = BuildConfig(capacity=3, host_lease=p.lease("memgraph"))
+        with pytest.raises(ValueError, match="no floor"):
+            cfg.host_budget()
+        floored = BuildConfig(
+            capacity=3, host_lease=p.lease("planned", min_bytes=40))
+        assert floored.host_budget() == 40
+
+    def test_store_close_drains_lease(self):
+        p = HostPool(1000)
+        l = p.lease("a")
+        ts = TieredStore({}, auto_spill=False, lease=l)
+        ts.put_offload("k", np.ones(32))
+        ts.close()
+        assert l.used == 0 and p.used_bytes == 0

@@ -260,6 +260,96 @@ def test_tiered_kv_roomy_host_never_touches_disk(lm):
         assert eng.stats.disk_load_bytes == 0
 
 
+# ------------------------------------------------------------ shared pool
+@pytest.mark.parametrize("arb", ("static", "demand", "priority"))
+def test_pooled_engine_matches_oracle_and_bounds_pool(lm, arb):
+    """Shared-pool lane (DESIGN.md §12): the engine's KV mirror living in
+    an arbitrated HostPool — reservations gate every host-bound transfer —
+    must stay token-exact vs the oracle under every arbitration policy,
+    with combined occupancy never past the pool budget and every lease
+    drained once the queue empties."""
+    from repro.core import HostPool
+    model, params = lm
+    prompts = [list(range(1, 25)), list(range(30, 48)), [7, 8, 9, 10, 11]]
+    want = oracle(lm, prompts, max_new=8, max_len=64)
+    blk = PagedKVCache(model, 1, 64, block_size=8).block_nbytes
+    # priority pool is deliberately tight (revocations + deferrals fire);
+    # static must cover the largest resume set out of its fixed kv share
+    pool = HostPool((6 if arb == "priority" else 8) * blk, policy=arb)
+    cfg = ServeConfig(max_len=64, batch_buckets=(1,), block_size=8,
+                      offload=True, hot_window=0, offload_fraction=1.0,
+                      preempt_every=3, h2d_bw=500e6, d2h_bw=500e6,
+                      disk_bw=300e6)
+    with Engine(model, params, cfg, pool=pool) as eng:
+        out = eng.generate(prompts, max_new=8)
+        assert out == want
+        snap = pool.snapshot()
+        assert snap["peak_bytes"] > 0
+        assert snap["peak_bytes"] <= snap["capacity"]
+        assert eng.host.resident_bytes == 0
+        assert eng.host.disk.resident_bytes == 0
+        for name in ("kv", "prefetch"):
+            assert snap["leases"][name]["used"] == 0
+        if arb == "priority":
+            assert eng.stats.disk_spill_bytes > 0    # tier really pressed
+            assert eng.stats.lease_deferrals > 0
+
+
+def test_runtime_and_serving_share_one_arbitrated_pool(lm):
+    """The headline scenario: a MEMGRAPH plan's offload traffic and the
+    serving engine's KV mirror running *concurrently* against ONE
+    HostPool. Both consumers' outputs must be byte-identical to isolated
+    runs, and the pool bound must hold throughout."""
+    import threading
+    from repro.core import BuildConfig, HostPool, build_memgraph
+    from repro.core.runtime import TurnipRuntime, eval_taskgraph
+    from helpers import fig3_taskgraph, int_inputs
+    model, params = lm
+    tg = fig3_taskgraph()
+    inputs = int_inputs(tg)
+    ref = eval_taskgraph(tg, inputs)
+    res = build_memgraph(tg, BuildConfig(capacity=3, host_capacity=1,
+                                         size_fn=lambda v: 1))
+    assert res.n_spills > 0
+    # isolated baselines: runtime on a private store, engine on its own
+    rr_iso = TurnipRuntime(tg, res, mode="nondet", policy="random",
+                           seed=3).run(inputs)
+    prompts = [list(range(1, 25)), list(range(30, 48)), [7, 8, 9]]
+    want = oracle(lm, prompts, max_new=6, max_len=64)
+    blk = PagedKVCache(model, 1, 64, block_size=8).block_nbytes
+    scfg = ServeConfig(max_len=64, batch_buckets=(1,), block_size=8,
+                       offload=True, hot_window=0, offload_fraction=1.0,
+                       preempt_every=3, h2d_bw=500e6, d2h_bw=500e6,
+                       disk_bw=300e6)
+
+    pool = HostPool(8 * blk + 2 * rr_iso.peak_host_bytes + 1,
+                    policy="priority")
+    mem_lease = pool.lease("memgraph", min_bytes=rr_iso.peak_host_bytes,
+                           priority=1)
+    rt_out: dict = {}
+
+    def run_runtime():
+        rt = TurnipRuntime(tg, res, mode="nondet", policy="random",
+                           seed=3, host_lease=mem_lease)
+        rt_out["rr"] = rt.run(inputs)
+
+    with Engine(model, params, scfg, pool=pool) as eng:
+        t = threading.Thread(target=run_runtime)
+        t.start()
+        out = eng.generate(prompts, max_new=6)
+        t.join(60)
+        assert not t.is_alive(), "pooled runtime wedged"
+    assert out == want                          # serving: oracle-exact
+    rr = rt_out["rr"]
+    for k in ref:                               # runtime: oracle-exact
+        np.testing.assert_array_equal(rr.outputs[k], ref[k])
+    snap = pool.snapshot()
+    assert snap["peak_bytes"] > 0
+    assert snap["peak_bytes"] <= snap["capacity"]
+    assert snap["leases"]["memgraph"]["peak"] <= mem_lease.min_bytes
+    assert snap["used_bytes"] == 0              # everything drained
+
+
 # ------------------------------------------------------------ paged cache
 def test_paged_cache_block_roundtrip(lm):
     model, _ = lm

@@ -100,6 +100,50 @@ class TestTieredStore:
         hs.pop_offload("a")
         assert hs.peak_resident_bytes == 128 and hs.resident_bytes == 0
 
+    def test_overwrite_invalidates_stale_disk_twin(self):
+        """Regression (data corruption): overwriting a host-resident key
+        left the old disk blob alive, and the next spill dedup-skipped the
+        write ('immutable disk copy already exists') — a later
+        read-through returned the OLD bytes."""
+        ts = TieredStore({}, auto_spill=False)
+        old, new = np.arange(8.0), np.arange(8.0) * 10
+        ts.put_offload("k", old)
+        ts.spill("k")
+        ts.load("k")                      # host copy back; disk twin alive
+        ts.put_offload("k", new)          # overwrite supersedes the twin
+        assert "k" not in ts.disk         # twin invalidated immediately
+        ts.spill("k")                     # must really write, not dedup
+        assert ts.tier_of("k") == "disk"
+        np.testing.assert_array_equal(ts.get_offload("k"), new)
+        ts.close()
+
+    def test_overwrite_of_disk_only_key_invalidates_twin(self):
+        """Same bug, other tier: the overwritten key's bytes lived only on
+        disk — prev is None in put_offload, so nothing ever dropped the
+        blob and the dedup spill kept resurrecting the old bytes."""
+        ts = TieredStore({}, auto_spill=False)
+        ts.put_offload("k", np.zeros(4))
+        ts.spill("k")                     # host copy gone, blob holds zeros
+        ts.put_offload("k", np.ones(4))
+        ts.spill("k")
+        np.testing.assert_array_equal(ts.get_offload("k"), np.ones(4))
+        ts.close()
+
+    def test_read_through_respects_host_budget(self):
+        """Regression: load() admitted bytes without the eviction path, so
+        a burst of read-throughs pushed resident_bytes past host_capacity
+        with auto_spill on and no eviction ever ran."""
+        ts = TieredStore({}, host_capacity=200)
+        vals = {k: np.full(16, i, np.float64) for i, k in
+                enumerate("abcde")}              # 128 B each, cap = 1 key
+        for k, v in vals.items():
+            ts.put_offload(k, v)                 # LRU-spills predecessors
+        for k, v in vals.items():                # read-through sweep
+            np.testing.assert_array_equal(ts.get_offload(k), v)
+            assert ts.resident_bytes <= 200, \
+                f"read-through of {k!r} burst the host budget"
+        ts.close()
+
 
 # ------------------------------------------------- disk-tier faults (§11)
 class TestDiskFaults:
@@ -141,6 +185,84 @@ class TestDiskFaults:
         assert ds.resident_bytes == 96
         ds.close()
 
+    def test_drop_get_race_is_keyerror_not_corruption(self):
+        """Regression: DiskStore.get resolved the path under the lock but
+        read the file outside it; a concurrent drop unlinking mid-read
+        surfaced as DiskCorruptionError for a healthy, legitimately-freed
+        blob. The dropped-key case must be a KeyError."""
+        ds = DiskStore()
+        reading = threading.Event()
+        dropped = threading.Event()
+
+        class _PausedRead(DiskStore):
+            pass
+
+        orig = DiskStore._read_blob
+
+        def paused(self, path):
+            reading.set()                      # reader is past the lock
+            assert dropped.wait(5)             # drop lands mid-read
+            return orig(self, path)
+
+        ds._read_blob = paused.__get__(ds)     # instance-level seam
+        ds.put("k", np.arange(16.0))
+        result: list = []
+
+        def reader():
+            try:
+                result.append(ds.get("k"))
+            except BaseException as e:
+                result.append(e)
+
+        t = threading.Thread(target=reader)
+        t.start()
+        assert reading.wait(5)
+        ds.drop("k")                           # unlink while the read runs
+        ds.put("k", np.arange(4.0))            # and re-put: fresh path —
+        dropped.set()                          # the old read is stale, not rot
+        t.join(5)
+        assert result, "reader never finished"
+        assert isinstance(result[0], KeyError), \
+            f"drop/get race misreported as {result[0]!r}"
+        # a genuinely rotten blob is still corruption, not KeyError
+        ds._read_blob = orig.__get__(ds)
+        ds.put("r", np.arange(4.0))
+        path, _ = ds._files["r"]
+        path.write_bytes(b"rot")
+        with pytest.raises(DiskCorruptionError):
+            ds.get("r")
+        ds.close()
+
+    def test_drop_get_hammer_never_reports_corruption(self):
+        """Unseamed probabilistic mirror of the race: concurrent get/drop/
+        put cycles may see values or KeyError, never corruption."""
+        ds = DiskStore()
+        errs: list = []
+        stop = threading.Event()
+
+        def reader():
+            while not stop.is_set():
+                try:
+                    ds.get("k", count=False)
+                except KeyError:
+                    pass
+                except BaseException as e:     # pragma: no cover
+                    errs.append(e)
+                    return
+
+        threads = [threading.Thread(target=reader) for _ in range(3)]
+        for t in threads:
+            t.start()
+        v = np.arange(64.0)
+        for _ in range(200):
+            ds.put("k", v)
+            ds.drop("k")
+        stop.set()
+        for t in threads:
+            t.join(10)
+        ds.close()
+        assert not errs, f"drop/get race escalated: {errs[0]!r}"
+
     def test_tiered_auto_spill_surfaces_refusal(self):
         ts = TieredStore({}, host_capacity=100, disk_capacity=100)
         ts.put_offload("a", np.zeros(10))
@@ -154,6 +276,21 @@ class TestDiskFaults:
         np.testing.assert_array_equal(ts.peek_offload("b"), np.full(10, 2.0))
         assert ts.tier_of("c") is None
         assert ts.resident_bytes <= 100
+        ts.close()
+
+    def test_refused_overwrite_keeps_old_disk_twin(self):
+        """A refused put_offload must leave the hierarchy at its pre-put
+        state *including* the overwritten key's disk twin: invalidating
+        the twin before the admission stands would destroy the last copy
+        on refusal."""
+        ts = TieredStore({}, host_capacity=80, disk_capacity=80)
+        ts.put_offload("k", np.zeros(10))              # 80 B
+        ts.spill("k")                                  # old bytes disk-only
+        ts.put_offload("other", np.ones(10))           # host holds 80/80
+        with pytest.raises(DiskFullError):
+            ts.put_offload("k", np.full(10, 2.0))      # eviction can't fit
+        # the refusal lost nothing: k's OLD bytes are still readable
+        np.testing.assert_array_equal(ts.get_offload("k"), np.zeros(10))
         ts.close()
 
     def test_plan_driven_spill_refusal_keeps_host_copy(self):

@@ -1,0 +1,53 @@
+"""Plan-certifier cost: certification time vs plan size on tiered-offload
+plans (DESIGN.md §13). The certifier is a compile-time tool — this prices
+what `BuildConfig(certify=True)` adds to a build: the reachability
+closure, the all-pairs overlap sweep, and the max-weight-antichain budget
+bound, per MEMGRAPH vertex. Plans come from the activation-offload
+workload (`tiered_offload.activation_workload`) with the host tier
+bounded at half its working set, so every plan carries real
+OFFLOAD/RELOAD traffic plus disk SPILL/LOAD chains."""
+from __future__ import annotations
+
+import time
+
+from repro.core import BuildConfig, build_memgraph, certify
+
+from .common import emit
+from .tiered_offload import activation_workload
+
+
+def run(quick=False) -> list[dict]:
+    rows = []
+    layer_counts = (6, 12) if quick else (6, 12, 24, 48)
+    for n_layers in layer_counts:
+        tg = activation_workload(n_layers=n_layers)
+        act_bytes = tg.vertices[0].out.nbytes
+        cap = 6 * act_bytes          # tight device budget: acts offload
+        probe = build_memgraph(tg, BuildConfig(capacity=cap))
+        host_cap = max(1, probe.peak_host // 2)    # half the working set:
+        t0 = time.time()                           # forces disk spills
+        res = build_memgraph(tg, BuildConfig(capacity=cap,
+                                             host_capacity=host_cap))
+        build_s = time.time() - t0
+        assert res.n_spills > 0, "workload stopped spilling to disk"
+        mg = res.memgraph
+        t0 = time.time()
+        cert = certify(mg, host_capacity=host_cap)
+        cert_s = time.time() - t0
+        assert cert.ok, cert.summary()
+        n = len(mg)
+        rows.append(dict(n_layers=n_layers, verts=n, build_s=build_s,
+                         cert_s=cert_s,
+                         pairs=cert.n_pairs_checked,
+                         residencies=cert.n_host_residencies,
+                         blobs=cert.n_disk_blobs,
+                         worst_host=cert.worst_host_units))
+        emit(f"certifier/layers{n_layers}", cert_s / n * 1e6,
+             f"verts={n};pairs={cert.n_pairs_checked};"
+             f"res={cert.n_host_residencies};blobs={cert.n_disk_blobs};"
+             f"cert_vs_build={cert_s / max(build_s, 1e-9):.2f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -13,6 +13,8 @@ Prints ``name,us_per_call,derived`` CSV (scaffold contract). Paper artifacts:
 * shared_pool — runtime + serving on one arbitrated HostPool: byte-identical
   to isolated pools, bounded combined occupancy, priced revocation stalls
   (DESIGN.md §12)
+* certifier — plan-certification cost vs plan size on tiered-offload plans
+  (DESIGN.md §13)
 * roofline — three-term model per dry-run cell (skipped when no artifacts)
 
 Figures run **isolated**: one broken benchmark emits a ``FAILED`` CSV row
@@ -44,7 +46,7 @@ def _roofline() -> None:
 
 def main() -> int:
     quick = os.environ.get("QUICK", "1") != "0"
-    from . import (fig10_prefill, fig11_lora, stall_ablation,
+    from . import (certifier, fig10_prefill, fig11_lora, stall_ablation,
                    threaded_runtime, memgraph_build, serving,
                    shared_pool, tiered_offload)
     figures = [
@@ -56,6 +58,7 @@ def main() -> int:
         ("serving", lambda: serving.run(quick=quick)),
         ("tiered_offload", lambda: tiered_offload.run(quick=quick)),
         ("shared_pool", lambda: shared_pool.run(quick=quick)),
+        ("certifier", lambda: certifier.run(quick=quick)),
         ("roofline", _roofline),
     ]
     print("name,us_per_call,derived")

@@ -2,6 +2,8 @@
 execution (the paper's primary contribution)."""
 from .taskgraph import OpKind, TaskGraph, TaskVertex, TensorSpec
 from .memgraph import DepKind, Loc, MemGraph, MemOp, MemVertex, RaceError
+from .analyze import (Certificate, PlanCertificationError, PlanHazard,
+                      certify)
 from .build import BuildConfig, BuildResult, MemgraphOOM, build_memgraph
 from .dispatch import DispatchPolicy, POLICY_NAMES, get_policy
 from .stores import DiskStore, HostStore, TieredStore
@@ -11,6 +13,7 @@ from .pool import (ARBITRATION_POLICY_NAMES, ArbitrationPolicy, HostPool,
 __all__ = [
     "OpKind", "TaskGraph", "TaskVertex", "TensorSpec",
     "DepKind", "Loc", "MemGraph", "MemOp", "MemVertex", "RaceError",
+    "Certificate", "PlanCertificationError", "PlanHazard", "certify",
     "BuildConfig", "BuildResult", "MemgraphOOM", "build_memgraph",
     "DispatchPolicy", "POLICY_NAMES", "get_policy",
     "DiskStore", "HostStore", "TieredStore",

@@ -71,6 +71,7 @@ import dataclasses
 import random
 from typing import Any, Callable
 
+from .analyze import Certificate, PlanCertificationError, certify
 from .memgraph import DepKind, Loc, MemGraph, MemOp
 from .policies import (Arena, EvictionDecision, HostEntry, HostPlan,
                        PlacementDecision, PrefetchPlan, PrefetchRecord, INF)
@@ -117,6 +118,11 @@ class BuildConfig:
     # the reactive force-reload placement exactly. Only meaningful when
     # host_capacity is bounded (otherwise nothing ever spills).
     prefetch_distance: int = 32
+    # run the static plan-soundness certifier (DESIGN.md §13) over the
+    # finished plan: prove race-freedom, tier coherence, and worst-case
+    # budget feasibility for *every* legal execution order. A hazard on a
+    # compiled plan is a compiler bug and raises PlanCertificationError.
+    certify: bool = False
 
     def size_of(self, v: TaskVertex) -> int:
         return (self.size_fn or (lambda u: u.out.nbytes))(v)
@@ -162,6 +168,13 @@ class BuildResult:
     n_prefetches: int = 0                       # LOADs hoisted ahead of use
     stall_bytes_hidden: int = 0                 # disk bytes moved off the
     #                                             consumers' critical path
+    # ground-truth host-tier tenancies [key, admit_mid, release_mid|None,
+    # units] from the HostPlan; the certifier recovers the same intervals
+    # from the graph alone (tests cross-check the two)
+    host_residencies: list[list[Any]] = dataclasses.field(
+        default_factory=list)
+    # soundness certificate (BuildConfig.certify; DESIGN.md §13)
+    certificate: Certificate | None = None
 
     def final_value_location(self, tid: int) -> tuple[str, int]:
         """Where the runtime finds a terminal output: ('host', mid-or-tid) or
@@ -188,23 +201,30 @@ def build_memgraph(
     at those points. A plan with nothing to hoist returns pass 1 as-is."""
     builder = _Builder(tg, config, order)
     res = builder.run()
-    if (config.host_budget() is None or config.prefetch_distance <= 0
-            or not builder.load_records):
-        return res
-    plan = PrefetchPlan(config.host_budget(), builder.occ_at,
-                        config.prefetch_distance)
-    hints = plan.compute(builder.load_records)
-    if not hints:
-        return res
-    try:
-        return _Builder(tg, config, order, prefetch_hints=hints).run()
-    except MemgraphOOM:
-        # prefetch admissions shift later Belady choices, and a shifted
-        # victim set can (rarely) need a blob the reactive schedule never
-        # created — overflowing a tight disk budget pass 1 satisfied.
-        # Prefetch is an optimization, not a requirement: a program that
-        # compiles reactively must always compile, so fall back to pass 1.
-        return res
+    if (config.host_budget() is not None and config.prefetch_distance > 0
+            and builder.load_records):
+        plan = PrefetchPlan(config.host_budget(), builder.occ_at,
+                            config.prefetch_distance)
+        hints = plan.compute(builder.load_records)
+        if hints:
+            try:
+                res = _Builder(tg, config, order,
+                               prefetch_hints=hints).run()
+            except MemgraphOOM:
+                # prefetch admissions shift later Belady choices, and a
+                # shifted victim set can (rarely) need a blob the reactive
+                # schedule never created — overflowing a tight disk budget
+                # pass 1 satisfied. Prefetch is an optimization, not a
+                # requirement: a program that compiles reactively must
+                # always compile, so fall back to pass 1.
+                pass
+    if config.certify:
+        res.certificate = certify(res.memgraph,
+                                  host_capacity=config.host_budget(),
+                                  disk_capacity=config.disk_capacity)
+        if not res.certificate.ok:
+            raise PlanCertificationError(res.certificate)
+    return res
 
 
 class _Builder:
@@ -275,6 +295,14 @@ class _Builder:
         self.disk_units = 0
         self.peak_disk = 0
         self.disk_size_of: dict[int, int] = {}
+        # all-orders disk soundness (bounded cap only): every unit of a new
+        # blob must be backed either by capacity never yet consumed
+        # (_disk_free) or by a specific earlier drop, with a MEM dep on
+        # that drop — the seq-order replay alone leaves a window where a
+        # blob-creating SPILL overtakes the drop it was counting on
+        # (certifier pass 3, DESIGN.md §13)
+        self._disk_free = config.disk_capacity or 0
+        self._disk_credits: list[list[int]] = []   # FIFO of [drop_mid, units]
 
     # ------------------------------------------------------------------ utils
     def _mark_executed(self, mid: int) -> None:
@@ -341,27 +369,55 @@ class _Builder:
         self._mark_executed(smid)
         self.spill_window[smid] = self.exec_done
         if drop:
-            self.disk_units -= self.disk_size_of.pop(e.key, 0)
+            self._disk_release(smid, self.disk_size_of.pop(e.key, 0))
         elif not dedup:
             self.n_spills += 1
             # annotate the originating offload: its payload continues to disk
             self.mg.vertices[e.key].tier = "disk"
-            self._disk_admit(e.key, e.size, e.tid)
+            self._disk_admit(e.key, e.size, e.tid, smid)
         return smid
 
-    def _disk_admit(self, key: int, size: int, tid: int) -> None:
+    def _disk_admit(self, key: int, size: int, tid: int, smid: int) -> None:
         """Charge a new blob against the disk budget (compile-time
-        feasibility: the last tier has nowhere further to evict to)."""
+        feasibility: the last tier has nowhere further to evict to), and —
+        bounded — back every unit by unconsumed capacity or a specific
+        earlier drop with a MEM dep ``drop → smid``, so *no* legal
+        execution order can overflow the disk (not just the replayed one:
+        without the dep a blob-creating SPILL may overtake the drop whose
+        freed units the replay counted on)."""
         self.disk_size_of[key] = size
         self.disk_units += size
         self.peak_disk = max(self.peak_disk, self.disk_units)
         cap = self.cfg.disk_capacity
-        if cap is not None and self.disk_units > cap:
+        if cap is None:
+            return
+        if self.disk_units > cap:
             raise MemgraphOOM(
                 f"disk tier of {cap} units cannot hold the spilled working "
                 f"set: {self.disk_units} units live after spilling task "
                 f"{tid} — the three-level footprint does not fit "
                 f"(host={self.cfg.host_budget()}, disk={cap})")
+        need = size - min(self._disk_free, size)
+        self._disk_free -= size - need
+        while need > 0:
+            # invariant: _disk_free + queued credits == cap - disk_units
+            # (+ size here), so the queue covers `need` whenever the
+            # feasibility check above passed
+            drop_mid, units = self._disk_credits[0]
+            take = min(units, need)
+            self.mg.add_dep(drop_mid, smid, DepKind.MEM)
+            need -= take
+            if take == units:
+                self._disk_credits.pop(0)
+            else:
+                self._disk_credits[0][1] = units - take
+
+    def _disk_release(self, drop_mid: int, units: int) -> None:
+        """Return a dropped blob's units to the budget as a credit tagged
+        with the drop vertex, for later admissions to order after."""
+        self.disk_units -= units
+        if units and self.cfg.disk_capacity is not None:
+            self._disk_credits.append([drop_mid, units])
 
     def _emit_disk_drop(self, e: HostEntry) -> int:
         """Release a dead, non-resident entry's disk blob: a zero-host-unit
@@ -382,7 +438,7 @@ class _Builder:
         if e.last_spill is not None:
             self.mg.add_dep(e.last_spill, dmid, DepKind.MEM)
         self._mark_executed(dmid)
-        self.disk_units -= self.disk_size_of.pop(e.key, 0)
+        self._disk_release(dmid, self.disk_size_of.pop(e.key, 0))
         return dmid
 
     def _host_admit(self, producer_mid: int, key: int, tid: int,
@@ -819,6 +875,7 @@ class _Builder:
             peak_disk=self.peak_disk,
             n_prefetches=self.n_prefetches,
             stall_bytes_hidden=self.stall_bytes_hidden,
+            host_residencies=[list(r) for r in self.hostplan.residency_log],
         )
 
 

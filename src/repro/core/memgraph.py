@@ -112,6 +112,10 @@ class MemGraph:
         self.succs: dict[int, dict[int, DepKind]] = {}
         self.superfluous_mem_deps = 0  # mem deps skipped: data dep already there
         self._next_mid = 0
+        # memoized transitive order (descendant bitsets); any structural
+        # mutation must call _invalidate_reach() or later happens_before()
+        # answers describe a graph that no longer exists.
+        self._reach: tuple[dict[int, int], dict[int, int]] | None = None
 
     # -- construction -----------------------------------------------------
     def add_vertex(self, op: MemOp, device: int, **kw: Any) -> int:
@@ -120,17 +124,22 @@ class MemGraph:
         self.vertices[mid] = MemVertex(mid, op, device, **kw)
         self.preds[mid] = {}
         self.succs[mid] = {}
+        self._invalidate_reach()
         return mid
 
     def remove_vertex(self, mid: int) -> None:
-        """Retract a just-created, still-unwired vertex (the builder's
-        abandoned-prefetch path). Only edge-free vertices may go — removal
-        never has to repair dependency structure."""
-        if self.preds[mid] or self.succs[mid]:
-            raise AssertionError(f"cannot remove wired vertex {mid}")
+        """Retract a vertex. Unwired vertices (the builder's
+        abandoned-prefetch path) simply vanish; wired vertices — plan
+        surgery, hazard injection in tests — are detached from *both* edge
+        maps so no dangling pred/succ entry survives. Transitive ordering
+        implied by the removed vertex is deliberately NOT re-bridged: the
+        caller asked for the vertex (and its ordering constraints) to go."""
+        for p in self.preds.pop(mid):
+            del self.succs[p][mid]
+        for s in self.succs.pop(mid):
+            del self.preds[s][mid]
         del self.vertices[mid]
-        del self.preds[mid]
-        del self.succs[mid]
+        self._invalidate_reach()
 
     def add_dep(self, u: int, v: int, kind: DepKind) -> None:
         """Add ``u -> v``. A MEM dep duplicating an existing DATA dep is
@@ -148,6 +157,13 @@ class MemGraph:
             return
         self.preds[v][u] = kind
         self.succs[u][v] = kind
+        self._invalidate_reach()
+
+    def remove_dep(self, u: int, v: int) -> None:
+        """Remove the edge ``u -> v`` (hazard injection / plan surgery)."""
+        del self.preds[v][u]
+        del self.succs[u][v]
+        self._invalidate_reach()
 
     # -- queries -----------------------------------------------------------
     def __len__(self) -> int:
@@ -258,6 +274,33 @@ class MemGraph:
                 "peak_disk_units": disk_peak, "final_disk_units": disk_occ,
                 "n_spills": spilled, "n_loads": loaded, "n_drops": dropped,
                 "n_prefetches": prefetched}
+
+    # -- transitive order (the certifier's substrate, DESIGN.md §13) --------
+    def _invalidate_reach(self) -> None:
+        self._reach = None
+
+    def reachability(self) -> tuple[dict[int, int], dict[int, int]]:
+        """``(bitpos, desc)``: ``desc[m]`` is an int bitmask with bit
+        ``bitpos[x]`` set iff there is a (non-empty) path ``m -> x``.
+        Computed once per graph shape in one reverse-topological sweep over
+        big-int bitsets and memoized; mutation invalidates the memo."""
+        if self._reach is None:
+            order = self.topo_order()
+            bitpos = {m: i for i, m in enumerate(order)}
+            desc: dict[int, int] = {}
+            for m in reversed(order):
+                bits = 0
+                for s in self.succs[m]:
+                    bits |= (1 << bitpos[s]) | desc[s]
+                desc[m] = bits
+            self._reach = (bitpos, desc)
+        return self._reach
+
+    def happens_before(self, u: int, v: int) -> bool:
+        """True iff ``u`` precedes ``v`` in *every* legal execution order
+        (there is a dependency path ``u -> v``). Irreflexive."""
+        bitpos, desc = self.reachability()
+        return bool(desc[u] >> bitpos[v] & 1)
 
     def _ancestors(self, dst: int, cache: dict) -> set[int]:
         """The ancestor set of ``dst`` (all vertices with a path to it),

@@ -397,6 +397,12 @@ class HostPlan:
         self.next_use = next_use
         self._occ = 0                 # unbounded-mode occupancy (units)
         self._peak = 0
+        # ground-truth residency intervals for the certifier's budget pass
+        # (DESIGN.md §13): [key, admit_mid, release_mid|None, size] per
+        # host-arena tenancy, in admission order. The certifier recovers
+        # the same intervals from the graph alone; tests cross-check.
+        self.residency_log: list[list[Any]] = []
+        self._open_res: dict[int, int] = {}      # key -> residency_log index
 
     @property
     def bounded(self) -> bool:
@@ -455,6 +461,8 @@ class HostPlan:
             e.resident = True
             e.all_readers |= e.readers
             e.readers = set()
+        self._open_res[key] = len(self.residency_log)
+        self.residency_log.append([key, producer, None, size])
         return deps
 
     def _pick_victim(self, exclude: frozenset) -> HostEntry | None:
@@ -483,12 +491,18 @@ class HostPlan:
         e.last_spill = smid
         if e.spill_src is None:
             e.spill_src = smid         # first spill owns the disk copy
+        idx = self._open_res.pop(e.key, None)
+        if idx is not None:
+            self.residency_log[idx][2] = smid
 
     def dropped(self, e: HostEntry, dmid: int, seq: int) -> None:
         """Record a dead host copy's release (drop vertex ``dmid``)."""
         self.arena.set_owner(e.producer, dmid)
         self.arena.free(dmid, seq)
         del self.entries[e.key]
+        idx = self._open_res.pop(e.key, None)
+        if idx is not None:
+            self.residency_log[idx][2] = dmid
 
     def forget(self, key: int) -> None:
         """Delete a dead, non-resident entry (its disk blob may linger)."""

@@ -56,6 +56,8 @@ are byte-identical to isolated per-consumer pools.
 from __future__ import annotations
 
 import threading
+
+from . import lockcheck
 from typing import Callable
 
 __all__ = ["HostPool", "Lease", "LeaseRefusal", "ArbitrationPolicy",
@@ -242,7 +244,7 @@ class HostPool:
         self.capacity = int(capacity)
         self.policy = get_arbitration_policy(policy)
         self._leases: dict[str, Lease] = {}
-        self._lock = threading.Lock()
+        self._lock = lockcheck.make_lock("HostPool")
         self.used_bytes = 0
         self.peak_bytes = 0
         self.revocations = 0

@@ -246,10 +246,27 @@ def run_in_order(tg: TaskGraph, res: BuildResult,
     try:
         mem = SlotTable()
         for m in order:
-            _exec_vertex(mg.vertices[m], mg, tg, mem, host)
+            try:
+                _exec_vertex(mg.vertices[m], mg, tg, mem, host)
+            except RaceError as e:
+                _certified_reraise(res, e)
         return _collect_outputs(tg, res, mem, host)
     finally:
         host.close()
+
+
+def _certified_reraise(res: BuildResult, err: RaceError) -> None:
+    """Debug hook (DESIGN.md §13): a plan the certifier proved clean must
+    never race at runtime — if one does, either the certifier is unsound
+    or an executor diverged from the plan. Surface that loudly instead of
+    letting it read like an ordinary plan bug."""
+    cert = getattr(res, "certificate", None)
+    if cert is not None and getattr(cert, "ok", False):
+        raise RaceError(
+            f"{err} [plan was certified clean for ALL execution orders: "
+            f"this RaceError means the certifier is unsound or the "
+            f"runtime diverged from the plan — DESIGN.md §13]") from err
+    raise err
 
 
 # --------------------------------------------------------------------------
@@ -527,6 +544,8 @@ class TurnipRuntime:
             for th in started:
                 th.join()
         if errors:
+            if isinstance(errors[0], RaceError):
+                _certified_reraise(self.res, errors[0])
             raise errors[0]
 
         makespan = time.perf_counter() - t0

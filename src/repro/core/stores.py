@@ -45,10 +45,11 @@ import os
 import pathlib
 import shutil
 import tempfile
-import threading
 from typing import Any
 
 import numpy as np
+
+from . import lockcheck
 
 __all__ = ["HostStore", "DiskStore", "TieredStore", "DiskFullError",
            "DiskCorruptionError"]
@@ -91,7 +92,10 @@ class HostStore:
         self.reload_bytes = 0
         self.resident_bytes = 0
         self.peak_resident_bytes = 0
-        self._lock = threading.Lock()
+        # lock class = concrete type: TieredStore code paths hold this
+        # lock around DiskStore and HostPool calls, and the lock-order
+        # sanitizer (lockcheck.py) checks those pairs stay acyclic
+        self._lock = lockcheck.make_lock(type(self).__name__)
 
     # subclass hooks (no-ops here) -------------------------------------
     def _touch(self, key) -> None:
@@ -189,7 +193,7 @@ class DiskStore:
         self.read_bytes = 0
         self.resident_bytes = 0
         self.peak_resident_bytes = 0
-        self._lock = threading.Lock()
+        self._lock = lockcheck.make_lock("DiskStore")
 
     def _root(self) -> pathlib.Path:
         if self._dir is None:

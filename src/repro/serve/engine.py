@@ -76,6 +76,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core import lockcheck
 from ..core.dispatch import D2H, DISK, H2D, DispatchPolicy
 from ..core.stores import HostStore, TieredStore
 from .kv_cache import PagedKVCache
@@ -427,7 +428,7 @@ class Engine:
         # revocation pressure signal (set from arbitrary threads via the
         # pool's callback — a leaf lock, never the engine lock, so a
         # same-thread revocation during our own charge cannot deadlock)
-        self._revoke_lock = threading.Lock()
+        self._revoke_lock = lockcheck.make_lock("ServeEngine.revoke")
         self._revoked_pending = 0
         if pool is not None:
             self._kv_lease = pool.lease(
@@ -454,7 +455,7 @@ class Engine:
         self._block_seq: dict[tuple[int, int], int] = {}
         self._seq_counter = 0
         self._seed = cfg.seed
-        self._lock = threading.Lock()
+        self._lock = lockcheck.make_lock("ServeEngine")
         self._wake = threading.Condition(self._lock)
         self._d2h: _DmaStream | None = None
         self._h2d: _DmaStream | None = None

@@ -2,3 +2,21 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest  # noqa: E402
+
+from repro.core import lockcheck  # noqa: E402
+
+
+@pytest.fixture(autouse=True)
+def _lock_order_sanitizer():
+    """Debug-mode lock-order sanitizer (DESIGN.md §13): every test records
+    the (held lock class → acquired lock class) pairs its threads take
+    across HostPool / TieredStore / DiskStore / the serving engine, and
+    fails if the acquisition graph has a cycle — a deadlock that would
+    need an exact interleaving to bite, caught on any schedule."""
+    lockcheck.reset()
+    lockcheck.enable()
+    yield
+    lockcheck.disable()
+    lockcheck.assert_acyclic()

@@ -84,6 +84,36 @@ def random_taskgraph(rng, *, min_ops: int = 6, max_ops: int = 18):
     return tg
 
 
+def confirm_hazard(tg, res, hazard, *, seed: int = 0) -> str:
+    """Dynamically confirm a certifier finding by replaying its witness
+    schedule through the differential harness's executors (DESIGN.md §13:
+    every counterexample the static analysis emits must be a real fuzz
+    case). Returns a short description of how the witness manifested;
+    raises ``AssertionError`` if the replay stays healthy."""
+    from repro.core.analyze import replay_occupancy
+    from repro.core.runtime import eval_taskgraph, run_in_order
+
+    assert hazard.confirmable, f"hazard is not replay-falsifiable: {hazard}"
+    assert hazard.witness, f"hazard carries no witness schedule: {hazard}"
+    if hazard.witness_kind == "occupancy":
+        occ = replay_occupancy(res.memgraph, hazard.witness,
+                               tier=hazard.tier)
+        peak = max(occ[:hazard.prefix])
+        assert hazard.capacity is not None and peak > hazard.capacity, \
+            f"witness prefix peaks at {peak} ≤ capacity {hazard.capacity}"
+        return f"occupancy {peak} > capacity {hazard.capacity}"
+    inputs = graph_inputs(tg, seed)
+    ref = eval_taskgraph(tg, inputs)
+    try:
+        out = run_in_order(tg, res, inputs, list(hazard.witness))
+    except Exception as e:                     # RaceError, KeyError, ...
+        return f"raised {type(e).__name__}"
+    for k in ref:
+        if not np.array_equal(out[k], ref[k]):
+            return f"diverged from the oracle on output {k}"
+    raise AssertionError(f"witness replay did not confirm hazard: {hazard}")
+
+
 def taskgraphs(*, min_ops: int = 3, max_ops: int = 18):
     """Hypothesis strategy over the same TASKGRAPH distribution as
     :func:`random_taskgraph`. Imported lazily: calling this requires

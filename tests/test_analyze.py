@@ -1,0 +1,334 @@
+"""The plan certifier (DESIGN.md §13): static proofs that every legal
+execution order of a built MEMGRAPH is safe, refuted — when they fail —
+by witness schedules the differential harness replays dynamically.
+
+Three families of tests:
+
+* **clean side** — every buildable plan certifies clean, the certifier's
+  worst-case occupancy bounds dominate the compile-time replay peaks, and
+  the ``BuildConfig.certify`` / runtime-reraise wiring works;
+* **hazard side** — seeded hazards (a deleted safe-overwrite edge, a
+  forged drop vertex, a tightened budget) are always flagged, and every
+  confirmable finding's witness schedule really manifests when replayed
+  through the harness executors (``helpers.confirm_hazard``);
+* **infrastructure** — ``remove_vertex``/``remove_dep`` detach both edge
+  maps and invalidate the memoized reachability (the satellite fix), and
+  the builder's dynamic residency log agrees exactly with the certifier's
+  static interval recovery.
+"""
+import os
+import random as pyrandom
+
+import numpy as np
+import pytest
+
+from repro.core import (BuildConfig, Certificate, MemgraphOOM,
+                        PlanCertificationError, build_memgraph, certify)
+from repro.core.analyze import (DEVICE_RACE, DISK_BUDGET, HOST_BUDGET,
+                                STALE_TWIN, TIER_BEFORE_CREATE,
+                                USE_AFTER_DROP, USE_AFTER_OVERWRITE,
+                                recover_residencies, replay_occupancy)
+from repro.core.memgraph import DepKind, Loc, MemGraph, MemOp, RaceError
+from repro.core.runtime import eval_taskgraph, run_in_order
+
+from helpers import (confirm_hazard, fig3_taskgraph, graph_inputs,
+                     random_taskgraph)
+
+UNITS = dict(size_fn=lambda v: 1)
+
+
+def _build(tg, **kw):
+    kw.setdefault("capacity", 3)
+    return build_memgraph(tg, BuildConfig(**kw, **UNITS))
+
+
+def _spill_plan():
+    """The paper's running example squeezed to 1 host unit: a plan with
+    real OFFLOAD/RELOAD traffic and disk-tier SPILL/LOAD vertices."""
+    tg = fig3_taskgraph()
+    return tg, _build(tg, host_capacity=1)
+
+
+# ------------------------------------------------------------ clean side
+def test_built_plans_certify_clean():
+    """No plan the compiler emits may fail certification, and the
+    all-orders occupancy bounds must dominate the single-order replay."""
+    n = 0
+    for seed in range(10):
+        tg = random_taskgraph(pyrandom.Random(1000 + seed))
+        try:
+            res = _build(tg, host_capacity=1 + seed % 3, rng_seed=seed)
+        except MemgraphOOM:
+            continue
+        cert = certify(res.memgraph, host_capacity=1 + seed % 3)
+        assert cert.ok, cert.summary()
+        prof = res.memgraph.host_tier_profile()
+        assert cert.worst_host_units >= prof["peak_units"]
+        assert cert.worst_disk_units >= prof["peak_disk_units"]
+        n += 1
+    assert n >= 5
+
+
+def test_build_certify_flag_attaches_certificate():
+    tg = fig3_taskgraph()
+    res = build_memgraph(tg, BuildConfig(capacity=3, host_capacity=1,
+                                         certify=True, **UNITS))
+    assert res.certificate is not None and res.certificate.ok
+    assert "CLEAN" in res.certificate.summary()
+    # without the flag the field stays None (certification is opt-in)
+    assert _build(tg, host_capacity=1).certificate is None
+
+
+def test_certified_clean_reraise_is_loud():
+    """The runtime debug hook: a RaceError out of a certified-clean plan
+    is a certifier/runtime bug and must say so."""
+    from types import SimpleNamespace
+
+    from repro.core.runtime import _certified_reraise
+    ok = SimpleNamespace(certificate=Certificate(
+        ok=True, hazards=[], n_vertices=0))
+    with pytest.raises(RaceError, match="certified clean"):
+        _certified_reraise(ok, RaceError("boom"))
+    plain = SimpleNamespace(certificate=None)
+    with pytest.raises(RaceError) as ei:
+        _certified_reraise(plain, RaceError("boom"))
+    assert "certified" not in str(ei.value)
+
+
+def test_cli_corpus_gate():
+    """The CI gate: the seeded example-plan corpus certifies clean."""
+    from repro.core.analyze import main
+    assert main(["--seeds", "8"]) == 0
+
+
+# ----------------------------------------------------------- hazard side
+def test_deleted_safe_overwrite_edge_is_flagged_with_witness():
+    """Pass 1: retract one safe-overwrite MEM edge from a spill plan and
+    the certifier must name the race — and its witness schedule must
+    actually corrupt bytes (or crash) when the harness replays it."""
+    tg, res = _spill_plan()
+    mg = res.memgraph
+    mem_edges = [(u, v) for u in mg.vertices
+                 for v, k in mg.succs[u].items() if k == DepKind.MEM]
+    hazard_kinds = {DEVICE_RACE, USE_AFTER_OVERWRITE, USE_AFTER_DROP,
+                    STALE_TWIN, TIER_BEFORE_CREATE, HOST_BUDGET,
+                    DISK_BUDGET}
+    n_flagged = n_confirmed = 0
+    for u, v in mem_edges:
+        mg.remove_dep(u, v)
+        cert = certify(mg, host_capacity=1)
+        if not cert.ok:
+            # a retracted ordering edge shows up either as a race or —
+            # when it ordered a spill before the next tenant — as a
+            # worst-case budget violation
+            assert any(h.kind in hazard_kinds for h in cert.hazards), \
+                cert.summary()
+            n_flagged += 1
+            for h in cert.hazards:
+                if not h.confirmable:
+                    continue
+                try:
+                    confirm_hazard(tg, res, h)
+                    n_confirmed += 1
+                except AssertionError:
+                    continue      # statically real, value-coincident
+                break
+        mg.add_dep(u, v, DepKind.MEM)
+    assert n_flagged >= 3, "deleting MEM edges never broke certification"
+    assert n_confirmed >= 1, "no witness schedule manifested dynamically"
+
+
+def test_forged_drop_is_flagged_as_stale_twin():
+    """Pass 2: forge a drop vertex that races a reload's read-through —
+    the injectable stale-twin hazard. The witness replay must crash or
+    diverge: the drop deletes every copy the reload was counting on."""
+    tg, res = _spill_plan()
+    mg = res.memgraph
+    # a host key some RELOAD actually reads back
+    reload_keys = {v.operands[0] for v in mg.vertices.values()
+                   if v.op == MemOp.RELOAD and v.operands}
+    assert reload_keys, "spill plan has no reloads — generator regressed"
+    key = sorted(reload_keys)[0]
+    dmid = mg.add_vertex(MemOp.SPILL, mg.vertices[key].device,
+                         src_tid=mg.vertices[key].src_tid, loc=None,
+                         size=0, nbytes=0, operands=[key],
+                         params={"drop": True}, tier="disk",
+                         name="forged-drop")
+    mg.vertices[dmid].seq = max(v.seq for v in mg.vertices.values()) + 1
+    mg.add_dep(key, dmid, DepKind.DATA)   # created, but readers unordered
+    cert = certify(mg, host_capacity=1)
+    assert not cert.ok
+    twins = [h for h in cert.hazards
+             if h.kind in (STALE_TWIN, USE_AFTER_DROP) and dmid in h.vertices]
+    assert twins, cert.summary()
+    loud = [h for h in twins if h.confirmable]
+    assert loud, "a raced reload must be replay-falsifiable"
+    how = confirm_hazard(tg, res, loud[0])
+    assert how.startswith(("raised", "diverged"))
+
+
+def test_budget_hazards_carry_occupancy_witnesses():
+    """Pass 3: one unit below the certified worst case, the certifier
+    must emit a budget hazard whose witness order really drives the tier
+    above the capacity — confirmed by the occupancy replay, which is
+    runtime-faithful (the stores do not enforce budgets themselves)."""
+    tg, res = _spill_plan()
+    mg = res.memgraph
+    base = certify(mg)
+    assert base.ok and base.worst_host_units > 0
+    cert = certify(mg, host_capacity=base.worst_host_units - 1)
+    hosts = [h for h in cert.hazards if h.kind == HOST_BUDGET]
+    assert hosts and hosts[0].expect_units == base.worst_host_units
+    assert "occupancy" in confirm_hazard(tg, res, hosts[0])
+
+    if base.worst_disk_units > 0:
+        cert = certify(mg, disk_capacity=base.worst_disk_units - 1)
+        disks = [h for h in cert.hazards if h.kind == DISK_BUDGET]
+        assert disks, cert.summary()
+        assert "occupancy" in confirm_hazard(tg, res, disks[0])
+
+
+def test_certify_on_build_raises_on_seeded_hazard():
+    """End to end: a plan mutilated before certification fails loudly
+    with the certificate attached to the exception."""
+    tg, res = _spill_plan()
+    mg = res.memgraph
+    mem_edges = [(u, v) for u in mg.vertices
+                 for v, k in mg.succs[u].items() if k == DepKind.MEM]
+    for u, v in mem_edges:
+        mg.remove_dep(u, v)
+        cert = certify(mg, host_capacity=1)
+        if not cert.ok:
+            with pytest.raises(PlanCertificationError) as ei:
+                raise PlanCertificationError(cert)
+            assert not ei.value.certificate.ok
+            return
+        mg.add_dep(u, v, DepKind.MEM)
+    pytest.fail("no MEM edge was load-bearing")
+
+
+# -------------------------------------------------------- infrastructure
+def test_remove_vertex_detaches_both_edge_maps_and_reachability():
+    """The satellite fix: removing a wired vertex must drop its reverse
+    edges everywhere and invalidate the memoized reachability bitsets —
+    previously the dependent edges and the stale cache survived."""
+    mg = MemGraph()
+    a = mg.add_vertex(MemOp.INPUT, 0, loc=Loc(0, 0, 4), size=1)
+    c = mg.add_vertex(MemOp.INPUT, 0, loc=Loc(0, 8, 4), size=1)
+    assert not mg.happens_before(a, c)          # memoize the reachability
+    w = mg.add_vertex(MemOp.COMPUTE, 0, loc=Loc(0, 4, 4), size=1,
+                      operands=[a])
+    mg.add_dep(a, w, DepKind.DATA)
+    mg.add_dep(w, c, DepKind.MEM)
+    assert mg.happens_before(a, c)              # a -> w -> c, cache rebuilt
+    mg.remove_vertex(w)
+    assert w not in mg.vertices
+    assert w not in mg.preds and w not in mg.succs
+    assert all(w not in s for s in mg.succs.values())
+    assert all(w not in p for p in mg.preds.values())
+    assert not mg.happens_before(a, c)          # stale cache would say True
+    mg.validate(check_races=True)               # graph stays self-consistent
+
+
+def test_remove_vertex_then_revalidate_full_plan():
+    """Plan surgery on a real compiled plan: retracting a leaf vertex
+    leaves a graph that still validates and certifies."""
+    tg, res = _spill_plan()
+    mg = res.memgraph
+    leaf = next(m for m in mg.topo_order()[::-1] if not mg.succs[m]
+                and mg.vertices[m].op == MemOp.SPILL)
+    mg.remove_vertex(leaf)
+    mg.validate(check_races=True)
+    assert leaf not in mg.vertices
+
+
+def test_residency_log_matches_static_recovery():
+    """The builder's dynamic residency log (policies.py) and the
+    certifier's static interval recovery must agree exactly on the
+    bounded host tier's (key, release) tenancies."""
+    n = 0
+    for seed in range(8):
+        tg = random_taskgraph(pyrandom.Random(1000 + seed))
+        try:
+            res = _build(tg, host_capacity=2, rng_seed=seed)
+        except MemgraphOOM:
+            continue
+        host, _ = recover_residencies(res.memgraph)
+        logged = sorted((e[0], e[2]) for e in res.host_residencies)
+        recovered = sorted((r.key, r.release) for r in host)
+        assert logged == recovered
+        n += 1
+    assert n >= 4
+
+
+def test_replay_occupancy_matches_profile_on_fixed_order():
+    """On the compile-time seq order the witness replay and the plan's
+    own profile must see the same host peak."""
+    _, res = _spill_plan()
+    mg = res.memgraph
+    order = mg.topo_order(key=lambda m: (mg.vertices[m].seq, m))
+    occ = replay_occupancy(mg, order, tier="host")
+    assert max(occ) == mg.host_tier_profile()["peak_units"]
+
+
+# ------------------------------------------------------------- slow lane
+@pytest.mark.slow
+def test_property_certified_clean_plans_never_fail_fuzzing():
+    """Hypothesis lane: a clean certificate means every sampled legal
+    order is byte-exact; deleting a random MEM edge either leaves the
+    certificate clean (and the orders stay byte-exact — the edge was
+    redundant) or is flagged, with any race witness replayed."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import HealthCheck, given, settings, strategies as st
+
+    from helpers import taskgraphs
+
+    max_examples = int(os.environ.get("FUZZ_EXAMPLES", "25"))
+
+    @settings(max_examples=max_examples, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(tg=taskgraphs(), seed=st.integers(0, 2**16),
+           host_cap=st.sampled_from((1, 2, 3)))
+    def inner(tg, seed, host_cap):
+        try:
+            res = build_memgraph(tg, BuildConfig(
+                capacity=3, host_capacity=host_cap, rng_seed=seed, **UNITS))
+        except MemgraphOOM:
+            return
+        mg = res.memgraph
+        cert = certify(mg, host_capacity=host_cap)
+        assert cert.ok, cert.summary()
+        inputs = graph_inputs(tg, seed)
+        ref = eval_taskgraph(tg, inputs)
+        rng = pyrandom.Random(seed)
+
+        def exact_under_random_orders():
+            for _ in range(3):
+                order = mg.topo_order(key=lambda m: rng.random())
+                out = run_in_order(tg, res, inputs, order)
+                for k in ref:
+                    np.testing.assert_array_equal(out[k], ref[k])
+
+        exact_under_random_orders()
+        mem_edges = [(u, v) for u in mg.vertices
+                     for v, k in mg.succs[u].items() if k == DepKind.MEM]
+        if not mem_edges:
+            return
+        u, v = rng.choice(mem_edges)
+        mg.remove_dep(u, v)
+        try:
+            cert2 = certify(mg, host_capacity=host_cap)
+            if cert2.ok:
+                exact_under_random_orders()   # the edge was redundant
+            else:
+                for h in cert2.hazards:
+                    if h.confirmable and h.witness_kind == "race":
+                        try:
+                            confirm_hazard(tg, res, h, seed=seed)
+                        except AssertionError:
+                            pass              # value-coincident clobber
+                        break
+        finally:
+            mg.add_dep(u, v, DepKind.MEM)
+
+    inner()

@@ -39,13 +39,14 @@ import random as pyrandom
 import numpy as np
 import pytest
 
-from repro.core import BuildConfig, HostPool, MemgraphOOM, build_memgraph
+from repro.core import (BuildConfig, HostPool, MemgraphOOM, build_memgraph,
+                        certify)
 from repro.core.dispatch import POLICY_NAMES
-from repro.core.memgraph import RaceError
+from repro.core.memgraph import DepKind, RaceError
 from repro.core.runtime import TurnipRuntime, eval_taskgraph, run_in_order
 from repro.core.simulate import HardwareModel, simulate
 
-from helpers import graph_inputs, random_taskgraph
+from helpers import confirm_hazard, graph_inputs, random_taskgraph
 
 UNITS = dict(size_fn=lambda v: 1)
 ARB_POLICIES = ("static", "demand", "priority")
@@ -91,6 +92,14 @@ def check_case(tg, seed: int, host_cap, disk_cap, *,
         with pytest.raises(RaceError, match="disk-tier budget"):
             mg.validate(check_races=False,
                         disk_capacity=prof["peak_disk_units"] - 1)
+
+    # the static certifier (DESIGN.md §13) must prove the plan clean for
+    # ALL legal orders, not just the ones sampled below — and its
+    # worst-case occupancy bounds must dominate the single-order replay
+    cert = certify(mg, host_capacity=host_cap, disk_capacity=disk_cap)
+    assert cert.ok, f"built plan failed certification:\n{cert.summary()}"
+    assert cert.worst_host_units >= prof["peak_units"]
+    assert cert.worst_disk_units >= prof["peak_disk_units"]
 
     inputs = graph_inputs(tg, seed)
     ref = eval_taskgraph(tg, inputs)          # the in-memory oracle
@@ -149,6 +158,43 @@ def test_fuzz_seeded_differential():
         outcomes[check_case(tg, seed, host_cap, disk_cap)] += 1
     assert outcomes["disk"] >= 3, outcomes    # disk tier really exercised
     assert outcomes["oom"] >= 1, outcomes     # rejection path exercised
+
+
+def test_certifier_counterexamples_feed_the_harness():
+    """The loop the certifier closes (DESIGN.md §13): seed a hazard into a
+    built plan by deleting one safe-overwrite MEM edge, and the witness
+    schedule the certifier emits must be a *real* counterexample — the
+    harness replays it through the sequential interpreter and watches it
+    raise or diverge from the oracle."""
+    n_confirmed = 0
+    for seed in range(8):
+        rng = pyrandom.Random(1000 + seed)
+        tg = random_taskgraph(rng)
+        try:
+            res = build_memgraph(tg, BuildConfig(capacity=3, host_capacity=2,
+                                                 rng_seed=seed, **UNITS))
+        except MemgraphOOM:
+            continue
+        mg = res.memgraph
+        mem_edges = [(u, v) for u in mg.vertices for v, k in
+                     mg.succs[u].items() if k == DepKind.MEM]
+        for u, v in mem_edges:
+            mg.remove_dep(u, v)
+            cert = certify(mg, host_capacity=2)
+            for h in cert.hazards:
+                if not h.confirmable:
+                    continue
+                try:
+                    confirm_hazard(tg, res, h, seed=seed)
+                except AssertionError:
+                    continue      # statically real but value-coincident
+                n_confirmed += 1
+                break
+            mg.add_dep(u, v, DepKind.MEM)
+            if n_confirmed >= 3:
+                return
+    assert n_confirmed >= 3, "edge-deletion sweep never produced a " \
+        "confirmable hazard — the certifier or the generator regressed"
 
 
 def test_disk_budget_rejection_is_exact():

@@ -1,16 +1,22 @@
 """Plan-certifier cost: certification time vs plan size on tiered-offload
-plans (DESIGN.md §13). The certifier is a compile-time tool — this prices
-what `BuildConfig(certify=True)` adds to a build: the reachability
-closure, the all-pairs overlap sweep, and the max-weight-antichain budget
-bound, per MEMGRAPH vertex. Plans come from the activation-offload
-workload (`tiered_offload.activation_workload`) with the host tier
-bounded at half its working set, so every plan carries real
+plans (DESIGN.md §13), plus the liveness certifier's cost (§14) on the
+same plans — vs plan size under the implied single-lease pool model, and
+vs arbitration policy under a co-tenanted pool. Both are compile-time
+tools — this prices what `BuildConfig(certify=True)` /
+`BuildConfig(certify_liveness=True)` add to a build: the reachability
+closure, the all-pairs overlap sweep, and the max-weight-antichain
+budget/guarantee bounds, per MEMGRAPH vertex. Plans come from the
+activation-offload workload (`tiered_offload.activation_workload`) with
+the host tier bounded at half its working set, so every plan carries real
 OFFLOAD/RELOAD traffic plus disk SPILL/LOAD chains."""
 from __future__ import annotations
 
 import time
 
 from repro.core import BuildConfig, build_memgraph, certify
+from repro.core.liveness import (LeaseSpec, PoolConfig, certify_progress,
+                                 default_pool_config)
+from repro.core.pool import ARBITRATION_POLICY_NAMES
 
 from .common import emit
 from .tiered_offload import activation_workload
@@ -19,6 +25,7 @@ from .tiered_offload import activation_workload
 def run(quick=False) -> list[dict]:
     rows = []
     layer_counts = (6, 12) if quick else (6, 12, 24, 48)
+    last = None                      # (mg, host_cap) for the policy sweep
     for n_layers in layer_counts:
         tg = activation_workload(n_layers=n_layers)
         act_bytes = tg.vertices[0].out.nbytes
@@ -35,17 +42,50 @@ def run(quick=False) -> list[dict]:
         cert = certify(mg, host_capacity=host_cap)
         cert_s = time.time() - t0
         assert cert.ok, cert.summary()
+        t0 = time.time()
+        live = certify_progress(mg, default_pool_config(host_cap))
+        live_s = time.time() - t0
+        assert live.ok, live.summary()
         n = len(mg)
+        last = (mg, host_cap)
         rows.append(dict(n_layers=n_layers, verts=n, build_s=build_s,
-                         cert_s=cert_s,
+                         cert_s=cert_s, live_s=live_s,
                          pairs=cert.n_pairs_checked,
                          residencies=cert.n_host_residencies,
                          blobs=cert.n_disk_blobs,
-                         worst_host=cert.worst_host_units))
+                         worst_host=cert.worst_host_units,
+                         worst_lease=live.worst_lease_units))
         emit(f"certifier/layers{n_layers}", cert_s / n * 1e6,
              f"verts={n};pairs={cert.n_pairs_checked};"
              f"res={cert.n_host_residencies};blobs={cert.n_disk_blobs};"
              f"cert_vs_build={cert_s / max(build_s, 1e-9):.2f}x")
+        emit(f"liveness/layers{n_layers}", live_s / n * 1e6,
+             f"verts={n};lease={live.worst_lease_units}"
+             f"/{live.guaranteed_units};"
+             f"spills={live.n_spills_checked};"
+             f"live_vs_cert={live_s / max(cert_s, 1e-9):.2f}x")
+    # liveness cost vs arbitration policy: the same (largest) plan under a
+    # co-tenanted pool — the guarantee analysis runs the antichain bound
+    # against the plan lease's floor whatever the policy grants above it
+    mg, host_cap = last
+    n = len(mg)
+    for policy in ARBITRATION_POLICY_NAMES:
+        pool_cfg = PoolConfig(
+            capacity=2 * host_cap,
+            leases=(LeaseSpec("plan", min_bytes=host_cap),
+                    LeaseSpec("serve", discipline="reserving",
+                              priority=1)),
+            policy=policy, plan_lease="plan")
+        t0 = time.time()
+        live = certify_progress(mg, pool_cfg)
+        live_s = time.time() - t0
+        assert live.ok, live.summary()
+        rows.append(dict(policy=policy, verts=n, live_s=live_s,
+                         worst_lease=live.worst_lease_units))
+        emit(f"liveness/policy_{policy}", live_s / n * 1e6,
+             f"verts={n};lease={live.worst_lease_units}"
+             f"/{live.guaranteed_units};"
+             f"edges={live.n_blocking_edges}")
     return rows
 
 

@@ -14,7 +14,8 @@ Prints ``name,us_per_call,derived`` CSV (scaffold contract). Paper artifacts:
   to isolated pools, bounded combined occupancy, priced revocation stalls
   (DESIGN.md §12)
 * certifier — plan-certification cost vs plan size on tiered-offload plans
-  (DESIGN.md §13)
+  (DESIGN.md §13), plus liveness-certification cost vs plan size and pool
+  arbitration policy (DESIGN.md §14)
 * roofline — three-term model per dry-run cell (skipped when no artifacts)
 
 Figures run **isolated**: one broken benchmark emits a ``FAILED`` CSV row

@@ -29,10 +29,19 @@ from typing import Any
 import jax
 import numpy as np
 
+from ..core import lockcheck
+
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
            "complete_steps"]
 
 DEFAULT_SHARD_BYTES = 64 * 2**20
+
+# Serializes the publish + retention critical section across concurrent
+# savers (an async checkpoint thread racing the supervisor's restart
+# path): both mutate the same published step tree, and two overlapping
+# prunes can race ``rmtree`` on the same directory. A SanitizedLock leaf,
+# so checkpoint writes join the suite-wide lock-order audit.
+_publish_lock = lockcheck.make_lock("CkptStore")
 
 
 def _write_shard(path: pathlib.Path, arrays: dict[str, np.ndarray]) -> None:
@@ -110,13 +119,14 @@ def _save_into(d: pathlib.Path, tmp: pathlib.Path, step: int, tree: Any,
     }
     (tmp / "MANIFEST.json").write_text(json.dumps(manifest, indent=1))
     final = d / f"step_{step:010d}"
-    if final.exists():
-        shutil.rmtree(final)
-    tmp.rename(final)   # atomic publish
-    # retention
-    steps = sorted(p for p in d.iterdir() if p.name.startswith("step_"))
-    for old in steps[:-max_keep]:
-        shutil.rmtree(old)
+    with _publish_lock:
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)   # atomic publish
+        # retention
+        steps = sorted(p for p in d.iterdir() if p.name.startswith("step_"))
+        for old in steps[:-max_keep]:
+            shutil.rmtree(old)
     return final
 
 

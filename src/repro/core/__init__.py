@@ -4,6 +4,9 @@ from .taskgraph import OpKind, TaskGraph, TaskVertex, TensorSpec
 from .memgraph import DepKind, Loc, MemGraph, MemOp, MemVertex, RaceError
 from .analyze import (Certificate, PlanCertificationError, PlanHazard,
                       certify)
+from .liveness import (LeaseSpec, LivenessCertificate, LivenessModelError,
+                       PoolConfig, ProgressCertificationError, StreamConfig,
+                       certify_progress, default_pool_config)
 from .build import BuildConfig, BuildResult, MemgraphOOM, build_memgraph
 from .dispatch import DispatchPolicy, POLICY_NAMES, get_policy
 from .stores import DiskStore, HostStore, TieredStore
@@ -14,6 +17,9 @@ __all__ = [
     "OpKind", "TaskGraph", "TaskVertex", "TensorSpec",
     "DepKind", "Loc", "MemGraph", "MemOp", "MemVertex", "RaceError",
     "Certificate", "PlanCertificationError", "PlanHazard", "certify",
+    "LeaseSpec", "LivenessCertificate", "LivenessModelError", "PoolConfig",
+    "ProgressCertificationError", "StreamConfig", "certify_progress",
+    "default_pool_config",
     "BuildConfig", "BuildResult", "MemgraphOOM", "build_memgraph",
     "DispatchPolicy", "POLICY_NAMES", "get_policy",
     "DiskStore", "HostStore", "TieredStore",

@@ -83,9 +83,13 @@ class PlanHazard:
     interpreter must raise (or diverge from the oracle); for
     ``'occupancy'`` the ``tier`` occupancy replayed over the witness
     reaches ``expect_units > capacity`` within the first ``prefix``
-    vertices. ``confirmable`` is False for hazards whose bad interleaving
-    is dynamically silent (e.g. a double-spill deduplicated by the
-    store) — still plan bugs, but not replay-falsifiable."""
+    vertices; for ``'stall'`` (the liveness certifier, DESIGN.md §14) the
+    directed scheduler replaying the first ``prefix`` vertices with the
+    blocking admission discipline reaches a bounded-timeout stall, with
+    ``lease`` naming the contended pool share. ``confirmable`` is False
+    for hazards whose bad interleaving is dynamically silent (e.g. a
+    double-spill deduplicated by the store) — still plan bugs, but not
+    replay-falsifiable."""
 
     kind: str
     vertices: tuple[int, ...]
@@ -97,6 +101,7 @@ class PlanHazard:
     prefix: int = 0
     expect_units: int = 0
     capacity: int | None = None
+    lease: str | None = None
 
     def __str__(self) -> str:
         return f"[{self.kind}] {self.detail}"

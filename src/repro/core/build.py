@@ -72,6 +72,8 @@ import random
 from typing import Any, Callable
 
 from .analyze import Certificate, PlanCertificationError, certify
+from .liveness import (LivenessCertificate, ProgressCertificationError,
+                       certify_progress, default_pool_config)
 from .memgraph import DepKind, Loc, MemGraph, MemOp
 from .policies import (Arena, EvictionDecision, HostEntry, HostPlan,
                        PlacementDecision, PrefetchPlan, PrefetchRecord, INF)
@@ -123,6 +125,14 @@ class BuildConfig:
     # budget feasibility for *every* legal execution order. A hazard on a
     # compiled plan is a compiler bug and raises PlanCertificationError.
     certify: bool = False
+    # run the static liveness certifier (DESIGN.md §14) over the finished
+    # plan: prove no legal execution order can stall under the plan's
+    # implied pool model (the host_lease's actual pool population, or a
+    # single private lease over host_capacity). A hazard raises
+    # ProgressCertificationError carrying a stuck-state witness the
+    # directed scheduler (runtime.replay_stall) can replay to a real
+    # bounded-timeout stall.
+    certify_liveness: bool = False
 
     def size_of(self, v: TaskVertex) -> int:
         return (self.size_fn or (lambda u: u.out.nbytes))(v)
@@ -175,6 +185,8 @@ class BuildResult:
         default_factory=list)
     # soundness certificate (BuildConfig.certify; DESIGN.md §13)
     certificate: Certificate | None = None
+    # liveness certificate (BuildConfig.certify_liveness; DESIGN.md §14)
+    liveness_certificate: LivenessCertificate | None = None
 
     def final_value_location(self, tid: int) -> tuple[str, int]:
         """Where the runtime finds a terminal output: ('host', mid-or-tid) or
@@ -224,6 +236,14 @@ def build_memgraph(
                                   disk_capacity=config.disk_capacity)
         if not res.certificate.ok:
             raise PlanCertificationError(res.certificate)
+    if config.certify_liveness:
+        res.liveness_certificate = certify_progress(
+            res.memgraph,
+            default_pool_config(config.host_budget(),
+                                lease=config.host_lease),
+            disk_capacity=config.disk_capacity)
+        if not res.liveness_certificate.ok:
+            raise ProgressCertificationError(res.liveness_certificate)
     return res
 
 

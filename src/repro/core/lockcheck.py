@@ -18,6 +18,20 @@ schedule.
 ``SanitizedLock`` satisfies the ``threading.Lock`` protocol including
 what ``threading.Condition`` needs, so instrumented locks keep backing
 condition variables.
+
+**Wait-awareness.** ``Condition.wait()`` *releases* the lock while
+sleeping and reacquires it afterwards. Recorded naively, that reacquire
+looks like a fresh acquisition: any lock still held below the waited-on
+one on the thread's stack would grow a ``inner → outer`` edge — the
+exact inverse of the real ``outer → inner`` nesting of the same single
+code path, closing a false cycle that cannot deadlock (the waiter gave
+the outer lock up; nothing is held-and-wanted in both directions).
+``SanitizedLock`` therefore implements the private hooks
+``threading.Condition`` probes for (``_release_save`` /
+``_acquire_restore`` / ``_is_owned``): the wait-release remembers the
+lock's position on the held stack, and the post-notify reacquire
+reinserts it *at that position without recording any edge* — a
+resumption of an already-audited hold, not a new ordering decision.
 """
 from __future__ import annotations
 
@@ -86,14 +100,24 @@ def _record_acquire(cls: str) -> None:
     stack.append(cls)
 
 
-def _record_release(cls: str) -> None:
+def _record_release(cls: str) -> int:
     stack = _held_stack()
     # releases need not be LIFO (condition waits, hand-over-hand): drop
-    # the most recent matching hold
+    # the most recent matching hold. Returns the stack position the hold
+    # occupied so a wait-release can restore it exactly.
     for i in range(len(stack) - 1, -1, -1):
         if stack[i] == cls:
             del stack[i]
-            return
+            return i
+    return len(stack)
+
+
+def _record_wait_reacquire(cls: str, pos: int) -> None:
+    """Reinsert a wait-released hold at its saved stack position WITHOUT
+    recording edges: the thread never chose a new acquisition order — it
+    resumed a hold that was already audited when first taken."""
+    stack = _held_stack()
+    stack.insert(min(pos, len(stack)), cls)
 
 
 class SanitizedLock:
@@ -127,6 +151,31 @@ class SanitizedLock:
 
     def __exit__(self, *exc: Any) -> None:
         self.release()
+
+    # ---- hooks threading.Condition binds via hasattr ------------------
+    # Making the wait-release/reacquire pair visible keeps the held stack
+    # truthful across Condition.wait() and — crucially — keeps the
+    # reacquire from recording edges (see module docstring: a wait
+    # resumes an audited hold, it does not pick a new order).
+    def _release_save(self) -> Any:
+        pos = _record_release(self.lock_class) if _enabled else None
+        self._lk.release()
+        return pos
+
+    def _acquire_restore(self, state: Any) -> None:
+        self._lk.acquire()
+        if _enabled:
+            _record_wait_reacquire(
+                self.lock_class,
+                state if state is not None else len(_held_stack()))
+
+    def _is_owned(self) -> bool:
+        # probe the raw lock (not the recording acquire): a Condition
+        # bookkeeping check must never grow audit edges
+        if self._lk.acquire(False):
+            self._lk.release()
+            return False
+        return True
 
     def __repr__(self) -> str:
         return f"<SanitizedLock {self.lock_class!r} at {id(self):#x}>"

@@ -55,13 +55,19 @@ are byte-identical to isolated per-consumer pools.
 """
 from __future__ import annotations
 
+import contextlib
 import threading
 
 from . import lockcheck
-from typing import Callable
+from .liveness import LivenessModelError
+from typing import Callable, Iterator
 
 __all__ = ["HostPool", "Lease", "LeaseRefusal", "ArbitrationPolicy",
            "ARBITRATION_POLICY_NAMES", "get_arbitration_policy"]
+
+# thread-local marker: the lease whose revocation drain the current thread
+# is running (HostPool.draining; liveness assumption A2, DESIGN.md §14)
+_drain_tls = threading.local()
 
 
 class LeaseRefusal(RuntimeError):
@@ -77,13 +83,21 @@ class Lease:
 
     def __init__(self, pool: "HostPool", name: str, *, min_bytes: int = 0,
                  weight: float = 1.0, priority: int = 0,
-                 on_revoke: Callable[[int], None] | None = None) -> None:
+                 on_revoke: Callable[[int], None] | None = None,
+                 drains_via: tuple[str, ...] = ()) -> None:
         self.pool = pool
         self.name = name
         self.min_bytes = int(min_bytes)
         self.weight = float(weight)
         self.priority = int(priority)
         self.on_revoke = on_revoke
+        # leases this one's revocation drain may charge while draining
+        # (liveness assumption A2): a drain that blocks on an undeclared
+        # lease is a blocking edge outside the static model
+        self.drains_via: tuple[str, ...] = tuple(drains_via)
+        # guaranteed share the liveness certifier proved the plan's
+        # occupancy stays within (assumption A1); None = not certified
+        self.certified_floor: int | None = None
         self.grant = 0            # current arbitrated share (bytes)
         self.used = 0             # bytes charged / resident against us
         self.peak = 0             # high-water mark of `used`
@@ -252,7 +266,8 @@ class HostPool:
     # ------------------------------------------------------------- leases
     def lease(self, name: str, *, min_bytes: int = 0, weight: float = 1.0,
               priority: int = 0,
-              on_revoke: Callable[[int], None] | None = None) -> Lease:
+              on_revoke: Callable[[int], None] | None = None,
+              drains_via: tuple[str, ...] = ()) -> Lease:
         """Get-or-create the lease called ``name``. Floors must be jointly
         feasible: the sum of every lease's ``min_bytes`` can never exceed
         the pool — an infeasible floor is refused at lease time, not
@@ -262,6 +277,8 @@ class HostPool:
             if l is not None:
                 if on_revoke is not None and l.on_revoke is None:
                     l.on_revoke = on_revoke
+                if drains_via and not l.drains_via:
+                    l.drains_via = tuple(drains_via)
                 return l
             floor_sum = sum(x.min_bytes for x in self._leases.values())
             if floor_sum + min_bytes > self.capacity:
@@ -270,7 +287,8 @@ class HostPool:
                     f"{floor_sum} B of floors already promised out of "
                     f"{self.capacity} B")
             l = Lease(self, name, min_bytes=min_bytes, weight=weight,
-                      priority=priority, on_revoke=on_revoke)
+                      priority=priority, on_revoke=on_revoke,
+                      drains_via=drains_via)
             self._leases[name] = l
             fire = self._rebalance_locked()
         self._fire(fire)
@@ -294,6 +312,23 @@ class HostPool:
         with self._lock:
             return list(self._leases.values())
 
+    @contextlib.contextmanager
+    def draining(self, l: Lease) -> Iterator[None]:
+        """Mark the current thread as running ``l``'s revocation drain
+        (liveness assumption A2, DESIGN.md §14). While active, any
+        :meth:`try_charge` against this pool must target ``l`` itself or
+        a lease named in ``l.drains_via`` — the edges the static blocking
+        model knows about. A charge against any other lease is a blocking
+        edge the certifier never saw, so it is reported as certifier
+        unsoundness rather than allowed to deadlock silently. Releases
+        are always permitted: draining *is* releasing."""
+        prev = getattr(_drain_tls, "lease", None)
+        _drain_tls.lease = l
+        try:
+            yield
+        finally:
+            _drain_tls.lease = prev
+
     # ------------------------------------------------------------ charges
     def try_charge(self, l: Lease, n: int, *, urgent: bool = True) -> bool:
         """Reserve ``n`` bytes against ``l`` *before* the bytes move.
@@ -307,6 +342,16 @@ class HostPool:
         n = int(n)
         if n < 0:
             raise ValueError("charge must be non-negative")
+        drain = getattr(_drain_tls, "lease", None)
+        if (drain is not None and drain.pool is self
+                and l.name != drain.name
+                and l.name not in drain.drains_via):
+            raise LivenessModelError(
+                f"revocation drain of lease {drain.name!r} charged lease "
+                f"{l.name!r}, which is not in its declared drains_via "
+                f"{drain.drains_via!r}: a blocking edge outside the static "
+                f"model — the liveness certifier is unsound for this "
+                f"configuration (assumption A2, DESIGN.md §14)")
         with self._lock:
             l.demand = l.used + n
             fire: list[tuple[Callable[[int], None], int]] = []
@@ -346,8 +391,16 @@ class HostPool:
         with self._lock:
             self._apply_locked(l, int(delta))
             l.demand = l.used
+            used, floor = l.used, l.certified_floor
             fire = self._rebalance_locked()
         self._fire(fire)
+        if floor is not None and used > floor:
+            raise LivenessModelError(
+                f"lease {l.name!r} occupancy {used} B exceeded the "
+                f"certified guaranteed share of {floor} B the liveness "
+                f"proof assumed (assumption A1, DESIGN.md §14): the "
+                f"certifier is unsound or the runtime diverged from the "
+                f"compiled plan")
 
     def transfer(self, src: Lease, dst: Lease, n: int) -> None:
         """Move ``n`` charged bytes between leases (no pool-level change):

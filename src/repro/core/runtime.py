@@ -42,16 +42,19 @@ from typing import Any, Callable
 
 import numpy as np
 
+from . import liveness as _lv
 from .build import BuildResult
 from .dispatch import (COMPUTE, DispatchPolicy, ENGINE_KINDS, TRANSFER_KINDS,
                        engine_of, get_policy)
 from .memgraph import Loc, MemGraph, MemOp, MemVertex, RaceError
 from .ops import get_op
+from .pool import HostPool, Lease
 from .stores import DiskStore, HostStore, TieredStore
 from .taskgraph import OpKind, TaskGraph
 
 __all__ = ["HostStore", "DiskStore", "TieredStore", "SlotTable", "ByteArena",
-           "run_in_order", "TurnipRuntime", "RunResult", "make_store"]
+           "run_in_order", "TurnipRuntime", "RunResult", "make_store",
+           "replay_stall"]
 
 
 def make_store(mg: MemGraph, inputs: dict[int, np.ndarray], *,
@@ -362,6 +365,15 @@ class TurnipRuntime:
         # an arbitrated HostPool under this lease — occupancy is mirrored
         # so serving pressure and MEMGRAPH offload traffic meet one budget
         self.host_lease = host_lease
+        # liveness assumption A1 (DESIGN.md §14): the proof bounded this
+        # plan's occupancy by the lease's guaranteed share, so the pool
+        # enforces it as a checked invariant from here on
+        lcert = getattr(res, "liveness_certificate", None)
+        if (host_lease is not None and lcert is not None
+                and lcert.ok and lcert.pool is not None
+                and lcert.pool.plan_lease == host_lease.name
+                and lcert.guaranteed_units is not None):
+            host_lease.certified_floor = lcert.guaranteed_units
 
     def run(self, inputs: dict[int, np.ndarray]) -> RunResult:
         mg = self.mg
@@ -374,6 +386,12 @@ class TurnipRuntime:
         owns_store = self.store_factory is None
         host = (make_store(mg, inputs, lease=self.host_lease) if owns_store
                 else self.store_factory(inputs))
+        # assumption A1's disk face: a liveness-certified plan proved every
+        # spill creditable, so a DiskFullError is certifier unsoundness
+        lcert = getattr(self.res, "liveness_certificate", None)
+        if (owns_store and lcert is not None and lcert.ok
+                and isinstance(host, TieredStore)):
+            host.certified_live = True
         try:
             return self._run(inputs, mem, host)
         finally:
@@ -580,3 +598,261 @@ class TurnipRuntime:
             disk_load_bytes=disk.read_bytes if disk else 0,
             peak_host_bytes=host.peak_resident_bytes,
         )
+
+
+# --------------------------------------------------------------------------
+# directed stuck-state scheduler (liveness witness replay, DESIGN.md §14)
+# --------------------------------------------------------------------------
+class _StallProbe:
+    """Shared state between the directed workers and their watchdog."""
+
+    def __init__(self) -> None:
+        self.cond = threading.Condition()
+        self.stalled: list[Any] = []     # tags whose admission timed out
+        self.done = 0                    # workers that finished unstalled
+        self.abort = False
+
+
+class _DiskGate:
+    """A bounded disk tier reduced to its admission discipline: a unit
+    counter with the same ``try_charge`` surface as a lease, so the same
+    blocking-admission loop drives both replays."""
+
+    def __init__(self, capacity: int) -> None:
+        self.capacity = int(capacity)
+        self.used = 0
+        self._lock = threading.Lock()
+
+    def try_charge(self, n: int) -> bool:
+        with self._lock:
+            if self.used + n > self.capacity:
+                return False
+            self.used += n
+            return True
+
+    def release(self, n: int) -> None:
+        with self._lock:
+            self.used -= n
+
+
+def _blocking_charge(target: Any, n: int, tag: Any, probe: _StallProbe,
+                     deadline: float, poll_s: float = 0.002) -> bool:
+    """The blocking admission discipline the static model assumes of a
+    reserving consumer: retry ``try_charge`` until it fits or the bounded
+    timeout expires (the threaded analogue of the serve engine's deferred
+    admissions). Records the stall on timeout and returns False."""
+    while True:
+        if target.try_charge(n):
+            return True
+        with probe.cond:
+            if probe.abort or time.monotonic() >= deadline:
+                probe.stalled.append(tag)
+                probe.cond.notify_all()
+                return False
+        time.sleep(poll_s)
+
+
+def _pool_of(cfg: "_lv.PoolConfig") -> tuple[HostPool, dict[str, Lease]]:
+    pool = HostPool(cfg.capacity, policy=cfg.policy)
+    leases = {s.name: pool.lease(s.name, min_bytes=s.min_bytes,
+                                 weight=s.weight, priority=s.priority,
+                                 drains_via=s.drains_via)
+              for s in cfg.leases}
+    return pool, leases
+
+
+def _occupy_slack(cfg: "_lv.PoolConfig", leases: dict[str, Lease],
+                  plan_lease: str, guaranteed: int) -> None:
+    """Adversarial co-tenancy: every byte above the plan lease's
+    guarantee is held by the others — the configuration a full
+    revocation leaves behind, and the one the guarantee is *about*."""
+    slack = cfg.capacity - guaranteed
+    for s in cfg.leases:
+        if s.name != plan_lease and slack > 0:
+            leases[s.name].account(slack)
+            slack = 0
+
+
+def _run_directed(workers: list[Callable[[], None]], probe: _StallProbe,
+                  timeout_s: float) -> None:
+    threads = [threading.Thread(target=w, name=f"turnip-directed{i}")
+               for i, w in enumerate(workers)]
+    for th in threads:
+        th.start()
+    n = len(workers)
+    with probe.cond:
+        probe.cond.wait_for(
+            lambda: len(probe.stalled) + probe.done >= n,
+            timeout=timeout_s * 8 + 2)
+        probe.abort = True
+        probe.cond.notify_all()
+    for th in threads:
+        th.join()
+
+
+def _replay_lease_floor_stall(hazard: Any, cert: Any, mg: MemGraph,
+                              timeout_s: float) -> str:
+    from .analyze import recover_residencies
+    cfg = cert.pool
+    pool, leases = _pool_of(cfg)
+    plan = leases[hazard.lease]
+    guaranteed = int(hazard.capacity or 0)
+    _occupy_slack(cfg, leases, hazard.lease, guaranteed)
+    host, _ = recover_residencies(mg)
+    admit_units = {r.admit: r.units for r in host}
+    release_units = {r.release: r.units
+                     for r in host if r.release is not None}
+    probe = _StallProbe()
+    deadline = time.monotonic() + timeout_s
+
+    def worker() -> None:
+        for m in hazard.witness[:hazard.prefix]:
+            if m in admit_units:
+                if not _blocking_charge(plan, admit_units[m], m, probe,
+                                        deadline):
+                    return
+            elif m in release_units:
+                plan.release(release_units[m])
+        with probe.cond:
+            probe.done += 1
+            probe.cond.notify_all()
+
+    _run_directed([worker], probe, timeout_s)
+    assert probe.stalled, (
+        f"witness prefix replayed to completion without stalling — the "
+        f"lease-floor hazard did not confirm: {hazard}")
+    snap = pool.snapshot()
+    return (f"admission {probe.stalled[0]} stalled {timeout_s}s on lease "
+            f"{hazard.lease!r} with the pool static at "
+            f"{snap['used_bytes']}/{snap['capacity']} B")
+
+
+def _replay_disk_credit_stall(hazard: Any, cert: Any, mg: MemGraph,
+                              timeout_s: float) -> str:
+    from .analyze import recover_residencies
+    assert cert.disk_capacity is not None
+    gate = _DiskGate(cert.disk_capacity)
+    _, disk = recover_residencies(mg)
+    admit_units = {r.admit: r.units for r in disk}
+    release_units = {r.release: r.units
+                     for r in disk if r.release is not None}
+    probe = _StallProbe()
+    deadline = time.monotonic() + timeout_s
+
+    def worker() -> None:
+        for m in hazard.witness[:hazard.prefix + 1]:
+            if m in admit_units:
+                if not _blocking_charge(gate, admit_units[m], m, probe,
+                                        deadline):
+                    return
+            elif m in release_units:
+                gate.release(release_units[m])
+        with probe.cond:
+            probe.done += 1
+            probe.cond.notify_all()
+
+    _run_directed([worker], probe, timeout_s)
+    assert probe.stalled, (
+        f"witness prefix replayed to completion without stalling — the "
+        f"disk-credit hazard did not confirm: {hazard}")
+    return (f"spill {probe.stalled[0]} stalled {timeout_s}s with "
+            f"{gate.used}/{gate.capacity} disk unit(s) held by blobs "
+            f"whose drops are all downstream")
+
+
+def _replay_revocation_cycle(hazard: Any, cert: Any,
+                             timeout_s: float) -> str:
+    cfg = cert.pool
+    pool, leases = _pool_of(cfg)
+    # recover the drain cycle starting from the flagged lease
+    cycle = [hazard.lease]
+    while True:
+        spec = cfg.spec(cycle[-1])
+        nxt = next((t for t in spec.drains_via
+                    if cfg.spec(t) is not None), None)
+        assert nxt is not None, f"no drain edge out of {cycle[-1]!r}"
+        if nxt in cycle:
+            cycle = cycle[cycle.index(nxt):]
+            break
+        cycle.append(nxt)
+    # wedge: fill the pool across the cycle so every drain's charge must
+    # wait for room only the next drain can free
+    share = cfg.capacity // len(cycle)
+    for i, name in enumerate(cycle):
+        extra = cfg.capacity - share * len(cycle) if i == 0 else 0
+        leases[name].account(share + extra)
+    probe = _StallProbe()
+    deadline = time.monotonic() + timeout_s
+
+    def drain(name: str, nxt: str) -> Callable[[], None]:
+        def worker() -> None:
+            l = leases[name]
+            with pool.draining(l):
+                if not _blocking_charge(leases[nxt], 1, name, probe,
+                                        deadline):
+                    return
+            with probe.cond:
+                probe.done += 1
+                probe.cond.notify_all()
+        return worker
+
+    workers = [drain(name, cycle[(i + 1) % len(cycle)])
+               for i, name in enumerate(cycle)]
+    _run_directed(workers, probe, timeout_s)
+    assert len(probe.stalled) == len(cycle) and probe.done == 0, (
+        f"some drain on the cycle made progress — the revocation-cycle "
+        f"hazard did not confirm: stalled={probe.stalled} "
+        f"done={probe.done}")
+    return (f"all {len(cycle)} drains on {' -> '.join(cycle)} stalled "
+            f"{timeout_s}s with the pool full "
+            f"({pool.snapshot()['used_bytes']}/{cfg.capacity} B)")
+
+
+def _replay_atomic_stall(hazard: Any, cert: Any, timeout_s: float) -> str:
+    cfg = cert.pool
+    pool, leases = _pool_of(cfg)
+    guaranteed = int(hazard.capacity or 0)
+    _occupy_slack(cfg, leases, hazard.lease, guaranteed)
+    probe = _StallProbe()
+    deadline = time.monotonic() + timeout_s
+
+    def worker() -> None:
+        if not _blocking_charge(leases[hazard.lease], hazard.expect_units,
+                                "batch", probe, deadline):
+            return
+        with probe.cond:
+            probe.done += 1
+            probe.cond.notify_all()
+
+    _run_directed([worker], probe, timeout_s)
+    assert probe.stalled, (
+        f"the all-or-nothing batch was admitted — the atomic-admission "
+        f"hazard did not confirm: {hazard}")
+    return (f"{hazard.expect_units} B all-or-nothing batch stalled "
+            f"{timeout_s}s against a {guaranteed} B guarantee")
+
+
+def replay_stall(hazard: Any, cert: Any, mg: MemGraph | None = None, *,
+                 timeout_s: float = 0.5) -> str:
+    """Replay a liveness hazard's stuck-state witness to an *actual*
+    bounded-timeout stall: the directed scheduler executes the witness
+    prefix against a real :class:`~repro.core.pool.HostPool` (or a
+    bounded disk gate) with the blocking admission discipline, and the
+    flagged admission must still be refused after ``timeout_s`` of
+    retries with the pool static — the dynamic confirmation for
+    ``witness_kind == 'stall'`` findings, the way ``run_in_order``
+    replays §13's race witnesses. Returns a one-line description of the
+    observed stall; raises AssertionError if the replay makes progress
+    instead."""
+    kind = hazard.kind
+    if kind == _lv.REVOCATION_CYCLE:
+        return _replay_revocation_cycle(hazard, cert, timeout_s)
+    if kind == _lv.ATOMIC_ADMISSION_STALL:
+        return _replay_atomic_stall(hazard, cert, timeout_s)
+    if kind == _lv.LEASE_FLOOR_STALL:
+        assert mg is not None, "lease-floor replay needs the memgraph"
+        return _replay_lease_floor_stall(hazard, cert, mg, timeout_s)
+    if kind == _lv.DISK_CREDIT_STALL:
+        assert mg is not None, "disk-credit replay needs the memgraph"
+        return _replay_disk_credit_stall(hazard, cert, mg, timeout_s)
+    raise AssertionError(f"no stall replay for hazard kind {kind!r}")

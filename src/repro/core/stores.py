@@ -342,6 +342,11 @@ class TieredStore(HostStore):
         # next admission spill down without any inline write on the
         # revoker's thread
         self.lease = lease
+        # liveness assumption A1's disk face (DESIGN.md §14): when the
+        # owning runtime stamped the plan liveness-certified, every spill
+        # was statically proven creditable, so a DiskFullError here means
+        # the certifier is unsound — escalate instead of refusing
+        self.certified_live = False
         self._lru: dict[Any, int] = {}       # key -> last-touch counter
         self._tick = 0
 
@@ -435,8 +440,19 @@ class TieredStore(HostStore):
         release every copy without any disk write. When an immutable disk
         copy already exists the host bytes are simply released (no second
         write, 0 returned). No-op (0) when the key is not host-resident."""
-        with self._lock:
-            return self._spill_locked(key, drop=drop)
+        try:
+            with self._lock:
+                return self._spill_locked(key, drop=drop)
+        except DiskFullError as e:
+            if self.certified_live:
+                from .liveness import LivenessModelError
+                raise LivenessModelError(
+                    f"{e} [plan was liveness-certified: every disk "
+                    f"admission was proven creditable in all orders, so "
+                    f"this refusal means the certifier is unsound or the "
+                    f"runtime diverged from the plan — DESIGN.md §14]"
+                ) from e
+            raise
 
     def load(self, key):
         """Stage ``key``'s disk copy back into host RAM (disk-read traffic

@@ -25,21 +25,32 @@ import dataclasses
 import time
 from typing import Any, Callable
 
+from ..core import lockcheck
+
 __all__ = ["Heartbeat", "Supervisor", "speculative_redispatch"]
 
 
 class Heartbeat:
+    """Worker liveness. Beats arrive from worker threads while the
+    supervisor polls from the driver, so the table is lock-protected —
+    a :class:`~repro.core.lockcheck.SanitizedLock` leaf, so the training
+    side participates in the suite-wide acquisition-order audit."""
+
     def __init__(self, timeout_s: float = 30.0) -> None:
         self.timeout_s = timeout_s
         self.last_beat: dict[str, float] = {}
+        self._lock = lockcheck.make_lock("Heartbeat")
 
     def beat(self, worker: str, now: float | None = None) -> None:
-        self.last_beat[worker] = time.monotonic() if now is None else now
+        stamp = time.monotonic() if now is None else now
+        with self._lock:
+            self.last_beat[worker] = stamp
 
     def dead_workers(self, now: float | None = None) -> list[str]:
         now = time.monotonic() if now is None else now
-        return [w for w, t in self.last_beat.items()
-                if now - t > self.timeout_s]
+        with self._lock:
+            return [w for w, t in self.last_beat.items()
+                    if now - t > self.timeout_s]
 
 
 @dataclasses.dataclass
@@ -59,19 +70,48 @@ class Supervisor:
     """
 
     def __init__(self, *, ckpt_dir: str, save_every: int = 10,
-                 max_restarts: int = 5) -> None:
+                 max_restarts: int = 5,
+                 heartbeat: Heartbeat | None = None) -> None:
         self.ckpt_dir = ckpt_dir
         self.save_every = save_every
         self.max_restarts = max_restarts
+        self.heartbeat = heartbeat if heartbeat is not None else Heartbeat()
+        # guards the live progress record (step/restarts/history): a
+        # monitor thread reads status() while run() mutates. Documented
+        # order: Supervisor -> Heartbeat (run() beats under its own
+        # lock); the sanitizer audits it with the rest of the fleet.
+        self._lock = lockcheck.make_lock("Supervisor")
+        self._step = 0
+        self._restarts = 0
+        self._history: list[str] = []
+
+    def status(self) -> tuple[int, int, list[str]]:
+        """(current step, restarts so far, history copy) — safe to call
+        from a monitor thread while ``run`` is live."""
+        with self._lock:
+            return self._step, self._restarts, list(self._history)
+
+    def _note(self, step: int, entry: str | None = None,
+              restarted: bool = False) -> None:
+        with self._lock:
+            self._step = step
+            if restarted:
+                self._restarts += 1
+            if entry is not None:
+                self._history.append(entry)
+            self.heartbeat.beat("driver")
 
     def run(self, state: Any, step_fn: Callable, batch_fn: Callable,
             n_steps: int, *, start_step: int = 0) -> tuple[Any, SupervisorReport]:
         from ..ckpt.store import latest_step, restore_checkpoint, \
             save_checkpoint
-        history: list[str] = []
         restarts = 0
         step = start_step
         steps_run = 0
+        with self._lock:
+            self._step, self._restarts = step, 0
+            self._history = []
+        history = self._history
         while step < n_steps:
             try:
                 state, metrics = step_fn(state, batch_fn(step))
@@ -79,18 +119,22 @@ class Supervisor:
                 step += 1
                 if step % self.save_every == 0 or step == n_steps:
                     save_checkpoint(self.ckpt_dir, step, state)
-                    history.append(f"ckpt@{step}")
+                    self._note(step, f"ckpt@{step}")
+                else:
+                    self._note(step)
             except Exception as e:   # noqa: BLE001 — any failure → restart
                 restarts += 1
-                history.append(f"fail@{step}:{type(e).__name__}")
+                self._note(step, f"fail@{step}:{type(e).__name__}",
+                           restarted=True)
                 if restarts > self.max_restarts:
                     raise
                 last = latest_step(self.ckpt_dir)
                 if last is None:
                     raise
                 state, step = restore_checkpoint(self.ckpt_dir, state)
-                history.append(f"restored@{step}")
-        return state, SupervisorReport(steps_run, restarts, step, history)
+                self._note(step, f"restored@{step}")
+        return state, SupervisorReport(steps_run, restarts, step,
+                                       list(history))
 
 
 def speculative_redispatch(durations: dict[int, float], op_medians:

@@ -78,6 +78,10 @@ import numpy as np
 
 from ..core import lockcheck
 from ..core.dispatch import D2H, DISK, H2D, DispatchPolicy
+from ..core.liveness import (LeaseSpec, LivenessCertificate,
+                             LivenessModelError, PoolConfig,
+                             certify_progress)
+from ..core.memgraph import MemGraph
 from ..core.stores import HostStore, TieredStore
 from .kv_cache import PagedKVCache
 
@@ -431,14 +435,29 @@ class Engine:
         self._revoke_lock = lockcheck.make_lock("ServeEngine.revoke")
         self._revoked_pending = 0
         if pool is not None:
+            # drains_via=(): both leases' revocation drains (the disk-
+            # stream spill path) only *release* bytes, never charge
+            # another lease — the declaration the liveness model checks
+            # at runtime (assumption A2, DESIGN.md §14)
             self._kv_lease = pool.lease(
                 "kv", min_bytes=cfg.host_kv_bytes or 0, weight=2.0,
-                priority=2, on_revoke=self._on_revoke)
+                priority=2, on_revoke=self._on_revoke, drains_via=())
             self._pf_lease = pool.lease(
                 "prefetch", weight=1.0, priority=0,
-                on_revoke=self._on_revoke)
+                on_revoke=self._on_revoke, drains_via=())
+            # statically certify the engine's pool configuration live
+            # (DESIGN.md §14): structural passes only — floors jointly
+            # feasible, no revocation-drain cycles, no waits-for cycle in
+            # the lease/stream resource-allocation graph. When this holds,
+            # the no-progress detector below is provably unreachable, so
+            # its firing is escalated to certifier unsoundness.
+            self._liveness_certificate: LivenessCertificate | None = \
+                certify_progress(MemGraph(), self.pool_model())
+            self._certified_live = self._liveness_certificate.ok
         else:
             self._kv_lease = self._pf_lease = None
+            self._liveness_certificate = None
+            self._certified_live = False
         self.reqs: dict[int, Request] = {}
         self._live: set[int] = set()                # rids not yet DONE
         self.stats = ServeStats()
@@ -466,6 +485,43 @@ class Engine:
         self._idle_pool_state = None    # last observed (pool used, grant)
 
     # ---------------------------------------------- pool lease bookkeeping
+    def pool_model(self) -> PoolConfig:
+        """The engine's pool population as the static liveness model sees
+        it (DESIGN.md §14): every lease a reserving consumer with its
+        declared drain routes, co-tenants included as they stand."""
+        specs = tuple(LeaseSpec(
+            name=l.name, min_bytes=l.min_bytes, weight=l.weight,
+            priority=l.priority, discipline="reserving",
+            drains_via=tuple(getattr(l, "drains_via", ())))
+            for l in self._pool.leases())
+        return PoolConfig(capacity=self._pool.capacity, leases=specs,
+                          policy=getattr(self._pool.policy, "name",
+                                         "static"))
+
+    def _waits_for_locked(self) -> dict:
+        """The live waits-for graph, dumped when the no-progress detector
+        fires: who holds what, who is blocked on what. Diagnostic only —
+        the detector itself is demoted to a certifier-soundness check for
+        certified configurations."""
+        leases = {
+            l.name: {"grant": l.grant, "used": l.used,
+                     "pressure": l.pressure, "overage": l.overage,
+                     "refusals": l.refusals}
+            for l in self._pool.leases()}
+        with self._revoke_lock:
+            revoked = self._revoked_pending
+        return {
+            "pool": {"capacity": self._pool.capacity,
+                     "used_bytes": self._pool.used_bytes},
+            "leases": leases,
+            "revoked_pending": revoked,
+            "queued": list(self._queue),
+            "swapped": list(self._swapped),
+            "spill_inflight": sorted(self._spill_inflight),
+            "prefetch_inflight": sorted(self._prefetch_inflight),
+            "states": {r: self.reqs[r].state for r in self._live},
+        }
+
     def _on_revoke(self, deficit: int) -> None:
         """Pool callback: another consumer's pressure shrank one of our
         grants below its charged bytes. Must stay cheap and lock-light —
@@ -754,7 +810,17 @@ class Engine:
                     # and the spill (which would push the disk read onto
                     # the h2d lane via read-through). The write itself is
                     # one small block; the wire time was slept off-lock.
-                    self.stats.disk_spill_bytes += self.host.spill(key)
+                    if self._pool is not None:
+                        # mark this thread as the kv lease's revocation
+                        # drain (assumption A2): the spill may only
+                        # release — a charge against any undeclared lease
+                        # in here would be a blocking edge the liveness
+                        # model never saw, and the pool rejects it loudly
+                        with self._pool.draining(self._kv_lease):
+                            self.stats.disk_spill_bytes += \
+                                self.host.spill(key)
+                    else:
+                        self.stats.disk_spill_bytes += self.host.spill(key)
                     # the host copy moved down a tier: its reservation is
                     # what the arbiter has been waiting for
                     self._release_key_locked(key)
@@ -1223,11 +1289,25 @@ class Engine:
                     self._idle_spins = 0
                 self._idle_spins += 1
                 if self._idle_spins > 100:
+                    waits = self._waits_for_locked()
+                    if self._certified_live:
+                        # DESIGN.md §14 assumption A4: this configuration
+                        # was statically proven stall-free, so reaching
+                        # here means the certifier is unsound or a
+                        # blocking edge escaped the model — not an
+                        # operational deadlock to shrug at
+                        raise LivenessModelError(
+                            "no-progress detector fired on a liveness-"
+                            "certified pool configuration (statically "
+                            "unreachable): the certifier is unsound or "
+                            "the runtime grew a blocking edge outside "
+                            "the model — live waits-for graph: "
+                            f"{waits}")
                     raise RuntimeError(
                         "shared-pool deadlock: swapped requests cannot "
                         "reserve their resume staging, no spillable bytes "
                         "remain, and no other consumer is releasing any — "
-                        f"pool {self._pool.snapshot()}")
+                        f"live waits-for graph: {waits}")
             self._wake.wait(timeout=0.1)
         self.stats.stall_time += time.perf_counter() - t0
 

@@ -84,16 +84,28 @@ def random_taskgraph(rng, *, min_ops: int = 6, max_ops: int = 18):
     return tg
 
 
-def confirm_hazard(tg, res, hazard, *, seed: int = 0) -> str:
+def confirm_hazard(tg, res, hazard, *, seed: int = 0, cert=None) -> str:
     """Dynamically confirm a certifier finding by replaying its witness
     schedule through the differential harness's executors (DESIGN.md §13:
     every counterexample the static analysis emits must be a real fuzz
-    case). Returns a short description of how the witness manifested;
-    raises ``AssertionError`` if the replay stays healthy."""
+    case). Liveness findings (``witness_kind == "stall"``, §14) replay
+    through the directed stuck-state scheduler instead: the flagged
+    admission must still be refused after a bounded timeout against a
+    real HostPool. ``cert`` is the LivenessCertificate that carries the
+    pool/stream model (defaults to ``res.liveness_certificate``).
+    Returns a short description of how the witness manifested; raises
+    ``AssertionError`` if the replay stays healthy."""
     from repro.core.analyze import replay_occupancy
-    from repro.core.runtime import eval_taskgraph, run_in_order
+    from repro.core.runtime import eval_taskgraph, replay_stall, \
+        run_in_order
 
     assert hazard.confirmable, f"hazard is not replay-falsifiable: {hazard}"
+    if hazard.witness_kind == "stall":
+        if cert is None:
+            cert = res.liveness_certificate
+        assert cert is not None, "stall replay needs the certificate"
+        mg = getattr(res, "memgraph", res) if res is not None else None
+        return replay_stall(hazard, cert, mg)
     assert hazard.witness, f"hazard carries no witness schedule: {hazard}"
     if hazard.witness_kind == "occupancy":
         occ = replay_occupancy(res.memgraph, hazard.witness,

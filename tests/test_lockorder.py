@@ -8,6 +8,7 @@ inversion is caught with the concrete cycle, and that the instrumented
 locks still back condition variables.
 """
 import threading
+import time
 
 import numpy as np
 import pytest
@@ -88,3 +89,70 @@ def test_sanitized_lock_backs_condition_variables():
     t.join(timeout=5)
     assert not t.is_alive()
     assert not lk.locked()
+
+
+def test_wait_reacquire_records_no_false_cycle():
+    """Waiting on an *outer* condition while holding an *inner* lock is a
+    legitimate pattern: ``Condition.wait()`` releases the outer lock, so
+    nothing is held-and-wanted in both directions and no deadlock is
+    possible. A wait-blind sanitizer records the post-notify reacquire as
+    ``inner -> outer`` — inverting the real ``outer -> inner`` nesting of
+    the same single code path and reporting a false cycle. The wait-aware
+    hooks must keep the graph acyclic here."""
+    outer = lockcheck.make_lock("wait_outer")
+    inner = lockcheck.make_lock("wait_inner")
+    cond = threading.Condition(outer)
+    state = {"ready": False}
+
+    def waiter():
+        with cond:                # outer held
+            with inner:           # records the real outer -> inner edge
+                while not state["ready"]:
+                    cond.wait(timeout=5)   # releases outer, inner stays
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    # let the waiter reach the wait before notifying
+    deadline = time.monotonic() + 5
+    while not outer.locked() and time.monotonic() < deadline:
+        time.sleep(0.001)
+    with cond:
+        state["ready"] = True
+        cond.notify()
+    t.join(timeout=5)
+    assert not t.is_alive()
+    g = lockcheck.edges()
+    assert "wait_inner" in g.get("wait_outer", set()), g
+    # the reacquire after the wait must NOT have recorded the inversion
+    assert "wait_outer" not in g.get("wait_inner", set()), g
+    lockcheck.assert_acyclic()
+
+
+def test_wait_reacquire_restores_stack_position():
+    """After a wait resumes, later acquisitions must still see the
+    waited-on lock as *held* (it is) and in its original nesting slot:
+    an acquisition under it records outer -> new, not nothing."""
+    outer = lockcheck.make_lock("restack_outer")
+    other = lockcheck.make_lock("restack_other")
+    cond = threading.Condition(outer)
+    state = {"ready": False}
+
+    def waiter():
+        with cond:
+            while not state["ready"]:
+                cond.wait(timeout=5)
+            with other:           # post-wait nesting: outer -> other
+                pass
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    deadline = time.monotonic() + 5
+    while not outer.locked() and time.monotonic() < deadline:
+        time.sleep(0.001)
+    with cond:
+        state["ready"] = True
+        cond.notify()
+    t.join(timeout=5)
+    assert not t.is_alive()
+    assert "restack_other" in lockcheck.edges().get("restack_outer", set())
+    lockcheck.assert_acyclic()

@@ -126,6 +126,57 @@ class TestFaultTolerance:
         hb.beat("w1", now=105.0)
         assert hb.dead_workers(now=112.0) == ["w0"]
 
+    def test_supervisor_restart_under_lock_sanitizer(self, tmp_path):
+        """Satellite: training-side locks (Supervisor, Heartbeat,
+        CkptStore) join the suite-wide acquisition-order audit. A restart
+        run with concurrent worker heartbeats and a status-polling
+        monitor must record the documented Supervisor -> Heartbeat
+        nesting and stay acyclic (the autouse sanitizer re-asserts at
+        teardown)."""
+        import threading
+
+        from repro.core import lockcheck
+
+        state = {"x": np.zeros((), np.float32)}
+        crashes = {"left": 1}
+
+        def step_fn(state, batch):
+            if state["x"] == 5 and crashes["left"]:
+                crashes["left"] -= 1
+                raise RuntimeError("injected node failure")
+            return {"x": state["x"] + 1}, {}
+
+        sup = Supervisor(ckpt_dir=str(tmp_path), save_every=2)
+        stop = threading.Event()
+
+        def monitor():
+            while not stop.is_set():
+                sup.heartbeat.beat("w0")
+                sup.status()
+                sup.heartbeat.dead_workers()
+
+        t = threading.Thread(target=monitor)
+        t.start()
+        try:
+            state, report = sup.run(state, step_fn, lambda s: None, 10)
+        finally:
+            stop.set()
+            t.join(timeout=5)
+        assert report.final_step == 10
+        assert report.restarts == 1
+        assert float(state["x"]) == 10
+        g = lockcheck.edges()
+        # run() beats the heartbeat under the supervisor lock: the
+        # documented nesting must be recorded, never its inversion
+        assert "Heartbeat" in g.get("Supervisor", set()), g
+        assert "Supervisor" not in g.get("Heartbeat", set()), g
+        # checkpoint publishes ride an audited leaf (no nesting, so no
+        # edge — but the lock class is instrumented)
+        from repro.ckpt import store as ckpt_store
+        assert isinstance(ckpt_store._publish_lock, lockcheck.SanitizedLock)
+        assert ckpt_store._publish_lock.lock_class == "CkptStore"
+        lockcheck.assert_acyclic()
+
     def test_straggler_policy(self):
         out = speculative_redispatch(
             durations={1: 10.0, 2: 0.5},

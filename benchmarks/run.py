@@ -16,6 +16,9 @@ Prints ``name,us_per_call,derived`` CSV (scaffold contract). Paper artifacts:
 * certifier — plan-certification cost vs plan size on tiered-offload plans
   (DESIGN.md §13), plus liveness-certification cost vs plan size and pool
   arbitration policy (DESIGN.md §14)
+* compiled_runtime — per-vertex dispatch overhead compiled vs interpreted
+  on a ≥500-vertex tiered-offload plan, seam-handoff pricing on a mixed
+  plan, fused-DMA ablation (DESIGN.md §15)
 * roofline — three-term model per dry-run cell (skipped when no artifacts)
 
 Figures run **isolated**: one broken benchmark emits a ``FAILED`` CSV row
@@ -23,16 +26,24 @@ and a traceback, the rest still run, and the process exits nonzero with a
 failure summary — CI sees a single figure regression without it hiding the
 others.
 
+Besides the CSV stream, the harness writes ``BENCH_8.json`` next to the
+working directory: one entry per figure with its machine-readable rows
+(benchmarks that return row dicts), its pass/fail status, and the error
+text on failure — the artifact CI jobs archive and diff across commits.
+
 ``QUICK=0`` env var runs the full sweeps; default is the quick profile so
 ``python -m benchmarks.run`` completes in a few minutes on one CPU core.
 """
 from __future__ import annotations
 
+import json
 import os
 import sys
 import traceback
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+BENCH_JSON = "BENCH_8.json"
 
 
 def _roofline() -> None:
@@ -47,9 +58,9 @@ def _roofline() -> None:
 
 def main() -> int:
     quick = os.environ.get("QUICK", "1") != "0"
-    from . import (certifier, fig10_prefill, fig11_lora, stall_ablation,
-                   threaded_runtime, memgraph_build, serving,
-                   shared_pool, tiered_offload)
+    from . import (certifier, compiled_runtime, fig10_prefill, fig11_lora,
+                   stall_ablation, threaded_runtime, memgraph_build,
+                   serving, shared_pool, tiered_offload)
     figures = [
         ("fig10_prefill", lambda: fig10_prefill.run(quick=quick)),
         ("fig11_lora", lambda: fig11_lora.run(quick=quick)),
@@ -60,13 +71,15 @@ def main() -> int:
         ("tiered_offload", lambda: tiered_offload.run(quick=quick)),
         ("shared_pool", lambda: shared_pool.run(quick=quick)),
         ("certifier", lambda: certifier.run(quick=quick)),
+        ("compiled_runtime", lambda: compiled_runtime.run(quick=quick)),
         ("roofline", _roofline),
     ]
     print("name,us_per_call,derived")
     failures: list[str] = []
+    report: dict[str, dict] = {}
     for name, fn in figures:
         try:
-            fn()
+            rows = fn()
         except KeyboardInterrupt:
             raise
         except BaseException as e:
@@ -76,6 +89,26 @@ def main() -> int:
             msg = " ".join(str(e).split()).replace(",", ";")[:160]
             print(f"{name},0.0,FAILED({type(e).__name__}: {msg})")
             failures.append(name)
+            report[name] = {"ok": False,
+                            "error": f"{type(e).__name__}: {msg}",
+                            "rows": []}
+        else:
+            # benchmarks that return machine-readable rows land in the
+            # JSON artifact verbatim; CSV-only figures record pass/fail
+            report[name] = {"ok": True,
+                            "rows": rows if isinstance(rows, list) else []}
+    report_doc = {
+        "quick": quick,
+        "n_figures": len(figures),
+        "n_failed": len(failures),
+        "ok": not failures,
+        "figures": report,
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(report_doc, f, indent=2, default=str)
+        f.write("\n")
+    print(f"# wrote {BENCH_JSON}: {len(figures) - len(failures)}/"
+          f"{len(figures)} figures ok", file=sys.stderr)
     if failures:
         print(f"# FAILURES: {len(failures)}/{len(figures)} figure(s) broke: "
               + ", ".join(failures), file=sys.stderr)

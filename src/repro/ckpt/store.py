@@ -17,6 +17,7 @@ from 256→512 chips (or CPU smoke) needs no conversion step.
 """
 from __future__ import annotations
 
+import concurrent.futures
 import hashlib
 import json
 import os
@@ -24,6 +25,7 @@ import pathlib
 import shutil
 import sys
 import tempfile
+import threading
 from typing import Any
 
 import jax
@@ -31,8 +33,8 @@ import numpy as np
 
 from ..core import lockcheck
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
-           "complete_steps"]
+__all__ = ["save_checkpoint", "save_checkpoint_async", "PendingCheckpoint",
+           "restore_checkpoint", "latest_step", "complete_steps"]
 
 DEFAULT_SHARD_BYTES = 64 * 2**20
 
@@ -42,6 +44,25 @@ DEFAULT_SHARD_BYTES = 64 * 2**20
 # prunes can race ``rmtree`` on the same directory. A SanitizedLock leaf,
 # so checkpoint writes join the suite-wide lock-order audit.
 _publish_lock = lockcheck.make_lock("CkptStore")
+
+# The checkpoint disk-tier stream (DESIGN.md §15 / ROADMAP item 5 tail):
+# one dedicated writer thread, mirroring the runtime's `disk` engine
+# class. Blocking saves pipeline shard writes through it (leaf gather of
+# shard i+1 overlaps the write of shard i); `save_checkpoint_async` runs
+# the *whole* save on it so the training step loop never blocks on disk.
+# Single-worker on purpose: shard writes of one checkpoint stay ordered,
+# and concurrent saves serialize instead of thrashing one spindle.
+_stream_lock = threading.Lock()
+_stream: concurrent.futures.ThreadPoolExecutor | None = None
+
+
+def _disk_stream() -> concurrent.futures.ThreadPoolExecutor:
+    global _stream
+    with _stream_lock:
+        if _stream is None:
+            _stream = concurrent.futures.ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="ckpt-disk")
+        return _stream
 
 
 def _write_shard(path: pathlib.Path, arrays: dict[str, np.ndarray]) -> None:
@@ -68,7 +89,8 @@ def save_checkpoint(directory: str | os.PathLike, step: int, tree: Any,
     d.mkdir(parents=True, exist_ok=True)
     tmp = pathlib.Path(tempfile.mkdtemp(dir=d, prefix=".tmp_"))
     try:
-        return _save_into(d, tmp, step, tree, meta, max_keep, shard_bytes)
+        return _save_into(d, tmp, step, tree, meta, max_keep, shard_bytes,
+                          pipelined=True)
     except BaseException:
         # a crash mid-shard-write must not leak the partial tmp dir: the
         # published tree holds only complete, digest-covered checkpoints
@@ -76,10 +98,73 @@ def save_checkpoint(directory: str | os.PathLike, step: int, tree: Any,
         raise
 
 
+class PendingCheckpoint:
+    """Handle to a checkpoint save running on the disk-tier stream."""
+
+    def __init__(self, future: concurrent.futures.Future) -> None:
+        self._future = future
+
+    def done(self) -> bool:
+        return self._future.done()
+
+    def result(self, timeout: float | None = None) -> pathlib.Path:
+        """Block until the save publishes; returns the checkpoint dir.
+        Re-raises any save failure (the tmp dir is already cleaned)."""
+        return self._future.result(timeout)
+
+
+def save_checkpoint_async(directory: str | os.PathLike, step: int, tree: Any,
+                          *, meta: dict | None = None,
+                          max_keep: int = 3,
+                          shard_bytes: int = DEFAULT_SHARD_BYTES,
+                          ) -> PendingCheckpoint:
+    """Non-blocking :func:`save_checkpoint`: the whole save (leaf gather,
+    shard writes, digests, atomic publish) runs on the disk-tier stream so
+    the training step loop overlaps checkpointing instead of stalling on
+    it. Sound because jax/numpy leaves are immutable snapshots — a step
+    that replaces the tree cannot mutate the one being written; the
+    publish + retention critical section still serializes against
+    concurrent blocking saves under ``_publish_lock``.
+
+    The save runs inline on the stream worker (not re-submitted shard by
+    shard): the stream is single-worker, so a save that queued its own
+    shard writes behind itself would deadlock."""
+    d = pathlib.Path(directory)
+    d.mkdir(parents=True, exist_ok=True)
+    tmp = pathlib.Path(tempfile.mkdtemp(dir=d, prefix=".tmp_"))
+
+    def _job() -> pathlib.Path:
+        try:
+            return _save_into(d, tmp, step, tree, meta, max_keep,
+                              shard_bytes, pipelined=False)
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+
+    return PendingCheckpoint(_disk_stream().submit(_job))
+
+
 def _save_into(d: pathlib.Path, tmp: pathlib.Path, step: int, tree: Any,
-               meta: dict | None, max_keep: int,
-               shard_bytes: int) -> pathlib.Path:
+               meta: dict | None, max_keep: int, shard_bytes: int, *,
+               pipelined: bool) -> pathlib.Path:
     leaves = _leaf_paths(tree)
+
+    # ``pipelined``: shard writes ride the disk-tier stream as each shard
+    # closes, so the device→host gather of shard i+1 overlaps the write
+    # of shard i. The async path passes False — it already *is* the
+    # stream worker, and the stream is single-worker.
+    futures: list[concurrent.futures.Future] = []
+
+    def _flush(group: list[tuple[str, str, np.ndarray]], si: int) -> None:
+        path = tmp / f"shard_{si}.npz"
+        arrays = {idx: arr for idx, _key, arr in group}
+        if pipelined:
+            # late-bind _write_shard so test fault injection (monkeypatch
+            # of the module global) reaches stream-side writes too
+            futures.append(_disk_stream().submit(
+                lambda: _write_shard(path, arrays)))
+        else:
+            _write_shard(path, arrays)
 
     # greedy size-threshold packing: a shard closes once adding the next
     # leaf would push it past shard_bytes (oversized single leaves get a
@@ -91,18 +176,36 @@ def _save_into(d: pathlib.Path, tmp: pathlib.Path, step: int, tree: Any,
         arr = np.asarray(leaf)
         if cur and cur_bytes + arr.nbytes > shard_bytes:
             shards.append(cur)
+            _flush(cur, len(shards) - 1)
             cur, cur_bytes = [], 0
         cur.append((f"a{i}", key, arr))
         cur_bytes += arr.nbytes
     if cur:
         shards.append(cur)
+        _flush(cur, len(shards) - 1)
+
+    # drain the stream before digesting: every write must land first, and
+    # on failure the rest are cancelled (best effort — one may already be
+    # running) then waited out, so no late write races the caller's
+    # tmp-dir cleanup
+    errors: list[BaseException] = []
+    for f in futures:
+        if errors and f.cancel():
+            continue
+        try:
+            f.result()
+        except concurrent.futures.CancelledError:
+            pass
+        except BaseException as e:
+            errors.append(e)
+    if errors:
+        raise errors[0]
 
     files: dict[str, str] = {}
     manifest_leaves: list[dict] = []     # shard packing preserves leaf order
     for si, group in enumerate(shards):
         fname = f"shard_{si}.npz"
         path = tmp / fname
-        _write_shard(path, {idx: arr for idx, _key, arr in group})
         files[fname] = hashlib.sha256(path.read_bytes()).hexdigest()
         for idx, key, arr in group:
             # reuse the already-materialized array: a second np.asarray

@@ -8,6 +8,7 @@ from .liveness import (LeaseSpec, LivenessCertificate, LivenessModelError,
                        PoolConfig, ProgressCertificationError, StreamConfig,
                        certify_progress, default_pool_config)
 from .build import BuildConfig, BuildResult, MemgraphOOM, build_memgraph
+from .compile import CompiledPlan, PlanCompileError, lower
 from .dispatch import DispatchPolicy, POLICY_NAMES, get_policy
 from .stores import DiskStore, HostStore, TieredStore
 from .pool import (ARBITRATION_POLICY_NAMES, ArbitrationPolicy, HostPool,
@@ -21,6 +22,7 @@ __all__ = [
     "ProgressCertificationError", "StreamConfig", "certify_progress",
     "default_pool_config",
     "BuildConfig", "BuildResult", "MemgraphOOM", "build_memgraph",
+    "CompiledPlan", "PlanCompileError", "lower",
     "DispatchPolicy", "POLICY_NAMES", "get_policy",
     "DiskStore", "HostStore", "TieredStore",
     "ARBITRATION_POLICY_NAMES", "ArbitrationPolicy", "HostPool",

@@ -133,6 +133,14 @@ class BuildConfig:
     # directed scheduler (runtime.replay_stall) can replay to a real
     # bounded-timeout stall.
     certify_liveness: bool = False
+    # executor backend the runtime should use for this plan (DESIGN.md
+    # §15). "interpreted" — the threaded event-driven scheduler for
+    # every vertex (the paper's runtime). "compiled" — lower the plan to
+    # a CompiledPlan (core/compile.py): certified-static regions run
+    # straight-line with pre-resolved streams and fused DMA batches;
+    # regions whose order legitimately depends on runtime transfer
+    # completion fall back to the interpreter at marked seam vertices.
+    backend: str = "interpreted"
 
     def size_of(self, v: TaskVertex) -> int:
         return (self.size_fn or (lambda u: u.out.nbytes))(v)
@@ -187,6 +195,10 @@ class BuildResult:
     certificate: Certificate | None = None
     # liveness certificate (BuildConfig.certify_liveness; DESIGN.md §14)
     liveness_certificate: LivenessCertificate | None = None
+    # executor backend requested by BuildConfig.backend (DESIGN.md §15);
+    # TurnipRuntime.run() consults this to pick the compiled lowering
+    # path over vertex-by-vertex interpretation
+    backend: str = "interpreted"
 
     def final_value_location(self, tid: int) -> tuple[str, int]:
         """Where the runtime finds a terminal output: ('host', mid-or-tid) or
@@ -211,6 +223,9 @@ def build_memgraph(
     walks it backward to pick each reload's earliest feasible start; pass 2
     re-runs the simulation emitting the hoisted (``prefetch=True``) LOADs
     at those points. A plan with nothing to hoist returns pass 1 as-is."""
+    if config.backend not in ("interpreted", "compiled"):
+        raise ValueError(f"unknown executor backend {config.backend!r}; "
+                         f"expected 'interpreted' or 'compiled'")
     builder = _Builder(tg, config, order)
     res = builder.run()
     if (config.host_budget() is not None and config.prefetch_distance > 0
@@ -244,6 +259,7 @@ def build_memgraph(
             disk_capacity=config.disk_capacity)
         if not res.liveness_certificate.ok:
             raise ProgressCertificationError(res.liveness_certificate)
+    res.backend = config.backend
     return res
 
 

@@ -36,7 +36,7 @@ from .memgraph import MemGraph, MemOp, MemVertex
 
 __all__ = [
     "COMPUTE", "H2D", "D2H", "D2D", "DISK", "ENGINE_KINDS", "TRANSFER_KINDS",
-    "ENGINE_OF", "engine_of", "DispatchPolicy", "RandomPolicy",
+    "ENGINE_OF", "engine_of", "engine_key", "DispatchPolicy", "RandomPolicy",
     "FixedPolicy", "CriticalPathPolicy", "TransferFirstPolicy",
     "POLICY_NAMES", "get_policy",
 ]
@@ -66,6 +66,14 @@ ENGINE_OF = {
 def engine_of(v: MemVertex) -> str:
     """The engine class (compute or DMA direction) that executes ``v``."""
     return ENGINE_OF[v.op]
+
+
+def engine_key(v: MemVertex) -> tuple[int, str]:
+    """The (device, engine class) pair ``v`` is dispatched on — the unit
+    of stream assignment shared by the simulator's engine model, the
+    threaded runtime's ready heaps, and the compiled backend's
+    fused-DMA adjacency rule (core/compile.py)."""
+    return (v.device, ENGINE_OF[v.op])
 
 
 # -- cost model for priority computation ------------------------------------

@@ -44,7 +44,7 @@ import numpy as np
 
 from . import liveness as _lv
 from .build import BuildResult
-from .dispatch import (COMPUTE, DispatchPolicy, ENGINE_KINDS, TRANSFER_KINDS,
+from .dispatch import (COMPUTE, DispatchPolicy, TRANSFER_KINDS,
                        engine_of, get_policy)
 from .memgraph import Loc, MemGraph, MemOp, MemVertex, RaceError
 from .ops import get_op
@@ -289,6 +289,13 @@ class RunResult:
     disk_spill_bytes: int = 0            # host→disk tier traffic
     disk_load_bytes: int = 0             # disk→host tier traffic
     peak_host_bytes: int = 0             # host-tier occupancy high-water mark
+    # compiled-backend counters (DESIGN.md §15): vertices executed by the
+    # straight-line compiled program vs handed to the interpreter at
+    # nondet-region seams, and fused DMA submissions issued. All zero
+    # under the interpreted backend except n_interpreted = |V|.
+    n_compiled: int = 0
+    n_interpreted: int = 0
+    fused_dma_batches: int = 0
 
 
 class _Engine:
@@ -306,6 +313,201 @@ class _Engine:
         self.kind = kind
         self.heap: list[tuple[float, int, int]] = []   # (priority, seq, mid)
         self.cond = threading.Condition(lock)
+
+
+class _Fleet:
+    """A persistent pool of engine-stream worker threads executing
+    dependency-complete vertices of one :class:`TurnipRuntime` run.
+
+    Thread start-up is paid ONCE per run: the interpreted backend submits
+    the whole graph as a single job; the compiled backend submits one job
+    per nondet region (seam handoff), so dozens of small seams share one
+    fleet instead of each spinning threads up and back down.
+
+    ``members`` is every vertex the fleet may ever be asked to run — it
+    sizes the engines (only (device, engine-class) pairs actually present
+    get streams) and the ADD_INTO lock-group locks. A job is a subset of
+    ``members``; predecessors outside the job are treated as already
+    complete, which is sound for the compiled backend because the
+    linearization is topological (cross-region deps point backward).
+    """
+
+    def __init__(self, rt: "TurnipRuntime", mem, host, timeline, spans,
+                 t0: float, members: list[int]) -> None:
+        self.rt = rt
+        self.mem = mem
+        self.host = host
+        self.timeline = timeline
+        self.spans = spans
+        self.t0 = t0
+        self.mg = rt.mg
+        self.verts = rt.mg.vertices
+        verts = self.verts
+        self.locks: dict[tuple[int, int], threading.Lock] = {}
+        for m in members:
+            v = verts[m]
+            if v.lock_group is not None:
+                self.locks.setdefault(v.lock_group, threading.Lock())
+
+        # ---- scheduler state (all guarded by `lock`) ------------------
+        self.lock = threading.Lock()
+        per_key: dict[tuple[int, str], int] = {}
+        for m in members:
+            key = (verts[m].device, engine_of(verts[m]))
+            per_key[key] = per_key.get(key, 0) + 1
+        self.engines = {key: _Engine(key[0], key[1], self.lock)
+                        for key in sorted(per_key)}
+        self.main_cond = threading.Condition(self.lock)
+        self.fixed_cond = threading.Condition(self.lock)
+        # per-job state
+        self.remaining: dict[int, int] = {}
+        self.ready_fixed: dict[int, int] = {}      # seq -> mid
+        self.seq_order: list[int] = []
+        self.next_i = 0
+        self.n_done = 0
+        self.total = 0
+        self.errors: list[BaseException] = []
+        self.shutdown = False
+
+        self.threads: list[threading.Thread] = []
+        for (d, k), eng in self.engines.items():
+            width = rt.n_streams if k == COMPUTE else rt.n_transfer_streams
+            width = max(1, min(width, per_key[(d, k)]))
+            for i in range(width):
+                if rt.mode == "fixed":
+                    th = threading.Thread(target=self._worker_fixed,
+                                          args=(d, k),
+                                          name=f"turnip-{k}{d}.{i}")
+                else:
+                    th = threading.Thread(target=self._worker_nondet,
+                                          args=(eng,),
+                                          name=f"turnip-{k}{d}.{i}")
+                self.threads.append(th)
+        self.started: list[threading.Thread] = []
+
+    def start(self) -> None:
+        """Start every stream. On a mid-fleet OS refusal the caller's
+        ``close()`` (in its finally) drains the partial fleet."""
+        for th in self.threads:
+            th.start()
+            self.started.append(th)
+
+    def close(self) -> None:
+        """Deterministic drain — success, worker error, thread-start
+        failure, or KeyboardInterrupt alike: every started stream
+        observes ``shutdown`` and exits; no timeout, no leaked threads."""
+        with self.lock:
+            self.shutdown = True
+            for eng in self.engines.values():
+                eng.cond.notify_all()
+            self.fixed_cond.notify_all()
+            self.main_cond.notify_all()
+        for th in self.started:
+            th.join()
+
+    def run_subset(self, mids: list[int]) -> None:
+        """Execute one job: every vertex of ``mids``, any legal order.
+        Blocks until the job completes; raises the first worker error."""
+        mg = self.mg
+        with self.lock:
+            if self.errors:
+                raise self.errors[0]
+            subset = set(mids)
+            self.remaining = {m: sum(1 for p in mg.preds[m] if p in subset)
+                              for m in mids}
+            self.n_done = 0
+            self.total = len(mids)
+            if self.rt.mode == "fixed":
+                # strict issue order over the member seqs (sparse for
+                # compiled-backend seam jobs)
+                self.seq_order = sorted(self.verts[m].seq for m in mids)
+                self.next_i = 0
+            for m, r in list(self.remaining.items()):
+                if r == 0:
+                    self._make_ready(m)
+            while self.n_done < self.total and not self.errors:
+                self.main_cond.wait()
+            if self.errors:
+                raise self.errors[0]
+
+    # ---- internals ----------------------------------------------------
+    def _make_ready(self, m: int) -> None:
+        """Lock held. Publish a dep-complete vertex to its engine."""
+        v = self.verts[m]
+        if self.rt.mode == "fixed":
+            self.ready_fixed[v.seq] = m
+            self.fixed_cond.notify_all()
+        else:
+            eng = self.engines[(v.device, engine_of(v))]
+            heapq.heappush(eng.heap,
+                           (self.rt.policy.priority(m), v.seq, m))
+            eng.cond.notify()
+
+    def _worker_nondet(self, eng: _Engine) -> None:
+        while True:
+            with self.lock:
+                while not eng.heap and not self.shutdown:
+                    eng.cond.wait()
+                if self.shutdown:
+                    return
+                _, _, m = heapq.heappop(eng.heap)
+            self._run_vertex(m)
+
+    def _worker_fixed(self, dev: int, kind: str) -> None:
+        while True:
+            with self.lock:
+                while True:
+                    if self.shutdown:
+                        return
+                    m = (self.ready_fixed.get(self.seq_order[self.next_i])
+                         if self.next_i < len(self.seq_order) else None)
+                    if (m is not None and self.verts[m].device == dev
+                            and engine_of(self.verts[m]) == kind):
+                        break
+                    self.fixed_cond.wait()
+                del self.ready_fixed[self.seq_order[self.next_i]]
+                self.next_i += 1
+                # the new head may belong to any engine: wake everyone
+                self.fixed_cond.notify_all()
+            self._run_vertex(m)
+
+    def _run_vertex(self, m: int) -> None:
+        rt = self.rt
+        v = self.verts[m]
+        t_start = time.perf_counter() - self.t0
+        try:
+            if rt.latency is not None:
+                d = rt.latency(v)
+                if d > 0:
+                    time.sleep(d)
+            lk = (self.locks.get(v.lock_group)
+                  if v.lock_group is not None else None)
+            if lk is not None and v.op == MemOp.ADD_INTO:
+                with lk:   # §B: write-protected sum-into
+                    _exec_vertex(v, self.mg, rt.tg, self.mem, self.host)
+            else:
+                _exec_vertex(v, self.mg, rt.tg, self.mem, self.host)
+        except BaseException as e:     # surface in run_subset's caller
+            with self.lock:
+                self.errors.append(e)
+                for eng in self.engines.values():  # nothing more launches
+                    eng.heap.clear()
+                self.ready_fixed.clear()
+                self.main_cond.notify_all()
+            return
+        t_end = time.perf_counter() - self.t0
+        self.timeline.append((t_start, t_end, v.device, engine_of(v),
+                              v.name or str(m)))
+        self.spans[m] = (t_start, t_end)
+        with self.lock:
+            self.n_done += 1
+            for s in self.mg.succs[m]:
+                if s in self.remaining:
+                    self.remaining[s] -= 1
+                    if self.remaining[s] == 0:
+                        self._make_ready(s)
+            if self.n_done == self.total:
+                self.main_cond.notify_all()
 
 
 class TurnipRuntime:
@@ -346,7 +548,8 @@ class TurnipRuntime:
                  capacities: dict[int, int] | None = None,
                  store_factory: Callable[[dict], HostStore] | None = None,
                  host_lease=None,
-                 seed: int | None = None) -> None:
+                 seed: int | None = None,
+                 exec_backend: str | None = None) -> None:
         if mode not in ("nondet", "fixed"):
             raise ValueError(mode)
         if host_lease is not None and store_factory is not None:
@@ -361,6 +564,17 @@ class TurnipRuntime:
         self.backend = backend
         self.capacities = capacities
         self.store_factory = store_factory
+        # executor backend (DESIGN.md §15): defaults to the plan's
+        # BuildConfig.backend; `exec_backend` overrides per runtime (the
+        # benchmarks compare both backends over one BuildResult). Note
+        # `backend` above is the *memory* backend (slots|bytes) — a
+        # distinct axis.
+        self.exec_backend = (exec_backend if exec_backend is not None
+                             else getattr(res, "backend", "interpreted"))
+        if self.exec_backend not in ("interpreted", "compiled"):
+            raise ValueError(f"unknown executor backend "
+                             f"{self.exec_backend!r}")
+        self._compiled = None          # lazily lowered CompiledPlan cache
         # shared-pool mode (DESIGN.md §12): the runtime-owned store joins
         # an arbitrated HostPool under this lease — occupancy is mirrored
         # so serving pressure and MEMGRAPH offload traffic meet one budget
@@ -393,6 +607,8 @@ class TurnipRuntime:
                 and isinstance(host, TieredStore)):
             host.certified_live = True
         try:
+            if self.exec_backend == "compiled":
+                return self._run_compiled(inputs, mem, host)
             return self._run(inputs, mem, host)
         finally:
             # every exit path (success, worker error, collection RaceError,
@@ -401,172 +617,131 @@ class TurnipRuntime:
                 host.close()
 
     def _run(self, inputs: dict[int, np.ndarray], mem, host) -> RunResult:
-        mg = self.mg
-        pol = self.policy
-        pol.prepare(mg)
-
-        verts = mg.vertices
-        total = len(verts)
-        devices = sorted({v.device for v in verts.values()})
-        locks: dict[tuple[int, int], threading.Lock] = {}
-        for v in verts.values():
-            if v.lock_group is not None:
-                locks.setdefault(v.lock_group, threading.Lock())
-
-        # ---- scheduler state (all guarded by `lock`) --------------------
-        lock = threading.Lock()
-        engines = {(d, k): _Engine(d, k, lock)
-                   for d in devices for k in ENGINE_KINDS}
-        remaining = {m: len(mg.preds[m]) for m in verts}
-        n_done = 0
-        stop = False                       # success or error: workers exit
-        errors: list[BaseException] = []
-        main_cond = threading.Condition(lock)
-        # fixed mode: strict issue order. `ready_fixed` holds dep-complete
-        # vertices keyed by seq; only the head (`next_seq`) may issue.
-        fixed_cond = threading.Condition(lock)
-        ready_fixed: dict[int, int] = {}
-        next_seq = 0
-
+        """Interpreted backend: the whole graph as one fleet job."""
+        self.policy.prepare(self.mg)
         timeline: list[tuple[float, float, int, str, str]] = []
         spans: dict[int, tuple[float, float]] = {}
         t0 = time.perf_counter()
-
-        def make_ready(m: int) -> None:
-            """Lock held. Publish a dep-complete vertex to its engine."""
-            v = verts[m]
-            if self.mode == "fixed":
-                ready_fixed[v.seq] = m
-                fixed_cond.notify_all()
-            else:
-                eng = engines[(v.device, engine_of(v))]
-                heapq.heappush(eng.heap, (pol.priority(m), v.seq, m))
-                eng.cond.notify()
-
-        def wake_all() -> None:
-            """Lock held. Wake every sleeper so it can observe `stop`."""
-            for eng in engines.values():
-                eng.cond.notify_all()
-            fixed_cond.notify_all()
-            main_cond.notify_all()
-
-        def on_complete(m: int) -> None:
-            nonlocal n_done, stop
-            with lock:
-                n_done += 1
-                for s in mg.succs[m]:
-                    remaining[s] -= 1
-                    if remaining[s] == 0:
-                        make_ready(s)
-                if n_done == total:
-                    stop = True
-                    wake_all()
-
-        def run_vertex(m: int) -> bool:
-            nonlocal stop
-            v = verts[m]
-            t_start = time.perf_counter() - t0
-            try:
-                if self.latency is not None:
-                    d = self.latency(v)
-                    if d > 0:
-                        time.sleep(d)
-                lk = locks.get(v.lock_group) if v.lock_group else None
-                if lk is not None and v.op == MemOp.ADD_INTO:
-                    with lk:   # §B: write-protected sum-into
-                        _exec_vertex(v, mg, self.tg, mem, host)
-                else:
-                    _exec_vertex(v, mg, self.tg, mem, host)
-            except BaseException as e:     # surface in the caller
-                with lock:
-                    errors.append(e)
-                    stop = True
-                    wake_all()
-                return False
-            t_end = time.perf_counter() - t0
-            timeline.append((t_start, t_end, v.device, engine_of(v),
-                             v.name or str(m)))
-            spans[m] = (t_start, t_end)
-            on_complete(m)
-            return True
-
-        def worker_nondet(eng: _Engine) -> None:
-            while True:
-                with lock:
-                    while not stop and not eng.heap:
-                        eng.cond.wait()
-                    if stop:
-                        return
-                    _, _, m = heapq.heappop(eng.heap)
-                if not run_vertex(m):
-                    return
-
-        def worker_fixed(dev: int, kind: str) -> None:
-            nonlocal next_seq
-            while True:
-                with lock:
-                    while True:
-                        if stop:
-                            return
-                        m = ready_fixed.get(next_seq)
-                        if (m is not None and verts[m].device == dev
-                                and engine_of(verts[m]) == kind):
-                            break
-                        fixed_cond.wait()
-                    del ready_fixed[next_seq]
-                    next_seq += 1
-                    # the new head may belong to any engine: wake everyone.
-                    fixed_cond.notify_all()
-                if not run_vertex(m):
-                    return
-
-        threads: list[threading.Thread] = []
-        for (d, k), eng in engines.items():
-            n = self.n_streams if k == COMPUTE else self.n_transfer_streams
-            for i in range(n):
-                if self.mode == "fixed":
-                    th = threading.Thread(target=worker_fixed, args=(d, k),
-                                          name=f"turnip-{k}{d}.{i}")
-                else:
-                    th = threading.Thread(target=worker_nondet, args=(eng,),
-                                          name=f"turnip-{k}{d}.{i}")
-                threads.append(th)
-
-        with lock:
-            if total == 0:
-                stop = True
-            for m, r in remaining.items():
-                if r == 0:
-                    make_ready(m)
-        started: list[threading.Thread] = []
+        members = list(self.mg.vertices)
+        fleet = _Fleet(self, mem, host, timeline, spans, t0, members)
         try:
-            # thread start-up lives inside the drain discipline: if the OS
-            # refuses a later stream (disk engines are created last per
-            # device), the already-running compute/DMA streams must still
-            # observe `stop` and join — a partial fleet parked on its
-            # condition variables would hang the process at exit.
-            for th in threads:
-                th.start()
-                started.append(th)
-            with lock:
-                while not stop:
-                    main_cond.wait()
+            fleet.start()
+            if members:
+                fleet.run_subset(members)
+        except RaceError as e:
+            _certified_reraise(self.res, e)
         finally:
-            # deterministic drain — on success, worker error, thread-start
-            # failure, or KeyboardInterrupt alike: every started stream
-            # (compute, DMA, and disk) observes `stop` and exits; no
-            # timeout, no leaked threads.
-            with lock:
-                stop = True
-                wake_all()
-            for th in started:
-                th.join()
-        if errors:
-            if isinstance(errors[0], RaceError):
-                _certified_reraise(self.res, errors[0])
-            raise errors[0]
+            fleet.close()
+        return self._finish(mem, host, timeline, spans, t0,
+                            n_interpreted=len(members))
 
+    def _run_compiled(self, inputs: dict[int, np.ndarray], mem,
+                      host) -> RunResult:
+        """Compiled backend (DESIGN.md §15): straight-line execution of
+        certified-static regions — no heap, no locks, no condition
+        variables; the precomputed tick counts proved position order is
+        dependency order — handing off to a persistent interpreter fleet
+        at nondet-region seams. Both executors share ``mem`` and
+        ``host``, so ByteArena extents, TieredStore tier moves, and
+        HostPool lease accounting are exactly the invariants the
+        certifiers assumed."""
+        from .compile import NONDET, lower
+
+        mg = self.mg
+        pol = self.policy
+        prepared = False
+        if self._compiled is None:
+            pol.prepare(mg)
+            prepared = True
+            self._compiled = lower(
+                self.res, policy=pol, n_streams=self.n_streams,
+                n_transfer_streams=self.n_transfer_streams)
+        plan = self._compiled
+        timeline: list[tuple[float, float, int, str, str]] = []
+        spans: dict[int, tuple[float, float]] = {}
+        t0 = time.perf_counter()
+        n_compiled = n_interpreted = n_fused = 0
+        heads = plan.batch_heads
+        # one fleet serves every seam: sized to the union of nondet
+        # regions, threads started once (None when the plan is all-static)
+        seam_members = [m for r in plan.regions if r.kind == NONDET
+                        for m in plan.order[r.start:r.end]]
+        fleet = None
+        if seam_members:
+            if not prepared:
+                # dispatch state (priorities, RNG draw) is only consumed
+                # by the seam fleet — an all-static plan skips it entirely
+                pol.prepare(mg)
+            fleet = _Fleet(self, mem, host, timeline, spans, t0,
+                           seam_members)
+        try:
+            if fleet is not None:
+                fleet.start()
+            for region in plan.regions:
+                if region.kind == NONDET:
+                    # seam handoff: the interpreter fleet gets the
+                    # region's vertex subset with full dispatch freedom.
+                    # The linearization is topological, so every
+                    # cross-region dependency points backward — already
+                    # executed.
+                    fleet.run_subset(plan.order[region.start:region.end])
+                    n_interpreted += len(region)
+                    continue
+                i = region.start
+                while i < region.end:
+                    span = heads.get(i)
+                    if span is not None:
+                        # one fused submission: the run issues together,
+                        # members execute back-to-back on their stream,
+                        # one completion wait for the whole batch
+                        for j in range(span[0], span[1]):
+                            self._exec_compiled(plan, j, mem, host,
+                                                timeline, spans, t0)
+                        n_fused += 1
+                        i = span[1]
+                    else:
+                        self._exec_compiled(plan, i, mem, host,
+                                            timeline, spans, t0)
+                        i += 1
+                n_compiled += len(region)
+        except RaceError as e:
+            _certified_reraise(self.res, e)
+        finally:
+            if fleet is not None:
+                fleet.close()
+        return self._finish(mem, host, timeline, spans, t0,
+                            n_compiled=n_compiled,
+                            n_interpreted=n_interpreted,
+                            fused_dma_batches=n_fused)
+
+    def _exec_compiled(self, plan, i: int, mem, host, timeline, spans,
+                      t0: float) -> None:
+        """One straight-line instruction. Regions execute strictly one
+        after another on the calling thread, so no lock-group lock is
+        taken here: position order is execution order (``plan.verify``
+        proved ``ready_tick <= pos`` for every instruction at lowering
+        time — the assert is the entire per-vertex dispatch)."""
+        ins = plan.instrs[i]
+        assert ins.ready_tick <= i, "compiled plan not topological"
+        v = self.mg.vertices[ins.mid]
+        t_start = time.perf_counter() - t0
+        if self.latency is not None:
+            d = self.latency(v)
+            if d > 0:
+                time.sleep(d)
+        _exec_vertex(v, self.mg, self.tg, mem, host)
+        t_end = time.perf_counter() - t0
+        timeline.append((t_start, t_end, v.device, ins.engine,
+                         v.name or str(ins.mid)))
+        spans[ins.mid] = (t_start, t_end)
+
+    def _finish(self, mem, host, timeline, spans, t0: float, *,
+                n_compiled: int = 0, n_interpreted: int = 0,
+                fused_dma_batches: int = 0) -> RunResult:
+        """Fold a finished execution's timeline into a RunResult (shared
+        by both backends)."""
         makespan = time.perf_counter() - t0
+        devices = sorted({v.device for v in self.mg.vertices.values()})
         busy = {d: 0.0 for d in devices}
         chan = {k: 0.0 for k in TRANSFER_KINDS}
         by_dev: dict[int, list[tuple[float, float]]] = {d: [] for d in devices}
@@ -597,6 +772,8 @@ class TurnipRuntime:
             disk_spill_bytes=disk.write_bytes if disk else 0,
             disk_load_bytes=disk.read_bytes if disk else 0,
             peak_host_bytes=host.peak_resident_bytes,
+            n_compiled=n_compiled, n_interpreted=n_interpreted,
+            fused_dma_batches=fused_dma_batches,
         )
 
 

@@ -73,7 +73,14 @@ class HardwareModel:
     revoke_stall: float = 500e-6
     seed: int = 0
 
-    def duration(self, v: MemVertex) -> float:
+    def duration(self, v: MemVertex, *, fused: bool = False) -> float:
+        """Execution seconds of ``v``. ``fused=True`` prices a non-head
+        member of a fused DMA batch (core/compile.py): the submission
+        rides its batch head's enqueue, so the fixed per-transfer latency
+        term (``dma_latency``/``disk_latency``) is dropped and only the
+        wire time remains — one launch cost per batch, paid by the head.
+        Jitter stays per-vertex so fused-vs-unfused comparisons are
+        common-random-numbers paired."""
         eng = _ENGINE_OF[v.op]
         if v.op == MemOp.JOIN:
             return 0.0
@@ -88,11 +95,12 @@ class HardwareModel:
             # same paired per-vertex jitter draw as the DMA lanes, so
             # fixed-vs-nondet comparisons stay common-random-numbers even
             # when the nondeterminism source is the disk tier
-            base = self.disk_latency + v.nbytes / self.disk_bw
+            base = (0.0 if fused else self.disk_latency) \
+                + v.nbytes / self.disk_bw
             base += self._revoked(v.mid) * self.revoke_stall
             return base * self._jit(v.mid, self.transfer_jitter)
         bw = {_H2D: self.h2d_bw, _D2H: self.d2h_bw, _D2D: self.d2d_bw}[eng]
-        base = self.dma_latency + v.nbytes / bw
+        base = (0.0 if fused else self.dma_latency) + v.nbytes / bw
         return base * self._jit(v.mid, self.transfer_jitter)
 
     def _jit(self, mid: int, sigma: float) -> float:
@@ -137,13 +145,20 @@ class SimResult:
 def simulate(mg: MemGraph, hw: HardwareModel | None = None, *,
              mode: str = "nondet",
              policy: str | DispatchPolicy | None = "fixed",
-             record_timeline: bool = False) -> SimResult:
+             record_timeline: bool = False,
+             fused: dict[int, int] | None = None) -> SimResult:
     """Simulate one execution of ``mg`` under ``hw``; see module docstring.
 
     ``policy`` ranks the ready vertices queued on each engine in ``nondet``
     mode (default ``fixed`` = compile-order tie-break, the conservative
     baseline); it is ignored in ``fixed`` mode, which bypasses the ready
     queues entirely.
+
+    ``fused`` prices the compiled backend's batched DMA submissions
+    (DESIGN.md §15): a ``CompiledPlan.fused_map`` (member mid → batch-head
+    mid). Non-head members ride the head's enqueue, so they skip the
+    fixed per-transfer latency term; dependency structure is unchanged —
+    fusion is a submission-cost optimisation, not a reordering.
     """
     hw = hw or HardwareModel()
     if mode not in ("nondet", "fixed"):
@@ -180,7 +195,8 @@ def simulate(mg: MemGraph, hw: HardwareModel | None = None, *,
         e = engine_of(m)
         v = verts[m]
         t0 = max(now, free_at[e])
-        dur = hw.duration(v)
+        dur = hw.duration(v, fused=fused is not None
+                          and fused.get(m, m) != m)
         t1 = t0 + dur
         free_at[e] = t1
         start_at[m] = t0

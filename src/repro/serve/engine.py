@@ -129,6 +129,13 @@ class ServeConfig:
     h2d_bw: float = 12e9
     d2h_bw: float = 12e9
     dma_latency: float = 10e-6
+    # fused DMA submissions (DESIGN.md §15, serving face): a stream that
+    # wakes with several transfers pending issues them as one batched
+    # submission — one enqueue + one fixed-latency completion wait for the
+    # whole run instead of per transfer. Timing-only: tokens are
+    # byte-identical either way (service order = pop order).
+    fuse_dma: bool = False
+    max_fuse_dma: int = 8
     seed: int = 0
 
 
@@ -168,6 +175,8 @@ class ServeStats:
     disk_load_bytes: int = 0          # disk→host tier traffic
     prefetch_bytes: int = 0           # disk→host bytes staged *ahead* of a
     #                                   resume (subset of disk_load_bytes)
+    fused_dma_batches: int = 0        # multi-transfer submissions issued
+    #                                   (ServeConfig.fuse_dma)
     kv_bytes_written: int = 0
 
     @property
@@ -298,7 +307,9 @@ class _DmaStream(threading.Thread):
     callback (a short memcpy / completion event under the lock)."""
 
     def __init__(self, kind: str, bw: float, latency: float,
-                 policy: ReloadPolicy, service, lock: threading.Lock) -> None:
+                 policy: ReloadPolicy, service, lock: threading.Lock, *,
+                 fuse: bool = False, max_fuse: int = 8,
+                 on_batch=None) -> None:
         super().__init__(name=f"serve-dma-{kind}")
         self.kind = kind
         self.bw = bw
@@ -309,6 +320,14 @@ class _DmaStream(threading.Thread):
         self.cond = threading.Condition(lock)
         self.stopped = False
         self.error: BaseException | None = None
+        # fused submissions (ServeConfig.fuse_dma): drain up to max_fuse
+        # pending transfers per wake-up into one batched submission — one
+        # enqueue + one fixed-latency completion wait for the run. Wire
+        # time still charges every byte; service order = pop order, so
+        # token streams are byte-identical with fusion on or off.
+        self.fuse = fuse
+        self.max_fuse = max_fuse
+        self.on_batch = on_batch      # called (lock held) per fused batch
 
     def submit(self, tr: _Transfer) -> None:
         """Engine lock held."""
@@ -329,10 +348,18 @@ class _DmaStream(threading.Thread):
                         self.cond.wait()
                     if self.stopped:
                         return
-                    tr = self.policy.pick(self.pending)
-                wire = self.latency + tr.nbytes / self.bw
+                    batch = [self.policy.pick(self.pending)]
+                    while (self.fuse and self.pending
+                           and len(batch) < self.max_fuse):
+                        batch.append(self.policy.pick(self.pending))
+                    if len(batch) > 1 and self.on_batch is not None:
+                        self.on_batch(len(batch))
+                # one submission for the run: a single fixed launch
+                # latency plus every member's wire bytes
+                wire = self.latency + sum(t.nbytes for t in batch) / self.bw
                 time.sleep(wire)
-                self.service(tr)
+                for tr in batch:
+                    self.service(tr)
         except BaseException as e:       # surface in the engine loop — a
             with self.cond:              # silently dead stream would wedge
                 self.error = e           # every waiter forever
@@ -640,16 +667,22 @@ class Engine:
         cfg = self.cfg
         pol = get_reload_policy(cfg.reload_policy, seed=self._seed)
         pol.prepare(self)
+        def _on_batch(n: int) -> None:      # lock held (stream cond)
+            self.stats.fused_dma_batches += 1
+
+        fuse_kw = dict(fuse=cfg.fuse_dma, max_fuse=cfg.max_fuse_dma,
+                       on_batch=_on_batch)
         self._d2h = _DmaStream(D2H, cfg.d2h_bw, cfg.dma_latency, pol,
-                               self._service_d2h, self._lock)
+                               self._service_d2h, self._lock, **fuse_kw)
         self._h2d = _DmaStream(H2D, cfg.h2d_bw, cfg.dma_latency, pol,
-                               self._service_h2d, self._lock)
+                               self._service_h2d, self._lock, **fuse_kw)
         streams = [self._d2h, self._h2d]
         if self._tiered:
             # the disk tier's own engine class: spills/loads never occupy
             # (or wait behind) the h2d/d2h DMA lanes
             self._disk = _DmaStream(DISK, cfg.disk_bw, cfg.dma_latency, pol,
-                                    self._service_disk, self._lock)
+                                    self._service_disk, self._lock,
+                                    **fuse_kw)
             streams.append(self._disk)
         for stream in streams:
             stream.start()

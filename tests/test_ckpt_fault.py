@@ -3,12 +3,14 @@ per-file digests, and restore falling back to the newest *complete* step
 when the latest checkpoint is corrupt or truncated."""
 import json
 import pathlib
+import time
 
 import numpy as np
 import pytest
 
 from repro.ckpt.store import (complete_steps, latest_step,
-                              restore_checkpoint, save_checkpoint)
+                              restore_checkpoint, save_checkpoint,
+                              save_checkpoint_async)
 
 
 def tree_at(step: int) -> dict:
@@ -139,7 +141,9 @@ class TestMidWriteCrash:
         calls = self._crashing_writer(monkeypatch, fail_on_call=2)
         with pytest.raises(OSError, match="mid-shard-write"):
             save_small_shards(tmp_path, 9)
-        assert calls["n"] == 2                      # really died partway
+        # really died partway; pipelined writes already in flight on the
+        # disk-tier stream when shard 2 failed may still have run
+        assert calls["n"] >= 2
         # nothing published, nothing leaked
         names = sorted(p.name for p in tmp_path.iterdir())
         assert names == ["step_0000000003"]
@@ -169,3 +173,77 @@ class TestMidWriteCrash:
         assert complete_steps(tmp_path) == [4]
         _, step = restore_checkpoint(tmp_path, tree_at(4))
         assert step == 4
+
+
+class TestAsyncOverlap:
+    """Checkpointing rides the disk-tier stream: the training step loop
+    must make progress *while* shard bytes are being written (ROADMAP
+    item 5 tail), and the published checkpoint must be byte-identical to
+    a blocking save's."""
+
+    def test_step_loop_overlaps_shard_writes(self, tmp_path, monkeypatch):
+        import repro.ckpt.store as store_mod
+        real = store_mod._write_shard
+        windows = []                       # (t_start, t_end) per shard write
+
+        def slow_write(path, arrays):
+            t0 = time.perf_counter()
+            time.sleep(0.05)               # a slow spindle
+            real(path, arrays)
+            windows.append((t0, time.perf_counter()))
+
+        monkeypatch.setattr(store_mod, "_write_shard", slow_write)
+        pend = save_checkpoint_async(tmp_path, 7, tree_at(7),
+                                     shard_bytes=8 * 1024)
+        # the "step loop": keep stepping while the save is in flight
+        steps = []
+        while not pend.done():
+            steps.append(time.perf_counter())
+            time.sleep(0.002)
+        path = pend.result()
+        assert path.name == "step_0000000007"
+        assert len(windows) >= 3           # multi-shard layout held
+        # overlap assertion: some step ran strictly inside a shard-write
+        # window — checkpointing did not block the loop
+        assert any(a < t < b for t in steps for (a, b) in windows), \
+            "no training step overlapped a shard write"
+        # and the published bytes are a real, restorable checkpoint
+        got, step = restore_checkpoint(tmp_path, tree_at(7))
+        assert step == 7
+        np.testing.assert_array_equal(got["params"]["w0"],
+                                      tree_at(7)["params"]["w0"])
+
+    def test_async_failure_surfaces_and_leaks_nothing(self, tmp_path,
+                                                      monkeypatch):
+        import repro.ckpt.store as store_mod
+
+        def boom(path, arrays):
+            raise OSError("injected: disk died mid-shard-write")
+
+        monkeypatch.setattr(store_mod, "_write_shard", boom)
+        pend = save_checkpoint_async(tmp_path, 5, tree_at(5),
+                                     shard_bytes=8 * 1024)
+        with pytest.raises(OSError, match="mid-shard-write"):
+            pend.result(timeout=30)
+        # monkeypatch must be undone before other tests reuse the stream
+        monkeypatch.undo()
+        assert list(tmp_path.iterdir()) == []      # no partial tmp dir
+
+    def test_blocking_save_pipelined_writes_stay_ordered(self, tmp_path,
+                                                         monkeypatch):
+        """The blocking path now routes shard writes through the same
+        stream; the manifest/digest contract is unchanged."""
+        import repro.ckpt.store as store_mod
+        seen = []
+        real = store_mod._write_shard
+
+        def record(path, arrays):
+            seen.append(path.name)
+            real(path, arrays)
+
+        monkeypatch.setattr(store_mod, "_write_shard", record)
+        save_small_shards(tmp_path, 2)
+        assert seen == sorted(seen)        # shard_0, shard_1, ... in order
+        assert len(seen) >= 3
+        got, step = restore_checkpoint(tmp_path, tree_at(2))
+        assert step == 2

@@ -1,0 +1,295 @@
+"""Unit tests for the plan compiler (core/compile.py, DESIGN.md §15):
+region segmentation, fusion legality, tick-count scheduling, stream
+pre-assignment, and the verify() invariant checker that guards them."""
+import dataclasses
+import random as pyrandom
+
+import numpy as np
+import pytest
+
+from repro.core import BuildConfig, MemgraphOOM, build_memgraph
+from repro.core.compile import (DEFAULT_MERGE_GAP, NONDET, STATIC,
+                                CompiledPlan, PlanCompileError, lower, main)
+from repro.core.dispatch import (COMPUTE, DISK, POLICY_NAMES, TRANSFER_KINDS,
+                                 engine_key)
+from repro.core.memgraph import DepKind
+from repro.core.runtime import TurnipRuntime, eval_taskgraph, run_in_order
+from repro.core import TaskGraph
+
+from helpers import fig3_taskgraph, int_inputs, random_taskgraph
+
+UNITS = dict(size_fn=lambda v: 1)
+
+
+def chain_taskgraph(n=8):
+    """One input, a unary chain: exactly one legal order — fully static."""
+    tg = TaskGraph()
+    t = tg.add_input(0, (4, 4), name="in")
+    for i in range(n):
+        t = tg.add_compute(0, (t,), (4, 4), op="relu", name=f"c{i}")
+    return tg
+
+
+def build(tg, seed=0, **kw):
+    cfg = BuildConfig(capacity=3, rng_seed=seed, **UNITS, **kw)
+    return build_memgraph(tg, cfg)
+
+
+def tiered_build(tg, seed=0, **kw):
+    """A plan with real SPILL/LOAD disk traffic (or skip the test)."""
+    try:
+        return build(tg, seed, host_capacity=2, disk_capacity=50, **kw)
+    except MemgraphOOM:
+        pytest.skip("random plan does not fit the tiered budgets")
+
+
+# ------------------------------------------------------------ segmentation
+class TestSegmentation:
+    def test_unary_chain_is_fully_static(self):
+        plan = lower(build(chain_taskgraph()), policy="fixed")
+        assert plan.certified
+        assert plan.n_nondet == 0
+        assert plan.seams == ()
+        assert [r.kind for r in plan.regions] == [STATIC]
+        assert len(plan.regions[0]) == plan.n_vertices
+
+    def test_concurrent_inputs_open_a_nondet_window(self):
+        # fig3: two INPUT streams per device race on the h2d engine at
+        # t=0 — the paper's legitimately nondeterministic core
+        plan = lower(build(fig3_taskgraph()), policy="fixed")
+        assert plan.n_nondet > 0
+        assert plan.seams, "nondet regions must expose seam vertices"
+        # seams are the first vertex of each nondet region, in order
+        nondet = [r for r in plan.regions if r.kind == NONDET]
+        assert plan.seams == tuple(plan.order[r.start] for r in nondet)
+
+    def test_regions_partition_the_order(self):
+        for seed in range(6):
+            tg = random_taskgraph(pyrandom.Random(1000 + seed))
+            try:
+                plan = lower(build(tg, seed), policy="random", seed=seed)
+            except MemgraphOOM:
+                continue
+            at = 0
+            for r in plan.regions:
+                assert r.start == at and r.end > r.start
+                at = r.end
+            assert at == plan.n_vertices
+            assert plan.n_static + plan.n_nondet == plan.n_vertices
+
+    def test_merge_gap_absorbs_static_slivers(self):
+        # with an enormous merge gap every nondet span coalesces into few
+        # regions; with gap 0 slivers are kept — region count can only grow
+        res = build(fig3_taskgraph())
+        merged = lower(res, policy="fixed", merge_gap=10**6)
+        split = lower(res, policy="fixed", merge_gap=0)
+        n_merged = sum(r.kind == NONDET for r in merged.regions)
+        n_split = sum(r.kind == NONDET for r in split.regions)
+        assert n_merged <= n_split
+        assert merged.n_nondet >= split.n_nondet
+
+    def test_uncertified_plan_is_one_nondet_region(self):
+        res = build(fig3_taskgraph())
+        mg = res.memgraph
+        # delete a safe-overwrite MEM edge until certification fails
+        from repro.core import certify
+        for u in list(mg.vertices):
+            hit = False
+            for v, k in list(mg.succs[u].items()):
+                if k != DepKind.MEM:
+                    continue
+                mg.remove_dep(u, v)
+                if not certify(mg).ok:
+                    hit = True
+                    break
+                mg.add_dep(u, v, DepKind.MEM)
+            if hit:
+                break
+        else:
+            pytest.fail("no MEM edge deletion broke certification")
+        res.certificate = None        # force lower() to re-certify
+        plan = lower(res, policy="fixed")
+        assert not plan.certified
+        assert [r.kind for r in plan.regions] == [NONDET]
+        assert plan.batches == []     # nondet regions never fuse
+
+
+# ------------------------------------------------------- tick-count schedule
+class TestTickCounts:
+    def test_ready_tick_is_one_past_last_pred(self):
+        res = build(fig3_taskgraph())
+        plan = lower(res, policy="critical-path")
+        pos = {m: i for i, m in enumerate(plan.order)}
+        for ins in plan.instrs:
+            want = max((pos[p] + 1 for p in res.memgraph.preds[ins.mid]),
+                       default=0)
+            assert ins.ready_tick == want
+            assert ins.ready_tick <= ins.pos   # topological ⇒ no waiting
+
+    def test_verify_rejects_corrupted_tick(self):
+        res = build(chain_taskgraph())
+        plan = lower(res, policy="fixed")
+        bad = dataclasses.replace(plan.instrs[-1],
+                                  ready_tick=plan.n_vertices + 5)
+        plan.instrs[-1] = bad
+        with pytest.raises(PlanCompileError, match="ready_tick"):
+            plan.verify(res.memgraph)
+
+    def test_verify_rejects_non_permutation(self):
+        res = build(chain_taskgraph())
+        plan = lower(res, policy="fixed")
+        plan.order[0] = plan.order[1]
+        with pytest.raises(PlanCompileError, match="permutation"):
+            plan.verify(res.memgraph)
+
+    def test_verify_rejects_gapped_regions(self):
+        res = build(chain_taskgraph())
+        plan = lower(res, policy="fixed")
+        r = plan.regions[0]
+        plan.regions[0] = dataclasses.replace(r, start=r.start + 1)
+        with pytest.raises(PlanCompileError, match="partition"):
+            plan.verify(res.memgraph)
+
+    def test_streams_pre_resolved_within_bounds(self):
+        res = build(fig3_taskgraph())
+        plan = lower(res, policy="fixed", n_streams=3, n_transfer_streams=2)
+        for ins in plan.instrs:
+            width = 3 if ins.engine == COMPUTE else 2
+            assert 0 <= ins.stream < width
+            assert (ins.device, ins.engine) == \
+                engine_key(res.memgraph.vertices[ins.mid])
+
+
+# ------------------------------------------------------------ fusion
+class TestFusion:
+    def _fused_plan(self):
+        for seed in range(20):
+            tg = random_taskgraph(pyrandom.Random(1000 + seed))
+            try:
+                res = build(tg, seed, host_capacity=2, disk_capacity=50,
+                            certify_liveness=True)
+            except MemgraphOOM:
+                continue
+            plan = lower(res, policy="fixed")
+            if plan.batches:
+                return res, plan
+        pytest.fail("no seed produced a fused plan")
+
+    def test_batches_are_legal(self):
+        res, plan = self._fused_plan()
+        mg = res.memgraph
+        pos = {m: i for i, m in enumerate(plan.order)}
+        region_of = [r for r in plan.regions for _ in range(len(r))]
+        for a, b in plan.batches:
+            assert b - a >= 2
+            key = engine_key(mg.vertices[plan.order[a]])
+            assert key[1] in TRANSFER_KINDS
+            assert region_of[a].kind == STATIC
+            assert region_of[b - 1] is region_of[a]
+            for i in range(a, b):
+                assert engine_key(mg.vertices[plan.order[i]]) == key
+                # every external predecessor precedes the batch head —
+                # all dependencies complete when the batch issues
+                for p in mg.preds[plan.order[i]]:
+                    assert pos[p] < a or a <= pos[p] < i
+
+    def test_fused_map_points_members_at_heads(self):
+        _, plan = self._fused_plan()
+        fm = plan.fused_map
+        for a, b in plan.batches:
+            head = plan.order[a]
+            assert fm[head] == head
+            for i in range(a, b):
+                assert fm[plan.order[i]] == head
+        n_members = sum(b - a for a, b in plan.batches)
+        assert len(fm) == n_members
+
+    def test_verify_rejects_mixed_engine_batch(self):
+        res, plan = self._fused_plan()
+        mg = res.memgraph
+        a, _b = plan.batches[0]
+        key = engine_key(mg.vertices[plan.order[a]])
+        # graft a non-matching neighbour into the batch
+        for j, m in enumerate(plan.order):
+            if engine_key(mg.vertices[m]) != key:
+                break
+        lo, hi = min(a, j), max(a, j) + 1
+        plan.batches[0] = (lo, hi)
+        with pytest.raises(PlanCompileError):
+            plan.verify(mg)
+
+    def test_disk_fusion_requires_liveness_certificate(self):
+        res, plan = self._fused_plan()
+        # strip the certificate: disk-engine runs must no longer fuse
+        res.liveness_certificate = None
+        bare = lower(res, policy="fixed")
+        assert not bare.liveness_certified
+        mg = res.memgraph
+        for a, _ in bare.batches:
+            assert engine_key(mg.vertices[bare.order[a]])[1] != DISK
+        assert len(bare.batches) <= len(plan.batches)
+
+    def test_max_fuse_bounds_batch_length(self):
+        res, _ = self._fused_plan()
+        plan = lower(res, policy="fixed", max_fuse=2)
+        assert all(b - a == 2 for a, b in plan.batches)
+
+
+# ------------------------------------------------------------ execution
+class TestCompiledExecution:
+    def test_linearization_replays_byte_exactly(self):
+        for pol in POLICY_NAMES:
+            tg = fig3_taskgraph()
+            res = build(tg)
+            plan = lower(res, policy=pol, seed=7)
+            inputs = int_inputs(tg, seed=7)
+            ref = eval_taskgraph(tg, inputs)
+            out = run_in_order(tg, res, inputs, plan.order)
+            for k in ref:
+                np.testing.assert_array_equal(out[k], ref[k])
+
+    def test_backend_flows_from_build_config(self):
+        tg = chain_taskgraph()
+        res = build(tg, backend="compiled")
+        assert res.backend == "compiled"
+        rt = TurnipRuntime(tg, res)
+        assert rt.exec_backend == "compiled"
+        inputs = int_inputs(tg)
+        rr = rt.run(inputs)
+        assert rr.n_compiled == len(res.memgraph.vertices)
+        assert rr.n_interpreted == 0
+        ref = eval_taskgraph(tg, inputs)
+        for k in ref:
+            np.testing.assert_array_equal(rr.outputs[k], ref[k])
+
+    def test_bad_backend_rejected(self):
+        tg = chain_taskgraph()
+        with pytest.raises(ValueError, match="backend"):
+            build(tg, backend="jit")
+        res = build(tg)
+        with pytest.raises(ValueError, match="backend"):
+            TurnipRuntime(tg, res, exec_backend="jit")
+
+    def test_fused_batches_counted_by_runtime(self):
+        for seed in range(20):
+            tg = random_taskgraph(pyrandom.Random(1000 + seed))
+            try:
+                res = build(tg, seed, host_capacity=2, disk_capacity=50,
+                            certify_liveness=True)
+            except MemgraphOOM:
+                continue
+            if not lower(res, policy="fixed").batches:
+                continue
+            inputs = int_inputs(tg, seed=seed)
+            ref = eval_taskgraph(tg, inputs)
+            rr = TurnipRuntime(tg, res, policy="fixed", seed=seed,
+                               exec_backend="compiled").run(inputs)
+            assert rr.fused_dma_batches > 0
+            for k in ref:
+                np.testing.assert_array_equal(rr.outputs[k], ref[k])
+            return
+        pytest.fail("no seed produced a fused tiered plan")
+
+
+def test_cli_corpus_lowers_and_replays():
+    assert main(["--seeds", "6"]) == 0

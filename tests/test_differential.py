@@ -120,6 +120,17 @@ def check_case(tg, seed: int, host_cap, disk_cap, *,
                        seed=seed).run(inputs)
     _assert_equal(rr.outputs, ref, "threaded/fixed-mode")
 
+    # compiled lane (DESIGN.md §15): the same plan lowered to a
+    # straight-line CompiledPlan — static regions run with zero dispatch,
+    # nondet regions hand off to the interpreter at seam vertices — must
+    # reproduce the oracle byte-exactly under every policy, and every
+    # vertex must be accounted to exactly one executor
+    for policy in policies:
+        rr = TurnipRuntime(tg, res, mode="nondet", policy=policy,
+                           seed=seed, exec_backend="compiled").run(inputs)
+        _assert_equal(rr.outputs, ref, f"compiled/{policy}")
+        assert rr.n_compiled + rr.n_interpreted == len(mg.vertices)
+
     # shared-pool lane (DESIGN.md §12): the same plan over a store whose
     # host arena is a lease of an arbitrated HostPool, with a second
     # consumer charging a random share under a random arbitration policy.
@@ -239,6 +250,24 @@ def test_prefetch_plans_profile_like_reactive_plans():
             prof = on.memgraph.host_tier_profile()
             assert prof["n_prefetches"] == on.n_prefetches
     assert n_hoisted >= 2      # the sweep must hit real prefetch plans
+
+
+def test_compiled_seams_exercised_on_unbounded_host_plans():
+    """An unbounded-host plan opens with many INPUT streams racing on the
+    h2d engine — the paper's legitimately nondeterministic core. The
+    compiled backend must mark those as seam regions (interpreted), run
+    the rest straight-line, and still match the oracle."""
+    from helpers import fig3_taskgraph
+    tg = fig3_taskgraph()
+    res = build_memgraph(tg, BuildConfig(capacity=3, rng_seed=0, **UNITS))
+    inputs = graph_inputs(tg, 0)
+    ref = eval_taskgraph(tg, inputs)
+    for policy in POLICY_NAMES:
+        rr = TurnipRuntime(tg, res, mode="nondet", policy=policy, seed=0,
+                           exec_backend="compiled").run(inputs)
+        _assert_equal(rr.outputs, ref, f"compiled-seams/{policy}")
+        assert rr.n_interpreted > 0, "no seam region was interpreted"
+        assert rr.n_compiled > 0, "nothing ran straight-line"
 
 
 # ------------------------------------------------------------- slow lane

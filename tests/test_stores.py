@@ -5,6 +5,7 @@ chains, per-tier budget validation, and tier transparency — bounded-host
 plans reproduce the unbounded oracle bit-for-bit on the threaded runtime
 under every dispatch policy (a seeded mirror of the hypothesis property,
 so it runs without the extra dep)."""
+import os
 import random as pyrandom
 import threading
 import time
@@ -150,19 +151,21 @@ class TestDiskFaults:
     """Truncated/missing spill files and full-disk refusal raise typed
     errors promptly — no executor or stream may hang on rotten bytes."""
 
-    def test_missing_blob_raises_typed(self, tmp_path):
+    def test_rotted_log_raises_typed(self, tmp_path):
         ds = DiskStore(tmp_path)
         ds.put("k", np.arange(8, dtype=np.float32))
-        path, _ = ds._files["k"]
-        path.unlink()
-        with pytest.raises(DiskCorruptionError, match="missing or corrupt"):
+        # wipe the log out from under the store (rotted storage): the
+        # record frame no longer matches the index entry
+        assert ds._log_path is not None
+        os.truncate(ds._log_path, 0)
+        with pytest.raises(DiskCorruptionError, match="torn or corrupt"):
             ds.get("k")
         ds.close()
 
-    def test_truncated_blob_raises_typed(self, tmp_path):
+    def test_truncated_record_raises_typed(self, tmp_path):
         ds = DiskStore(tmp_path)
         ds.put("k", np.arange(64, dtype=np.float64))
-        path, _ = ds._files["k"]
+        path = ds._log_path
         path.write_bytes(path.read_bytes()[:13])      # torn mid-write
         with pytest.raises(DiskCorruptionError):
             ds.get("k")
@@ -199,10 +202,10 @@ class TestDiskFaults:
 
         orig = DiskStore._read_blob
 
-        def paused(self, path):
+        def paused(self, entry):
             reading.set()                      # reader is past the lock
             assert dropped.wait(5)             # drop lands mid-read
-            return orig(self, path)
+            return orig(self, entry)
 
         ds._read_blob = paused.__get__(ds)     # instance-level seam
         ds.put("k", np.arange(16.0))
@@ -224,11 +227,13 @@ class TestDiskFaults:
         assert result, "reader never finished"
         assert isinstance(result[0], KeyError), \
             f"drop/get race misreported as {result[0]!r}"
-        # a genuinely rotten blob is still corruption, not KeyError
+        # a genuinely rotten record is still corruption, not KeyError
         ds._read_blob = orig.__get__(ds)
         ds.put("r", np.arange(4.0))
-        path, _ = ds._files["r"]
-        path.write_bytes(b"rot")
+        off, _, _ = ds._files["r"]
+        with open(ds._log_path, "r+b") as f:
+            f.seek(off)
+            f.write(b"rot")                    # stomp the record frame
         with pytest.raises(DiskCorruptionError):
             ds.get("r")
         ds.close()

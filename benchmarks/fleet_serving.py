@@ -1,0 +1,172 @@
+"""Fleet-serving benchmark: a 3-replica router under a bursty trace, with
+one replica hard-killed mid-run (DESIGN.md §16).
+
+Three questions, matching the fleet transplant of the paper's claims:
+
+1. **Does the fleet degrade gracefully?** Aggregate decode throughput with
+   one of three replicas killed mid-burst must stay ≥ 2/3 of the steady
+   3-replica rate — losing a replica costs its capacity share, never a
+   stall of the whole fleet. Enforced as a hard assertion: a regression
+   fails the figure (and the bench-smoke CI gate).
+2. **Is failover invisible in the bytes?** The chaos run's outputs must be
+   token-identical to the steady run's — placement, migration, and death
+   change timing only (the TURNIP property lifted to the fleet).
+3. **When does warm migration beat cold re-prefill?** The simulator's
+   crossover sweep (:func:`repro.core.simulate.migration_crossover`)
+   prices both recovery paths per request size; the rows land in the
+   BENCH_9.json artifact as the router's eviction-choice table.
+
+CSV contract: ``name,us_per_call,derived`` via :func:`benchmarks.common.emit`.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax                                                     # noqa: E402
+import numpy as np                                             # noqa: E402
+
+from repro.configs.base import ArchConfig                      # noqa: E402
+from repro.core.simulate import migration_crossover            # noqa: E402
+from repro.launch.mesh import FleetTopology                    # noqa: E402
+from repro.models import build_model                           # noqa: E402
+from repro.serve import (Router, RouterStats, ServeConfig,     # noqa: E402
+                         ServeStats)
+
+from .common import emit                                       # noqa: E402
+
+ARCH = ArchConfig(name="fleet-demo", family="dense", n_layers=4,
+                  d_model=128, n_heads=4, n_kv_heads=4, d_ff=256,
+                  vocab_size=512, dtype="float32")
+MAX_LEN = 128
+BLOCK = 16
+N_REPLICAS = 3
+SEED = 7
+
+
+def _workload(rng: np.random.Generator, n: int):
+    return [list(rng.integers(1, ARCH.vocab_size, rng.integers(24, 49)))
+            for _ in range(n)]
+
+
+def _fleet_cfg() -> ServeConfig:
+    # preemption + a short hot window keep requests swapping, so a kill
+    # finds warm (migratable) state, not just live device state
+    return ServeConfig(max_len=MAX_LEN, batch_buckets=(1, 2),
+                       block_size=BLOCK, offload=True, hot_window=BLOCK,
+                       preempt_every=2, seed=SEED)
+
+
+def _run_fleet(model, params, prompts, max_new: int, *,
+               kill_step: "int | None" = None):
+    """One routed burst. Warm every replica's jit caches first, reset the
+    counters, then time the burst; ``kill_step`` arms a deterministic
+    mid-decode fault on replica 0 (heartbeats never time out here — the
+    60 s budget absorbs jit compiles on a shared CPU)."""
+    topo = FleetTopology(n_replicas=N_REPLICAS, heartbeat_timeout_s=60.0,
+                         host_bytes_per_replica=64 << 20)
+    with Router(model, params, _fleet_cfg(), topology=topo,
+                placement="least-loaded") as router:
+        warm = [router.submit(p, max_new=2) for p in prompts]
+        router.wait(warm, timeout=600)
+        with router._lock:
+            router._records.clear()   # warm-up must not pollute TTFT
+        router.stats = RouterStats()
+        for rep in router.replicas:
+            rep.engine.stats = ServeStats()
+        if kill_step is not None:
+            router.replicas[0].engine.fault_after_steps = kill_step
+
+        t0 = time.perf_counter()
+        # bursty multi-tenant trace: a front burst, a beat, a second wave
+        split = max(1, (2 * len(prompts)) // 3)
+        rids = [router.submit(p, max_new=max_new) for p in prompts[:split]]
+        time.sleep(0.05)
+        rids += [router.submit(p, max_new=max_new) for p in prompts[split:]]
+        router.wait(rids, timeout=600)
+        wall = time.perf_counter() - t0
+        outs = [router.result(r) for r in rids]
+        summary = router.summary()
+    tokens = sum(len(o) for o in outs)
+    return outs, summary, wall, tokens / max(wall, 1e-9)
+
+
+def run(quick: bool = True) -> list[dict]:
+    rng = np.random.default_rng(0)
+    model = build_model(ARCH)
+    params = model.init(jax.random.PRNGKey(0))
+    n_req, max_new = (9, 12) if quick else (18, 24)
+    prompts = _workload(rng, n_req)
+
+    # ---- 1. steady state: 3 replicas, no faults
+    ref_out, ref_sum, _, ref_rate = _run_fleet(model, params, prompts,
+                                               max_new)
+    p99 = max(ref_sum["ttft_p99"].values() or [0.0])
+    emit("fleet/steady/aggregate", 1e6 / max(ref_rate, 1e-9),
+         f"tok_s={ref_rate:.1f};replicas={N_REPLICAS};"
+         f"ttft_p99_ms={p99 * 1e3:.1f}")
+
+    # ---- 2. chaos: replica 0 dies mid-decode; survivors absorb its load
+    out, s, _, rate = _run_fleet(model, params, prompts, max_new,
+                                 kill_step=4)
+    ratio = rate / max(ref_rate, 1e-9)
+    floor = (N_REPLICAS - 1) / N_REPLICAS
+    exact = out == ref_out
+    emit("fleet/chaos/aggregate", 1e6 / max(rate, 1e-9),
+         f"tok_s={rate:.1f};of_steady_x{ratio:.2f};"
+         f"migrations={s['migrations']};"
+         f"migrated_KB={s['migrated_bytes'] / 1024:.1f};"
+         f"reprefills={s['reprefills']};"
+         f"drain_ms={s['drain_time'] * 1e3:.1f};exact={exact}")
+    assert s["replicas_killed"] == 1, s
+    assert exact, "chaos run diverged from the steady run's tokens"
+    assert ratio >= floor, (
+        f"post-kill aggregate throughput {rate:.1f} tok/s is "
+        f"{ratio:.2f}x steady state — below the {floor:.2f}x floor")
+
+    # ---- 3. warm-migration vs cold-re-prefill crossover (simulated).
+    # Two pricing points: the demo arch (flops/token ≈ 2 * n_params, so
+    # tiny — re-prefill is nearly free) and a 7B-class fp16 model where
+    # re-creating KV state costs real compute and migration pays off.
+    head_dim = ARCH.d_model // ARCH.n_heads
+    demo_block = (ARCH.n_layers * 2 * BLOCK * ARCH.n_kv_heads
+                  * head_dim * 4)
+    n_params = ARCH.n_layers * (4 * ARCH.d_model**2
+                                + 2 * ARCH.d_model * ARCH.d_ff) \
+        + ARCH.vocab_size * ARCH.d_model
+    scales = {
+        "demo": dict(block_nbytes=demo_block,
+                     flops_per_token=2.0 * n_params),
+        "7b": dict(block_nbytes=32 * 2 * BLOCK * 32 * 128 * 2,
+                   flops_per_token=2.0 * 7e9),
+    }
+    rows: list[dict] = []
+    for scale, kw in scales.items():
+        for disk_frac in (0.0, 0.5):
+            sweep = migration_crossover(block_size=BLOCK,
+                                        disk_frac=disk_frac, **kw)
+            for r in sweep:
+                r["scale"] = scale
+                r["disk_frac"] = disk_frac
+            rows += sweep
+            wins = [r["n_blocks"] for r in sweep
+                    if r["winner"] == "migrate"]
+            emit(f"fleet/crossover/{scale}/disk_frac{disk_frac:g}", 0.0,
+                 f"migrate_wins_from_{min(wins)}_blocks" if wins
+                 else "reprefill_always_wins")
+    rows.append({"kind": "chaos_summary", "steady_tok_s": ref_rate,
+                 "chaos_tok_s": rate, "of_steady": ratio,
+                 "migrations": s["migrations"],
+                 "migrated_bytes": s["migrated_bytes"],
+                 "reprefills": s["reprefills"],
+                 "drain_time_s": s["drain_time"],
+                 "replicas_killed": s["replicas_killed"],
+                 "exact": exact})
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=os.environ.get("QUICK", "1") != "0")

@@ -8,6 +8,9 @@ Prints ``name,us_per_call,derived`` CSV (scaffold contract). Paper artifacts:
 * threaded — nondet-vs-fixed on real threads (condition-variable runtime)
 * memgraph_build — compiler throughput/dependency statistics
 * serving — continuous-batching decode with KV offload + reload policies
+* fleet_serving — 3-replica router under a bursty trace with one replica
+  killed mid-run: graceful-degradation floor, token-exact failover, and
+  the warm-migration vs cold-re-prefill crossover table (DESIGN.md §16)
 * tiered_offload — bounded host tier + disk spill: throughput vs host-tier
   fraction, nondet-vs-fixed under two-hop reload latency (DESIGN.md §10)
 * shared_pool — runtime + serving on one arbitrated HostPool: byte-identical
@@ -26,7 +29,7 @@ and a traceback, the rest still run, and the process exits nonzero with a
 failure summary — CI sees a single figure regression without it hiding the
 others.
 
-Besides the CSV stream, the harness writes ``BENCH_8.json`` next to the
+Besides the CSV stream, the harness writes ``BENCH_9.json`` next to the
 working directory: one entry per figure with its machine-readable rows
 (benchmarks that return row dicts), its pass/fail status, and the error
 text on failure — the artifact CI jobs archive and diff across commits.
@@ -43,7 +46,7 @@ import traceback
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-BENCH_JSON = "BENCH_8.json"
+BENCH_JSON = "BENCH_9.json"
 
 
 def _roofline() -> None:
@@ -59,8 +62,8 @@ def _roofline() -> None:
 def main() -> int:
     quick = os.environ.get("QUICK", "1") != "0"
     from . import (certifier, compiled_runtime, fig10_prefill, fig11_lora,
-                   stall_ablation, threaded_runtime, memgraph_build,
-                   serving, shared_pool, tiered_offload)
+                   fleet_serving, stall_ablation, threaded_runtime,
+                   memgraph_build, serving, shared_pool, tiered_offload)
     figures = [
         ("fig10_prefill", lambda: fig10_prefill.run(quick=quick)),
         ("fig11_lora", lambda: fig11_lora.run(quick=quick)),
@@ -68,6 +71,7 @@ def main() -> int:
         ("threaded_runtime", lambda: threaded_runtime.run(quick=quick)),
         ("memgraph_build", lambda: memgraph_build.run(quick=quick)),
         ("serving", lambda: serving.run(quick=quick)),
+        ("fleet_serving", lambda: fleet_serving.run(quick=quick)),
         ("tiered_offload", lambda: tiered_offload.run(quick=quick)),
         ("shared_pool", lambda: shared_pool.run(quick=quick)),
         ("certifier", lambda: certifier.run(quick=quick)),

@@ -35,7 +35,8 @@ from typing import Callable, Iterable
 from .memgraph import MemGraph, MemOp, MemVertex
 
 __all__ = [
-    "COMPUTE", "H2D", "D2H", "D2D", "DISK", "ENGINE_KINDS", "TRANSFER_KINDS",
+    "COMPUTE", "H2D", "D2H", "D2D", "DISK", "NIC", "ENGINE_KINDS",
+    "TRANSFER_KINDS",
     "ENGINE_OF", "engine_of", "engine_key", "DispatchPolicy", "RandomPolicy",
     "FixedPolicy", "CriticalPathPolicy", "TransferFirstPolicy",
     "POLICY_NAMES", "get_policy",
@@ -45,9 +46,15 @@ __all__ = [
 # `disk` is the I/O engine of the third storage tier (host RAM → disk): SPILL
 # and LOAD vertices run there, so a two-hop reload's disk leg never occupies
 # — or waits behind — the h2d/d2h DMA lanes.
-COMPUTE, H2D, D2H, D2D, DISK = "compute", "h2d", "d2h", "d2d", "disk"
-ENGINE_KINDS = (COMPUTE, H2D, D2H, D2D, DISK)
-TRANSFER_KINDS = (H2D, D2H, D2D, DISK)
+# `nic` is the inter-replica link (ROADMAP item 1/2, arXiv 2502.15712's
+# NIC-as-pipeline-resource): XFER vertices run there, so a KV migration's
+# wire leg never competes with the local DMA or disk lanes. The plan
+# builder never emits XFER — only simulator-built pricing graphs (see
+# `simulate.price_migration`) and the serving router's cost model use it.
+COMPUTE, H2D, D2H, D2D, DISK, NIC = \
+    "compute", "h2d", "d2h", "d2d", "disk", "nic"
+ENGINE_KINDS = (COMPUTE, H2D, D2H, D2D, DISK, NIC)
+TRANSFER_KINDS = (H2D, D2H, D2D, DISK, NIC)
 
 ENGINE_OF = {
     MemOp.INPUT: H2D,        # weights/activations stream in from host store
@@ -56,6 +63,7 @@ ENGINE_OF = {
     MemOp.TRANSFER: D2D,
     MemOp.SPILL: DISK,       # host -> disk (second hop of a tiered eviction)
     MemOp.LOAD: DISK,        # disk -> host (first hop of a two-hop reload)
+    MemOp.XFER: NIC,         # host -> remote host (inter-replica migration)
     MemOp.COMPUTE: COMPUTE,
     MemOp.ALLOC0: COMPUTE,
     MemOp.ADD_INTO: COMPUTE,
@@ -83,9 +91,11 @@ _FLOPS = 8e12
 _HBM_BW = 500e9
 _DMA_BW = 12e9
 _DISK_BW = 2.4e9          # NVMe-class: ~5x slower than the PCIe DMA lanes
+_NIC_BW = 3.1e9           # 25 GbE-class inter-replica link
 _KERNEL_OVERHEAD = 5e-6
 _DMA_LATENCY = 10e-6
 _DISK_LATENCY = 100e-6
+_NIC_LATENCY = 50e-6
 
 
 def vertex_cost(v: MemVertex) -> float:
@@ -104,6 +114,8 @@ def vertex_cost(v: MemVertex) -> float:
         if v.nbytes == 0:       # a dedup/drop spill moves no bytes
             return 0.0
         return _DISK_LATENCY + v.nbytes / _DISK_BW
+    if engine_of(v) == NIC:
+        return _NIC_LATENCY + v.nbytes / _NIC_BW
     return _DMA_LATENCY + v.nbytes / _DMA_BW
 
 

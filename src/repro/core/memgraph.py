@@ -46,6 +46,9 @@ class MemOp(str, enum.Enum):
     ALLOC0 = "alloc0"      # zero-init of a streaming-reduce accumulator (§B)
     ADD_INTO = "add_into"  # commutative accumulation into a locked loc (§B)
     JOIN = "join"          # completion marker of a streaming-reduce group
+    XFER = "xfer"          # host -> remote host over the NIC (inter-replica
+    #                        KV migration; priced by the simulator's sixth
+    #                        channel — the plan builder never emits it)
 
 
 # ops whose output lives in a store tier, not a device extent (loc is None)

@@ -453,6 +453,15 @@ class HostPool:
         for cb, deficit in fire:
             cb(deficit)
 
+    @property
+    def drained(self) -> bool:
+        """True when no lease holds any bytes — the post-teardown invariant
+        the fleet chaos harness asserts per surviving replica: a drained
+        pool proves every migrated/finished request's reservations were
+        released, not leaked."""
+        with self._lock:
+            return all(l.used == 0 for l in self._leases.values())
+
     def snapshot(self) -> dict:
         """Counters for benchmarks/monitoring: one dict per lease plus the
         pool totals."""

@@ -31,11 +31,13 @@ import heapq
 
 from .dispatch import (COMPUTE as _COMPUTE, D2D as _D2D, D2H as _D2H,
                        DISK as _DISK, DispatchPolicy, ENGINE_OF as _ENGINE_OF,
-                       H2D as _H2D, TRANSFER_KINDS as _TRANSFER_KINDS,
+                       H2D as _H2D, NIC as _NIC,
+                       TRANSFER_KINDS as _TRANSFER_KINDS,
                        get_policy)
-from .memgraph import MemGraph, MemOp, MemVertex
+from .memgraph import DepKind, MemGraph, MemOp, MemVertex
 
-__all__ = ["HardwareModel", "SimResult", "simulate"]
+__all__ = ["HardwareModel", "SimResult", "simulate",
+           "price_migration", "price_reprefill", "migration_crossover"]
 
 
 @dataclasses.dataclass
@@ -51,9 +53,13 @@ class HardwareModel:
     d2h_bw: float = 12e9
     d2d_bw: float = 12e9
     disk_bw: float = 2.4e9           # host<->disk tier (NVMe-class)
+    nic_bw: float = 3.1e9            # host<->remote-host (25 GbE-class) —
+    #                                  the sixth priced channel: inter-replica
+    #                                  KV migration (serve/router.py)
     kernel_overhead: float = 5e-6    # fixed per-kernel launch cost (s)
     dma_latency: float = 10e-6       # fixed per-transfer cost (s)
     disk_latency: float = 100e-6     # fixed per disk spill/load cost (s)
+    nic_latency: float = 50e-6       # fixed per inter-replica transfer (s)
     # The paper's core hypothesis (§2): offload/reload latencies are
     # "seemingly nondeterministic". jitter is the sigma of a lognormal
     # multiplier on transfer durations (0 = deterministic). The same seeded
@@ -98,6 +104,13 @@ class HardwareModel:
             base = (0.0 if fused else self.disk_latency) \
                 + v.nbytes / self.disk_bw
             base += self._revoked(v.mid) * self.revoke_stall
+            return base * self._jit(v.mid, self.transfer_jitter)
+        if eng == _NIC:
+            # same paired jitter stream as the other transfer channels —
+            # the inter-replica wire is priced like any DMA lane, with its
+            # own latency/bandwidth constants (arXiv 2502.15712's stance)
+            base = (0.0 if fused else self.nic_latency) \
+                + v.nbytes / self.nic_bw
             return base * self._jit(v.mid, self.transfer_jitter)
         bw = {_H2D: self.h2d_bw, _D2H: self.d2h_bw, _D2D: self.d2d_bw}[eng]
         base = (0.0 if fused else self.dma_latency) + v.nbytes / bw
@@ -171,7 +184,7 @@ def simulate(mg: MemGraph, hw: HardwareModel | None = None, *,
     verts = mg.vertices
     devices = sorted({v.device for v in verts.values()})
     engines = [(d, k) for d in devices
-               for k in (_COMPUTE, _H2D, _D2H, _D2D, _DISK)]
+               for k in (_COMPUTE, _H2D, _D2H, _D2D, _DISK, _NIC)]
     free_at = {e: 0.0 for e in engines}
     queue: dict[tuple[int, str], list] = {e: [] for e in engines}  # ready heaps
     remaining = {m: len(mg.preds[m]) for m in verts}
@@ -262,3 +275,84 @@ def simulate(mg: MemGraph, hw: HardwareModel | None = None, *,
                      transfer_time=chan, n_vertices=len(verts),
                      timeline=sorted(timeline),
                      start_at=start_at, done_at=done_at)
+
+
+# -- migration vs re-prefill pricing (serve/router.py, DESIGN.md §16) -------
+# When a replica dies, every in-flight request must land on a survivor in
+# one of two ways: *migrate* its host/disk-resident KV blocks over the NIC
+# (warm) or *re-prefill* its prompt + emitted tokens from scratch (cold).
+# Both paths are priced through `simulate()` on purpose-built micro-plans so
+# the prediction shares the channel model (latencies, bandwidths, jitter)
+# with every other figure instead of a parallel analytic formula.
+
+def price_migration(hw: HardwareModel | None = None, *,
+                    n_blocks: int,
+                    block_nbytes: int,
+                    disk_blocks: int = 0) -> float:
+    """Predicted seconds to warm-migrate one request's KV state and make it
+    decode-ready on the destination: per block, an optional disk LOAD (for
+    the ``disk_blocks`` blocks resident on the source's disk tier at
+    migration time), the NIC XFER, then the destination's h2d RELOAD. The
+    three stages run on three independent engines, so the micro-plan
+    pipelines exactly like the real transfer streams do."""
+    hw = hw or HardwareModel()
+    if not 0 <= disk_blocks <= n_blocks:
+        raise ValueError(f"disk_blocks={disk_blocks} not in [0, {n_blocks}]")
+    mg = MemGraph()
+    seq = 0
+    for b in range(n_blocks):
+        prev = None
+        stages = ([MemOp.LOAD] if b < disk_blocks else []) \
+            + [MemOp.XFER, MemOp.RELOAD]
+        for op in stages:
+            m = mg.add_vertex(op, 0, nbytes=block_nbytes, seq=seq,
+                              name=f"{op.value}:blk{b}")
+            seq += 1
+            if prev is not None:
+                mg.add_dep(prev, m, DepKind.DATA)
+            prev = m
+    return simulate(mg, hw).makespan
+
+
+def price_reprefill(hw: HardwareModel | None = None, *,
+                    tokens: int,
+                    flops_per_token: float,
+                    kv_nbytes: int = 0) -> float:
+    """Predicted seconds to cold-resume one request by re-prefilling its
+    prompt plus already-emitted tokens on the destination (one batched
+    prefill kernel; the KV bytes are produced on-device as a side effect,
+    so no transfer channel is touched)."""
+    hw = hw or HardwareModel()
+    mg = MemGraph()
+    mg.add_vertex(MemOp.COMPUTE, 0, flops=tokens * flops_per_token,
+                  nbytes=kv_nbytes, seq=0, name=f"reprefill:{tokens}tok")
+    return simulate(mg, hw).makespan
+
+
+def migration_crossover(hw: HardwareModel | None = None, *,
+                        block_size: int,
+                        block_nbytes: int,
+                        flops_per_token: float,
+                        n_blocks_sweep: "list[int] | None" = None,
+                        disk_frac: float = 0.0) -> list[dict]:
+    """Sweep request sizes and report, per size, whether warm migration
+    beats cold re-prefill on this hardware — the router's eviction-choice
+    table and the BENCH crossover rows. ``disk_frac`` is the fraction of
+    the request's blocks sitting on the source's disk tier at kill time."""
+    hw = hw or HardwareModel()
+    rows = []
+    for nb in (n_blocks_sweep or [1, 2, 4, 8, 16, 32, 64]):
+        tokens = nb * block_size
+        t_mig = price_migration(hw, n_blocks=nb, block_nbytes=block_nbytes,
+                                disk_blocks=int(round(nb * disk_frac)))
+        t_pre = price_reprefill(hw, tokens=tokens,
+                                flops_per_token=flops_per_token,
+                                kv_nbytes=nb * block_nbytes)
+        rows.append({
+            "n_blocks": nb,
+            "tokens": tokens,
+            "migrate_s": t_mig,
+            "reprefill_s": t_pre,
+            "winner": "migrate" if t_mig <= t_pre else "reprefill",
+        })
+    return rows

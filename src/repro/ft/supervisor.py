@@ -18,6 +18,13 @@ Components:
   vertex's runtime exceeds ``factor``× the median for its op type, a clone
   is dispatched on another free stream; first completion wins (results are
   idempotent writes to the planned extent).
+* :class:`SpeculativeLedger` — the dedup around that rule: at most one
+  clone per straggler, first completion retires the vertex, losers are
+  counted as waste and never double-applied.
+
+The serving fleet reuses the same machinery (DESIGN.md §16): the router
+beats each replica's heartbeat from the replica's own run loop and drains
+replicas the supervisor declares dead.
 """
 from __future__ import annotations
 
@@ -27,7 +34,8 @@ from typing import Any, Callable
 
 from ..core import lockcheck
 
-__all__ = ["Heartbeat", "Supervisor", "speculative_redispatch"]
+__all__ = ["Heartbeat", "Supervisor", "SpeculativeLedger",
+           "speculative_redispatch"]
 
 
 class Heartbeat:
@@ -52,6 +60,12 @@ class Heartbeat:
             return [w for w, t in self.last_beat.items()
                     if now - t > self.timeout_s]
 
+    def forget(self, worker: str) -> None:
+        """Drop a worker from the table: a drained/retired replica must
+        not keep reporting dead on every later poll."""
+        with self._lock:
+            self.last_beat.pop(worker, None)
+
 
 @dataclasses.dataclass
 class SupervisorReport:
@@ -71,10 +85,18 @@ class Supervisor:
 
     def __init__(self, *, ckpt_dir: str, save_every: int = 10,
                  max_restarts: int = 5,
+                 backoff_s: float = 0.0, max_backoff_s: float = 30.0,
                  heartbeat: Heartbeat | None = None) -> None:
         self.ckpt_dir = ckpt_dir
         self.save_every = save_every
         self.max_restarts = max_restarts
+        # restart-storm damping: the k-th consecutive restart sleeps
+        # backoff_s * 2**(k-1), capped at max_backoff_s (0 = no backoff —
+        # the prior behaviour). A crash loop with a persistent cause
+        # (bad host, poisoned batch) otherwise burns its restart budget in
+        # milliseconds and turns one fault into max_restarts of churn.
+        self.backoff_s = backoff_s
+        self.max_backoff_s = max_backoff_s
         self.heartbeat = heartbeat if heartbeat is not None else Heartbeat()
         # guards the live progress record (step/restarts/history): a
         # monitor thread reads status() while run() mutates. Documented
@@ -131,10 +153,55 @@ class Supervisor:
                 last = latest_step(self.ckpt_dir)
                 if last is None:
                     raise
+                if self.backoff_s > 0:
+                    delay = min(self.backoff_s * 2 ** (restarts - 1),
+                                self.max_backoff_s)
+                    self._note(step, f"backoff@{step}:{delay:.4g}s")
+                    time.sleep(delay)
                 state, step = restore_checkpoint(self.ckpt_dir, state)
                 self._note(step, f"restored@{step}")
         return state, SupervisorReport(steps_run, restarts, step,
                                        list(history))
+
+
+class SpeculativeLedger:
+    """Dedup around :func:`speculative_redispatch`: at most one clone per
+    straggling vertex, and once either copy completes the vertex is
+    retired — the losing completion is counted as waste and must be
+    dropped, never applied twice. Results are idempotent writes to planned
+    extents, so correctness never *depends* on this class; what it buys is
+    bounded speculation (no clone storms when the policy keeps flagging
+    the same straggler every wakeup) and an audit trail."""
+
+    def __init__(self) -> None:
+        # leaf lock: completions arrive from worker threads while the
+        # driver's wakeup loop asks try_clone
+        self._lock = lockcheck.make_lock("SpeculativeLedger")
+        self._inflight: set[int] = set()
+        self._done: set[int] = set()
+        self.cloned = 0
+        self.wasted = 0          # completions that lost the race
+
+    def try_clone(self, mid: int) -> bool:
+        """True exactly once per straggling vertex until it completes —
+        the caller dispatches the clone iff this returns True."""
+        with self._lock:
+            if mid in self._inflight or mid in self._done:
+                return False
+            self._inflight.add(mid)
+            self.cloned += 1
+            return True
+
+    def complete(self, mid: int) -> bool:
+        """Record a completion (original or clone). True for the winner
+        (apply the result); False for the loser (drop it)."""
+        with self._lock:
+            if mid in self._done:
+                self.wasted += 1
+                return False
+            self._done.add(mid)
+            self._inflight.discard(mid)
+            return True
 
 
 def speculative_redispatch(durations: dict[int, float], op_medians:

@@ -87,11 +87,50 @@ from .kv_cache import PagedKVCache
 
 __all__ = ["ServeConfig", "Engine", "Request", "ServeStats",
            "ReloadPolicy", "RELOAD_POLICY_NAMES", "get_reload_policy",
+           "ReplicaKilled", "MigrationRefused", "MigrationTicket",
            "naive_generate"]
 
 # request lifecycle
 QUEUED, RUNNING, SWAPPING, SWAPPED, RELOADING, DONE = (
     "queued", "running", "swapping-out", "swapped", "reloading", "done")
+
+
+class ReplicaKilled(RuntimeError):
+    """The replica's run loop was hard-killed (fault-injection seam or
+    ``hard_kill()``): device state is gone, but the host/disk tiers — owned
+    by the host process, not the dead worker — survive for draining."""
+
+
+class MigrationRefused(RuntimeError):
+    """All-or-nothing import refused: the destination could not reserve the
+    whole KV set against its lease (or the ticket failed validation).
+    Nothing landed — the caller falls back to cold re-prefill."""
+
+
+@dataclasses.dataclass
+class MigrationTicket:
+    """A request checkpointed at its last emitted token, portable between
+    replicas. ``blocks`` carries the KV payloads of a *warm* ticket (one
+    ``{leaf: ndarray}`` dict per block, exactly ``read_block``'s layout);
+    ``None`` means cold — device state died with the source replica and the
+    destination must re-prefill ``prompt + out`` (token-exact because the
+    sampling key schedule folds only (seed, rid, position), all three of
+    which the ticket preserves)."""
+
+    rid: int
+    prompt: list[int]
+    out: list[int]
+    max_new: int
+    pos: int
+    last: int
+    block_size: int
+    t_submit: float = 0.0
+    t_first: float = 0.0
+    blocks: "list[dict] | None" = None
+
+    @property
+    def warm(self) -> bool:
+        return self.blocks is not None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -154,6 +193,11 @@ class Request:
     inflight: set[int] = dataclasses.field(default_factory=set)
     pending_reload: set[int] = dataclasses.field(default_factory=set)
     reload_data: dict[int, dict] = dataclasses.field(default_factory=dict)
+    # TTFT stamps (router-level p99 accounting): submission and first-token
+    # instants in time.monotonic() seconds. Carried across migrations in
+    # the ticket, so a resumed request keeps its original latency history.
+    t_submit: float = 0.0
+    t_first: float = 0.0
 
 
 @dataclasses.dataclass
@@ -178,6 +222,9 @@ class ServeStats:
     fused_dma_batches: int = 0        # multi-transfer submissions issued
     #                                   (ServeConfig.fuse_dma)
     kv_bytes_written: int = 0
+    migrations_in: int = 0            # warm tickets imported (router fleet)
+    migrations_out: int = 0           # warm tickets exported off this
+    #                                   replica (drain + live rebalance)
 
     @property
     def offloaded_fraction(self) -> float:
@@ -396,7 +443,8 @@ class Engine:
     """Continuous-batching decode engine over a block-paged KV cache."""
 
     def __init__(self, model, params, cfg: ServeConfig = ServeConfig(), *,
-                 host: HostStore | None = None, pool=None):
+                 host: HostStore | None = None, pool=None,
+                 name: str = "serve"):
         """``host``: pass a runtime's :class:`HostStore` (or
         :class:`TieredStore`) to share one pinned host pool (and its
         traffic counters) with it; by default the engine owns a private
@@ -431,6 +479,7 @@ class Engine:
         self.model = model
         self.params = params
         self.cfg = cfg
+        self.name = name            # replica identity (router + diagnostics)
         self._pool = pool
         if host is not None:
             self.host = host
@@ -510,6 +559,23 @@ class Engine:
         self._prefetch_inflight: set[tuple[int, int]] = set()
         self._idle_spins = 0            # consecutive no-progress stalls
         self._idle_pool_state = None    # last observed (pool used, grant)
+        # ---- fleet / fault-injection seams (serve/router.py) ------------
+        # on_step: called once per run-loop iteration OFF the engine lock —
+        # the router wires it to Heartbeat.beat(replica), so a wedged or
+        # paused loop stops beating and the supervisor notices.
+        self.on_step = None
+        # hard-kill seams: `hard_kill()` (async, from any thread) or
+        # `fault_after_steps` (deterministic: raise once this many decode
+        # steps have run — the chaos harness's seeded kill instants). Both
+        # raise ReplicaKilled out of run(); the finally block still joins
+        # every DMA stream, so a killed replica leaks no threads.
+        self._killed = False
+        self.fault_after_steps: int | None = None
+        # stall seam: `pause()` blocks the run loop (heartbeats stop, the
+        # loop thread stays alive) until `resume()` — the missed-heartbeat
+        # path that is NOT a crash.
+        self._pause_evt = threading.Event()
+        self._pause_evt.set()
 
     # ---------------------------------------------- pool lease bookkeeping
     def pool_model(self) -> PoolConfig:
@@ -529,23 +595,33 @@ class Engine:
         """The live waits-for graph, dumped when the no-progress detector
         fires: who holds what, who is blocked on what. Diagnostic only —
         the detector itself is demoted to a certifier-soundness check for
-        certified configurations."""
-        leases = {
-            l.name: {"grant": l.grant, "used": l.used,
-                     "pressure": l.pressure, "overage": l.overage,
-                     "refusals": l.refusals}
-            for l in self._pool.leases()}
+        certified configurations. Leads with the replica name: under a
+        router N engines share one traceback consumer, and a wedge report
+        that can't say *which* replica wedged is useless."""
+        if self._pool is not None:
+            leases = {
+                l.name: {"grant": l.grant, "used": l.used,
+                         "pressure": l.pressure, "overage": l.overage,
+                         "refusals": l.refusals}
+                for l in self._pool.leases()}
+            pool = {"capacity": self._pool.capacity,
+                    "used_bytes": self._pool.used_bytes}
+        else:
+            leases = {}
+            pool = None
         with self._revoke_lock:
             revoked = self._revoked_pending
         return {
-            "pool": {"capacity": self._pool.capacity,
-                     "used_bytes": self._pool.used_bytes},
+            "replica": self.name,
+            "pool": pool,
             "leases": leases,
             "revoked_pending": revoked,
             "queued": list(self._queue),
             "swapped": list(self._swapped),
             "spill_inflight": sorted(self._spill_inflight),
             "prefetch_inflight": sorted(self._prefetch_inflight),
+            "inflight": {r: sorted(self.reqs[r].inflight)
+                         for r in self._live if self.reqs[r].inflight},
             "states": {r: self.reqs[r].state for r in self._live},
         }
 
@@ -593,11 +669,17 @@ class Engine:
         self._charged[key] = (dst, entry[1])
 
     # ------------------------------------------------------------- public
-    def submit(self, prompt, max_new: int = 32) -> int:
+    def submit(self, prompt, max_new: int = 32, *,
+               rid: int | None = None) -> int:
         """Enqueue a request; returns its id. Tokens emitted will be
         ``min(max_new, max_len - len(prompt) + 1)`` — the first token
         samples from the prefill logits, so a prompt that exactly fills the
-        window still yields one token."""
+        window still yields one token.
+
+        ``rid`` pins the request id (fleet mode: the router allocates ids
+        globally, because the sampling key schedule folds the rid — a
+        request must keep its id across replicas for its tokens to be
+        identical wherever it lands)."""
         prompt = [int(t) for t in prompt]
         if not prompt:
             raise ValueError("empty prompt")
@@ -608,13 +690,36 @@ class Engine:
             raise ValueError(f"prompt of {len(prompt)} tokens exceeds "
                              f"max_len={self.cfg.max_len}")
         with self._lock:        # online use submits while run() is draining
-            rid = self._next_rid
-            self._next_rid += 1
-            self.reqs[rid] = Request(rid, prompt, max_new)
+            if rid is None:
+                rid = self._next_rid
+            elif rid in self.reqs:
+                raise ValueError(f"rid {rid} already present on replica "
+                                 f"{self.name!r}")
+            self._next_rid = max(self._next_rid, rid + 1)
+            self.reqs[rid] = Request(rid, prompt, max_new,
+                                     t_submit=time.monotonic())
             self._live.add(rid)
             self._queue.append(rid)
             self._wake.notify_all()     # a stalled run() picks it up now
         return rid
+
+    def hard_kill(self) -> None:
+        """Kill the replica from any thread: the run loop raises
+        :class:`ReplicaKilled` at its next iteration (a stalled loop wakes
+        within its 0.1 s wait tick). Device state is considered lost; the
+        host/disk tiers stay intact for :meth:`drain_tickets`."""
+        with self._lock:
+            self._killed = True
+            self._wake.notify_all()
+
+    def pause(self) -> None:
+        """Stall seam: block the run loop (and its heartbeats) without
+        killing it — the silent-wedge failure mode a supervisor must
+        distinguish from a crash. :meth:`resume` releases it."""
+        self._pause_evt.clear()
+
+    def resume(self) -> None:
+        self._pause_evt.set()
 
     def close(self) -> None:
         """Release the engine-owned store's backing resources (the disk
@@ -645,6 +750,185 @@ class Engine:
             if req is not None and req.state != DONE:
                 raise ValueError(f"request {rid} is {req.state}, not done")
             self.reqs.pop(rid, None)
+
+    # ------------------------------------- KV migration (DESIGN.md §16)
+    def _warm_payload_locked(self, req: Request) -> "list[dict] | None":
+        """Collect a SWAPPED request's complete block set from the host/
+        disk tiers (``peek_offload``: no restaging, no traffic counted).
+        ``None`` unless *every* block is present and quiescent — a warm
+        ticket is all blocks or nothing, the export face of all-or-nothing
+        admission."""
+        if req.state != SWAPPED or req.inflight or req.pending_reload:
+            return None
+        # the disk tier stores raw bytes and restores extended dtypes
+        # (bfloat16, float8_*) as anonymous void words — relabel them from
+        # the cache's own leaves so the ticket carries true dtypes and the
+        # destination's leaf-spec validation sees what it expects. A view,
+        # never a cast: the bytes are already exact.
+        dtypes = {k: np.dtype(leaf.dtype)
+                  for k, leaf in self.kv.cache.items()}
+        blocks = []
+        for blk in range(self.kv.n_token_blocks(req.pos)):
+            data = self.host.peek_offload((req.rid, blk))
+            if data is None:
+                return None
+            fixed = {}
+            for k, v in data.items():
+                arr = np.asarray(v)
+                want = dtypes.get(k)
+                if (want is not None and arr.dtype != want
+                        and arr.dtype.kind == "V"
+                        and arr.dtype.itemsize == want.itemsize):
+                    arr = arr.view(want)
+                fixed[k] = arr
+            blocks.append(fixed)
+        return blocks
+
+    def _ticket_locked(self, req: Request,
+                       blocks: "list[dict] | None") -> MigrationTicket:
+        return MigrationTicket(
+            rid=req.rid, prompt=list(req.prompt), out=list(req.out),
+            max_new=req.max_new, pos=req.pos, last=req.last,
+            block_size=self.cfg.block_size,
+            t_submit=req.t_submit, t_first=req.t_first, blocks=blocks)
+
+    def drain_tickets(self) -> list[MigrationTicket]:
+        """Checkpoint every live request at its last emitted token for
+        migration off this replica — the post-kill drain. SWAPPED requests
+        whose full block set survives on the host/disk tiers (owned by the
+        host process, which outlives the dead worker) become *warm*
+        tickets; everything else lost its device state with the worker and
+        goes *cold* (the destination re-prefills ``prompt + out``).
+        Read-only on the source: the caller retires it with ``close()``."""
+        tickets = []
+        with self._lock:
+            for rid in sorted(self._live):
+                req = self.reqs[rid]
+                blocks = (self._warm_payload_locked(req)
+                          if self.kv is not None else None)
+                tickets.append(self._ticket_locked(req, blocks))
+        return tickets
+
+    def export_one_swapped(self) -> MigrationTicket | None:
+        """Live rebalance: detach the *tail* of the swapped FIFO (the
+        request that would wait longest for a local slot) as a warm
+        ticket, releasing its local bytes, lease charges, and seq entries.
+        ``None`` when no swapped request has a complete, quiescent block
+        set (in-flight spills/prefetches defer the export — never race a
+        stream for a block)."""
+        with self._lock:
+            if self.kv is None:
+                return None
+            for i in range(len(self._swapped) - 1, -1, -1):
+                rid = self._swapped[i]
+                req = self.reqs[rid]
+                keys = [(rid, b)
+                        for b in range(self.kv.n_token_blocks(req.pos))]
+                if any(k in self._spill_inflight
+                       or k in self._prefetch_inflight for k in keys):
+                    continue
+                blocks = self._warm_payload_locked(req)
+                if blocks is None:
+                    continue
+                ticket = self._ticket_locked(req, blocks)
+                self._swapped.pop(i)
+                self._live.discard(rid)
+                self.reqs.pop(rid)
+                for k in keys:
+                    self.host.pop_offload(k)
+                    self._release_key_locked(k)
+                    self._block_seq.pop(k, None)
+                self.stats.migrations_out += 1
+                self._wake.notify_all()   # run() re-checks its live set
+                return ticket
+        return None
+
+    def load(self) -> tuple[int, int]:
+        """Placement signals for a router: (live request count, resident +
+        committed KV tokens). Cheap and exact under the engine lock."""
+        with self._lock:
+            return (len(self._live),
+                    sum(max(self.reqs[r].pos, len(self.reqs[r].prompt))
+                        for r in self._live))
+
+    def import_migration(self, ticket: MigrationTicket) -> None:
+        """Admit a warm ticket in SWAPPED state: validate every payload
+        against this replica's :meth:`PagedKVCache.leaf_spec`, reserve the
+        whole block set against the kv lease, then land the bytes in the
+        host tier — **all or nothing**: a :class:`MigrationRefused` leaves
+        no byte, charge, or request record behind, so the §12 pool
+        invariants and the §14 liveness assumptions hold on the
+        destination exactly as if the request had been swapped out
+        locally. The request resumes through the ordinary swap-in path;
+        the imported blocks are bit-identical to what ``restore_slot``
+        would have reloaded on the source, so its continuation is
+        token-exact."""
+        if ticket.blocks is None:
+            raise MigrationRefused(
+                f"ticket {ticket.rid} is cold (no KV payload): resubmit "
+                "prompt+out for re-prefill instead")
+        if ticket.block_size != self.cfg.block_size:
+            raise MigrationRefused(
+                f"block_size mismatch: ticket has {ticket.block_size}, "
+                f"replica {self.name!r} serves {self.cfg.block_size}")
+        with self._lock:
+            if ticket.rid in self.reqs:
+                raise MigrationRefused(
+                    f"rid {ticket.rid} already present on replica "
+                    f"{self.name!r}")
+            if self.kv is None:
+                # a fresh replica has no cache yet; geometry (block bytes,
+                # leaf spec) is needed before any payload can be validated
+                bucket = self._bucket_for(1)
+                self.kv = PagedKVCache(self.model, bucket, self.cfg.max_len,
+                                       block_size=self.cfg.block_size)
+                self._slots = [None] * bucket
+            n_blocks = self.kv.n_token_blocks(ticket.pos)
+            if len(ticket.blocks) != n_blocks:
+                raise MigrationRefused(
+                    f"ticket {ticket.rid} carries {len(ticket.blocks)} "
+                    f"blocks for pos={ticket.pos} (want {n_blocks})")
+            spec = self.kv.leaf_spec()
+            for blk, data in enumerate(ticket.blocks):
+                if set(data) != set(spec):
+                    raise MigrationRefused(
+                        f"ticket {ticket.rid} block {blk}: leaves "
+                        f"{sorted(data)} != spec {sorted(spec)}")
+                for leaf, (shape, dtype) in spec.items():
+                    arr = data[leaf]
+                    if tuple(arr.shape) != shape or str(arr.dtype) != dtype:
+                        raise MigrationRefused(
+                            f"ticket {ticket.rid} block {blk} leaf "
+                            f"{leaf!r}: {arr.shape}/{arr.dtype} != "
+                            f"{shape}/{dtype}")
+            charged_now = []
+            for blk in range(n_blocks):
+                if self._charge_key_locked((ticket.rid, blk),
+                                           self._kv_lease):
+                    charged_now.append((ticket.rid, blk))
+                else:
+                    for key in charged_now:
+                        self._release_key_locked(key)
+                    raise MigrationRefused(
+                        f"replica {self.name!r} cannot reserve "
+                        f"{n_blocks} blocks for ticket {ticket.rid}: "
+                        "kv lease refused the set")
+            req = Request(ticket.rid, list(ticket.prompt), ticket.max_new,
+                          out=list(ticket.out), state=SWAPPED,
+                          pos=ticket.pos, last=ticket.last,
+                          mirrored=set(range(n_blocks)),
+                          t_submit=ticket.t_submit, t_first=ticket.t_first)
+            for blk, data in enumerate(ticket.blocks):
+                key = (ticket.rid, blk)
+                self.host.put_offload(key, data)
+                self._block_seq[key] = self._seq_counter
+                self._seq_counter += 1
+            self.reqs[ticket.rid] = req
+            self._live.add(ticket.rid)
+            self._swapped.append(ticket.rid)
+            self._next_rid = max(self._next_rid, ticket.rid + 1)
+            self.stats.migrations_in += 1
+            self._wake.notify_all()
 
     def generate(self, prompts: list[list[int]], *, max_new: int = 32,
                  seed: int | None = None) -> list[list[int]]:
@@ -688,7 +972,19 @@ class Engine:
             stream.start()
         try:
             while True:
+                if self.on_step is not None:
+                    # off the lock: the heartbeat table is a leaf lock and
+                    # the callback must never nest inside the engine lock
+                    self.on_step(self)
+                self._pause_evt.wait()
                 with self._lock:
+                    if self._killed or (
+                            self.fault_after_steps is not None
+                            and self.stats.decode_steps
+                            >= self.fault_after_steps):
+                        raise ReplicaKilled(
+                            f"replica {self.name!r} hard-killed after "
+                            f"{self.stats.decode_steps} decode steps")
                     for stream in streams:
                         if stream.error is not None:
                             raise stream.error
@@ -1057,6 +1353,8 @@ class Engine:
                             vocab_size=self.model.cfg.vocab_size)
         req.out.append(tok)
         req.last = tok
+        if req.t_first == 0.0:      # a migrated request keeps its original
+            req.t_first = time.monotonic()   # first-token stamp (ticket)
         self.stats.tokens += 1
         if len(req.out) >= req.max_new or req.pos >= self.cfg.max_len:
             self._finish_locked(req)
@@ -1305,8 +1603,9 @@ class Engine:
                     or self._spill_inflight or self._prefetch_inflight
                     or any(self.reqs[r].inflight for r in self._live))
             if not busy and not self._queue and not self._swapped:
-                states = {r: self.reqs[r].state for r in self._live}
-                raise RuntimeError(f"serving scheduler wedged: {states}")
+                raise RuntimeError(
+                    f"serving scheduler wedged on replica {self.name!r} — "
+                    f"live waits-for graph: {self._waits_for_locked()}")
             if busy:
                 self._idle_spins = 0
             elif self._pool is not None:
@@ -1330,17 +1629,18 @@ class Engine:
                         # blocking edge escaped the model — not an
                         # operational deadlock to shrug at
                         raise LivenessModelError(
-                            "no-progress detector fired on a liveness-"
-                            "certified pool configuration (statically "
-                            "unreachable): the certifier is unsound or "
-                            "the runtime grew a blocking edge outside "
-                            "the model — live waits-for graph: "
-                            f"{waits}")
+                            "no-progress detector fired on replica "
+                            f"{self.name!r} under a liveness-certified "
+                            "pool configuration (statically unreachable): "
+                            "the certifier is unsound or the runtime grew "
+                            "a blocking edge outside the model — live "
+                            f"waits-for graph: {waits}")
                     raise RuntimeError(
-                        "shared-pool deadlock: swapped requests cannot "
-                        "reserve their resume staging, no spillable bytes "
-                        "remain, and no other consumer is releasing any — "
-                        f"live waits-for graph: {waits}")
+                        f"shared-pool deadlock on replica {self.name!r}: "
+                        "swapped requests cannot reserve their resume "
+                        "staging, no spillable bytes remain, and no other "
+                        "consumer is releasing any — live waits-for "
+                        f"graph: {waits}")
             self._wake.wait(timeout=0.1)
         self.stats.stall_time += time.perf_counter() - t0
 

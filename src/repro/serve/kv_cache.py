@@ -80,6 +80,16 @@ class PagedKVCache:
     def token_range(self, blk: int) -> tuple[int, int]:
         return blk * self.block_size, (blk + 1) * self.block_size
 
+    def leaf_spec(self) -> dict[str, tuple[tuple[int, ...], str]]:
+        """Per-leaf (shape, dtype) of ONE block's payload —
+        ``[L, block_size, ...]`` — the wire-format contract an inter-replica
+        migration codec (serve/router.py) validates before any byte lands
+        on the destination. Two replicas serving the same model/config have
+        identical specs; a mismatch means the ticket is not importable."""
+        return {k: ((leaf.shape[0], self.block_size)
+                    + tuple(leaf.shape[3:]), str(leaf.dtype))
+                for k, leaf in self.cache.items()}
+
     @property
     def token_nbytes(self) -> float:
         """Per-token KV bytes (offload-fraction denominator)."""

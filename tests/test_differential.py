@@ -270,6 +270,134 @@ def test_compiled_seams_exercised_on_unbounded_host_plans():
         assert rr.n_compiled > 0, "nothing ran straight-line"
 
 
+# ---------------------------------------------- migration byte-exactness
+# The fleet's inter-replica wire (serve/router.py) reuses the disk tier's
+# spill.log framed-record format. This lane proves the codec is a bit-exact
+# round trip over adversarial KV payloads — every dtype/shape the cache
+# families produce, including blocks whose bytes are resident on the DISK
+# tier at export time (read back through the spill.log frame, then framed
+# again for the wire).
+
+_KV_DTYPES = ("float32", "float16", "bfloat16", "int8", "int32")
+
+
+def _random_kv_ticket(rng, *, rid):
+    """A migration ticket over a randomized but internally consistent leaf
+    spec: every block carries the same leaves/shapes/dtypes, like a real
+    ``PagedKVCache.leaf_spec`` contract."""
+    from repro.serve import MigrationTicket
+    import jax.numpy as jnp
+    block = rng.choice((2, 4, 8))
+    spec = {}
+    for j in range(rng.randint(1, 4)):
+        shape = (rng.randint(1, 3), block) + tuple(
+            rng.randint(1, 5) for _ in range(rng.randint(0, 2)))
+        spec[f"leaf{j}"] = (shape, rng.choice(_KV_DTYPES))
+    np_rng = np.random.default_rng(rng.randrange(2**31))
+
+    def draw(shape, dtype):
+        raw = np_rng.integers(-120, 120, size=shape)
+        if dtype == "bfloat16":       # not a numpy dtype: go through jax
+            return np.asarray(jnp.asarray(raw, dtype=jnp.bfloat16))
+        return raw.astype(dtype)
+
+    n_blocks = rng.randint(1, 5)
+    blocks = [{k: draw(shape, dt) for k, (shape, dt) in spec.items()}
+              for _ in range(n_blocks)]
+    out = [rng.randrange(100) for _ in range(rng.randint(0, 6))]
+    return MigrationTicket(
+        rid=rid, prompt=[rng.randrange(100) for _ in range(rng.randint(1, 9))],
+        out=out, max_new=len(out) + rng.randint(1, 8),
+        pos=n_blocks * block, last=out[-1] if out else 0,
+        block_size=block, t_submit=0.125, t_first=0.25, blocks=blocks)
+
+
+def _assert_ticket_bit_exact(got, want):
+    from repro.serve import MigrationTicket
+    assert isinstance(got, MigrationTicket)
+    for f in ("rid", "prompt", "out", "max_new", "pos", "last",
+              "block_size", "t_submit", "t_first"):
+        assert getattr(got, f) == getattr(want, f), f
+    assert len(got.blocks) == len(want.blocks)
+    for g, w in zip(got.blocks, want.blocks):
+        assert set(g) == set(w)
+        for k in w:
+            a, b = g[k], np.ascontiguousarray(w[k])
+            assert str(a.dtype) == str(b.dtype) and a.shape == b.shape
+            assert a.tobytes() == b.tobytes(), f"leaf {k} bytes diverged"
+
+
+def test_migration_codec_roundtrip_bit_exact():
+    """Pinned-seed sweep: serialize → decode restores every KV block
+    byte-identical across the cache dtypes (incl. bfloat16/int8 scales)."""
+    from repro.serve import decode_ticket, encode_ticket
+    for seed in range(24):
+        rng = pyrandom.Random(4000 + seed)
+        want = _random_kv_ticket(rng, rid=seed)
+        _assert_ticket_bit_exact(decode_ticket(encode_ticket(want)), want)
+    # cold tickets (no payload) survive the wire too
+    from repro.serve import MigrationTicket
+    cold = MigrationTicket(rid=9, prompt=[1], out=[2, 3], max_new=5, pos=0,
+                           last=3, block_size=4)
+    got = decode_ticket(encode_ticket(cold))
+    assert got.blocks is None and got.out == [2, 3]
+
+
+def test_migration_roundtrip_through_disk_tier():
+    """The ship-from-disk path: KV blocks forced down to the disk tier
+    (spill.log framed records), read back via ``peek_offload`` with no
+    restaging, and shipped — the decoded payload must match the original
+    arrays bit-exactly even though the bytes crossed the frame twice."""
+    from repro.core.stores import TieredStore
+    from repro.serve import decode_ticket, encode_ticket
+    for seed in range(6):
+        rng = pyrandom.Random(5000 + seed)
+        want = _random_kv_ticket(rng, rid=seed)
+        store = TieredStore({}, host_capacity=1, auto_spill=True)
+        try:
+            originals = [{k: np.ascontiguousarray(v).copy()
+                          for k, v in blk.items()}
+                         for blk in want.blocks]
+            for blk_i, blk in enumerate(want.blocks):
+                store.put_offload((want.rid, blk_i), blk)
+                store.spill((want.rid, blk_i))    # force disk residency
+            # every block's bytes went through spill.log and left the host
+            assert store.disk.write_bytes > 0
+            assert all(store.tier_of((want.rid, b)) == "disk"
+                       for b in range(len(want.blocks)))
+            # the disk tier restores extended dtypes (bfloat16) as raw
+            # void words; relabel from the known spec before shipping,
+            # exactly as Engine._warm_payload_locked does at export
+            peeked = [_relabel(store.peek_offload((want.rid, b)), orig)
+                      for b, orig in enumerate(originals)]
+            shipped = dataclasses_replace_blocks(want, peeked)
+            assert all(b is not None for b in shipped.blocks)
+            got = decode_ticket(encode_ticket(shipped))
+            shipped_ref = dataclasses_replace_blocks(want, originals)
+            _assert_ticket_bit_exact(got, shipped_ref)
+        finally:
+            store.close()
+
+
+def dataclasses_replace_blocks(t, blocks):
+    import dataclasses as _dc
+    return _dc.replace(t, blocks=blocks)
+
+
+def _relabel(block, reference):
+    """View void-typed disk reads back to their true dtypes (a relabel,
+    never a cast — the bytes are already exact)."""
+    out = {}
+    for k, v in block.items():
+        arr = np.asarray(v)
+        want = np.asarray(reference[k]).dtype
+        if arr.dtype != want and arr.dtype.kind == "V" \
+                and arr.dtype.itemsize == want.itemsize:
+            arr = arr.view(want)
+        out[k] = arr
+    return out
+
+
 # ------------------------------------------------------------- slow lane
 @pytest.mark.slow
 def test_fuzz_hypothesis_differential():
@@ -291,5 +419,47 @@ def test_fuzz_hypothesis_differential():
             disk_cap = None       # an unbounded host never spills to disk
         check_case(tg, seed, host_cap, disk_cap,
                    policies=("random", "critical-path"))
+
+    inner()
+
+
+@pytest.mark.slow
+def test_fuzz_hypothesis_migration_codec():
+    """Nightly widening of the migration byte-exactness lane: generated
+    leaf specs, dtypes, and disk-tier residency — serialize → ship →
+    restore stays bit-exact everywhere."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import HealthCheck, given, settings, strategies as st
+    from repro.core.stores import TieredStore
+    from repro.serve import decode_ticket, encode_ticket
+
+    max_examples = int(os.environ.get("FUZZ_EXAMPLES", "25"))
+
+    @settings(max_examples=max_examples, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(seed=st.integers(0, 2**16), via_disk=st.booleans())
+    def inner(seed, via_disk):
+        rng = pyrandom.Random(seed)
+        want = _random_kv_ticket(rng, rid=seed)
+        if via_disk:
+            store = TieredStore({}, host_capacity=1, auto_spill=True)
+            try:
+                originals = [{k: np.ascontiguousarray(v).copy()
+                              for k, v in blk.items()}
+                             for blk in want.blocks]
+                for i, blk in enumerate(want.blocks):
+                    store.put_offload((want.rid, i), blk)
+                    store.spill((want.rid, i))
+                shipped = dataclasses_replace_blocks(
+                    want, [_relabel(store.peek_offload((want.rid, b)), o)
+                           for b, o in enumerate(originals)])
+                got = decode_ticket(encode_ticket(shipped))
+                _assert_ticket_bit_exact(
+                    got, dataclasses_replace_blocks(want, originals))
+            finally:
+                store.close()
+        else:
+            _assert_ticket_bit_exact(decode_ticket(encode_ticket(want)),
+                                     want)
 
     inner()

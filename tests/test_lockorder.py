@@ -128,6 +128,50 @@ def test_wait_reacquire_records_no_false_cycle():
     lockcheck.assert_acyclic()
 
 
+def test_fleet_traffic_records_documented_orientation():
+    """Router↔Supervisor↔Engine nesting under real fleet traffic
+    (DESIGN.md §16): a 2-replica router run with a mid-decode kill takes
+    every fleet lock class on real threads — admission under the router
+    lock, heartbeats from run loops, NIC delivery into an engine, drain.
+    The documented orientation (Router → ServeEngine, with Heartbeat and
+    NicStream as leaves) must be recorded, never its inversion; the
+    autouse sanitizer re-asserts acyclicity at teardown."""
+    import jax
+    from repro.configs import get_arch, reduced
+    from repro.launch.mesh import FleetTopology
+    from repro.models import build_model
+    from repro.serve import Router, ServeConfig
+
+    model = build_model(reduced(get_arch("olmo-1b")))
+    params = model.init(jax.random.PRNGKey(0))
+    cfg = ServeConfig(max_len=64, batch_buckets=(1, 2), block_size=16,
+                      offload=True, hot_window=16, preempt_every=2, seed=3)
+    topo = FleetTopology(n_replicas=2, heartbeat_timeout_s=60.0,
+                         host_bytes_per_replica=64 << 20)
+    with Router(model, params, cfg, topology=topo,
+                placement="least-loaded") as router:
+        # armed before any submit so the kill (and its drain edges) fire
+        # deterministically at step 2 on every schedule
+        router.replicas[0].engine.fault_after_steps = 2
+        rids = [router.submit([1 + i, 2, 3, 4, 5], max_new=8)
+                for i in range(5)]
+        router.wait(rids, timeout=300)
+        for r in rids:
+            assert router.done(r)
+    g = lockcheck.edges()
+    # admission/dispatch nests the engine under the router lock — the one
+    # documented compound hold; the inversion must never be recorded
+    assert "ServeEngine" in g.get("Router", set()), g
+    assert "Router" not in g.get("ServeEngine", set()), g
+    # Heartbeat and NicStream are leaves: they never wrap a fleet lock
+    for leaf in ("Heartbeat", "NicStream"):
+        assert not (g.get(leaf, set())
+                    & {"Router", "ServeEngine", "HostPool"}), (leaf, g)
+    # pooled replicas charge their leases under the engine lock
+    assert "HostPool" in g.get("ServeEngine", set()), g
+    lockcheck.assert_acyclic()
+
+
 def test_wait_reacquire_restores_stack_position():
     """After a wait resumes, later acquisitions must still see the
     waited-on lock as *held* (it is) and in its original nesting slot:

@@ -13,12 +13,18 @@ Also rides along:
 * byte-exactness of the compiled backend against the dataflow oracle
   under all four dispatch policies (the acceptance gate — the full sweep
   lives in ``tests/test_differential.py``);
+* a mixed-plan seam gate (DESIGN.md §17): a plan with real nondet
+  windows, whose small seams the compiler stamps onto the thread-free
+  inline executor — its per-vertex cost must stay within
+  ``SEAM_TARGET_RATIO`` of the all-static plan's (seams priced at heap
+  pops, not OS wakeups);
 * a fused-DMA ablation through the discrete-event simulator: the same
   plan priced with and without ``CompiledPlan.fused_map`` (non-head batch
   members skip the fixed submission latency).
 
-The ≥2x dispatch-overhead ratio is asserted: this file failing in the
-bench-smoke lane *is* the perf regression signal.
+The ≥2x dispatch-overhead ratio and the ≤1.3x seam-overhead ratio are
+asserted: this file failing in the bench-smoke lane *is* the perf
+regression signal.
 """
 from __future__ import annotations
 
@@ -37,6 +43,8 @@ from .common import P100_SERVER, emit
 SHAPE = (4, 4)
 MIN_VERTICES = 500
 TARGET_RATIO = 2.0
+# mixed-plan gate: per-vertex cost with inline seams vs all-static
+SEAM_TARGET_RATIO = 1.3
 
 
 def braided_workload(n_ops: int, dist: int = 17) -> TaskGraph:
@@ -89,6 +97,23 @@ def best_of(fn, repeats: int) -> float:
     return best
 
 
+def paired_times(fn_a, fn_b, repeats: int) -> list[tuple[float, float]]:
+    """Time two workloads over interleaved A,B,A,B… rounds and return the
+    per-round (t_a, t_b) pairs: within a round both sides see the same
+    machine conditions, so a per-round ratio cancels common-mode noise
+    (allocator state, CPU frequency, background load) that back-to-back
+    separate loops would not."""
+    out: list[tuple[float, float]] = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn_a()
+        t_a = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        fn_b()
+        out.append((t_a, time.perf_counter() - t0))
+    return out
+
+
 def run(quick=False) -> list[dict]:
     tg, res = build_tiered_plan()
     mg = res.memgraph
@@ -135,13 +160,12 @@ def run(quick=False) -> list[dict]:
                      n_interpreted=rr.n_interpreted,
                      ok=bool(ratio >= TARGET_RATIO)))
 
-    # -- seam-handoff cost on a mixed plan (informative, unasserted) ----
+    # -- seam-handoff cost on a mixed plan (the §17 inline gate) --------
     # dist=31 overlaps the tiering chains: transfer completion order
-    # legitimately matters, so the compiler keeps nondet regions and the
-    # runtime hands off to the interpreter fleet at their seams. The
-    # threaded fallback pays OS wakeups per vertex — this row prices the
-    # seam so regressions in segmentation (static share shrinking) are
-    # visible even while the primary ratio holds.
+    # legitimately matters, so the compiler keeps nondet regions. Small
+    # seams are stamped onto the thread-free inline executor — a seam
+    # vertex must cost heap pops, not OS wakeups, so the mixed plan's
+    # per-vertex cost is gated against the all-static plan's.
     tg_mix, res_mix = build_tiered_plan(dist=31)
     n_mix = len(res_mix.memgraph.vertices)
     inputs_mix = {t: rng.integers(-3, 4, v.out.shape).astype(np.float64)
@@ -158,17 +182,36 @@ def run(quick=False) -> list[dict]:
     rr_m = comp_m.run(inputs_mix)
     for k in ref_mix:
         np.testing.assert_array_equal(rr_m.outputs[k], ref_mix[k])
+    assert rr_m.n_interpreted > 0, "mixed plan opened no nondet seams"
+    assert rr_m.n_inline > 0, \
+        "no seam ran inline — backend stamping regressed"
     t_im = best_of(lambda: interp_m.run(inputs_mix), repeats)
-    t_cm = best_of(lambda: comp_m.run(inputs_mix), repeats)
+    # the gate is a RATIO of two ~10ms measurements. Time them as
+    # interleaved pairs and gate on the *median per-round* ratio: a
+    # round's two runs share machine conditions (common-mode noise
+    # cancels), and the median rejects one-sided spikes — a disk flush
+    # landing on just one run pollutes some rounds but not most, while a
+    # genuine wakeup regression inflates every round.
+    pairs = paired_times(lambda: comp.run(inputs),
+                         lambda: comp_m.run(inputs_mix),
+                         4 * repeats + 1)
+    t_static = min(a for a, _ in pairs)
+    t_cm = min(b for _, b in pairs)
+    ratios = sorted(b / a for a, b in pairs)
+    seam_ratio = ratios[len(ratios) // 2] * (n / n_mix)
     emit("compiled/mixed_plan_per_vertex", t_cm / n_mix * 1e6,
          f"n={n_mix} static={rr_m.n_compiled} seam={rr_m.n_interpreted} "
-         f"interp={t_im / n_mix * 1e6:.1f}us ratio={t_im / t_cm:.2f}x")
+         f"(inline={rr_m.n_inline} threaded={rr_m.n_threaded}) "
+         f"vs-static={seam_ratio:.2f}x (target <= {SEAM_TARGET_RATIO}x)")
     rows.append(dict(metric="mixed_plan_dispatch", n_vertices=n_mix,
                      interpreted_us_per_vertex=t_im / n_mix * 1e6,
                      compiled_us_per_vertex=t_cm / n_mix * 1e6,
                      speedup=t_im / t_cm, n_compiled=rr_m.n_compiled,
                      n_interpreted=rr_m.n_interpreted,
-                     ok=bool(t_cm <= t_im)))
+                     n_inline=rr_m.n_inline, n_threaded=rr_m.n_threaded,
+                     seam_overhead_vs_static=seam_ratio,
+                     ok=bool(seam_ratio <= SEAM_TARGET_RATIO
+                             and rr_m.n_inline > 0)))
 
     # -- fused-DMA ablation (simulator pricing) -------------------------
     plan = lower(res, policy="critical-path")
@@ -189,6 +232,10 @@ def run(quick=False) -> list[dict]:
     assert ratio >= TARGET_RATIO, (
         f"compiled dispatch overhead only {ratio:.2f}x lower than "
         f"interpreted (target {TARGET_RATIO}x) on {n} vertices")
+    assert seam_ratio <= SEAM_TARGET_RATIO, (
+        f"mixed-plan per-vertex cost {seam_ratio:.2f}x the all-static "
+        f"plan's (target <= {SEAM_TARGET_RATIO}x) — inline seams are "
+        f"paying wakeups again")
     assert plan.batches, "tiered plan produced no fused DMA batches"
     return rows
 

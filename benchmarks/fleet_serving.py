@@ -14,7 +14,7 @@ Three questions, matching the fleet transplant of the paper's claims:
 3. **When does warm migration beat cold re-prefill?** The simulator's
    crossover sweep (:func:`repro.core.simulate.migration_crossover`)
    prices both recovery paths per request size; the rows land in the
-   BENCH_9.json artifact as the router's eviction-choice table.
+   BENCH_10.json artifact as the router's eviction-choice table.
 
 CSV contract: ``name,us_per_call,derived`` via :func:`benchmarks.common.emit`.
 """

@@ -29,7 +29,7 @@ and a traceback, the rest still run, and the process exits nonzero with a
 failure summary — CI sees a single figure regression without it hiding the
 others.
 
-Besides the CSV stream, the harness writes ``BENCH_9.json`` next to the
+Besides the CSV stream, the harness writes ``BENCH_10.json`` next to the
 working directory: one entry per figure with its machine-readable rows
 (benchmarks that return row dicts), its pass/fail status, and the error
 text on failure — the artifact CI jobs archive and diff across commits.
@@ -46,7 +46,7 @@ import traceback
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-BENCH_JSON = "BENCH_9.json"
+BENCH_JSON = "BENCH_10.json"
 
 
 def _roofline() -> None:

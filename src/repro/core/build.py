@@ -141,6 +141,11 @@ class BuildConfig:
     # regions whose order legitimately depends on runtime transfer
     # completion fall back to the interpreter at marked seam vertices.
     backend: str = "interpreted"
+    # seam-backend stamping bound (DESIGN.md §17): a compiled plan's
+    # nondet region at most this long (and certified blocking-free) runs
+    # on the thread-free inline executor instead of the threaded fleet.
+    # None defers to compile.DEFAULT_SEAM_THRESHOLD.
+    seam_threshold: int | None = None
 
     def size_of(self, v: TaskVertex) -> int:
         return (self.size_fn or (lambda u: u.out.nbytes))(v)
@@ -199,6 +204,9 @@ class BuildResult:
     # TurnipRuntime.run() consults this to pick the compiled lowering
     # path over vertex-by-vertex interpretation
     backend: str = "interpreted"
+    # inline-stamping bound carried from BuildConfig.seam_threshold
+    # (DESIGN.md §17); None = compile.DEFAULT_SEAM_THRESHOLD
+    seam_threshold: int | None = None
 
     def final_value_location(self, tid: int) -> tuple[str, int]:
         """Where the runtime finds a terminal output: ('host', mid-or-tid) or
@@ -260,6 +268,7 @@ def build_memgraph(
         if not res.liveness_certificate.ok:
             raise ProgressCertificationError(res.liveness_certificate)
     res.backend = config.backend
+    res.seam_threshold = config.seam_threshold
     return res
 
 

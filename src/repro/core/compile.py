@@ -35,6 +35,16 @@ chosen :class:`~repro.core.dispatch.DispatchPolicy` into a
   ``static`` region executed straight-line. Segmentation is *never* a
   correctness decision — the certificate proved all orders safe — it
   preserves the paper's performance nondeterminacy where it can matter;
+* **seam-backend stamping** (DESIGN.md §17) — every nondet region is
+  stamped with the executor backend its seam should run on: ``inline``
+  (the thread-free ready-heap executor on the calling thread) when the
+  region is small (``seam_threshold``, ``BuildConfig`` knob), narrow
+  (ready width ≤ :data:`MAX_INLINE_WIDTH`), and certified stall-free on
+  the caller (``liveness.inline_seam_certified`` — an ``ok`` §14
+  certificate, or no pool/disk admission ops at all); ``threaded`` (the
+  persistent engine-stream fleet) otherwise. The runtime can force
+  either backend (``seam_backend``) — stamping is a performance hint
+  with a certified safety floor, never a correctness decision;
 * **fused DMA batches** — maximal runs of adjacent same-(device, engine)
   DMA instructions inside a static region are fused into one batched
   submission: one enqueue, one completion wait. Legality is structural:
@@ -46,6 +56,9 @@ chosen :class:`~repro.core.dispatch.DispatchPolicy` into a
   certificate (DESIGN.md §14): a fused disk submission holds several
   credit admissions behind a single completion wait, which is only
   known stall-free because the liveness proof bounded every admission.
+  Under the same certificate the H2D/D2H *engine pair* of one device
+  fuses too: both directions drain through one DMA controller, and the
+  liveness proof bounds every admission the paired batch can hold.
 
 Plans whose soundness certificate is missing or not ``ok`` lower to a
 single whole-plan ``nondet`` region: the interpreter keeps full freedom
@@ -67,9 +80,11 @@ import dataclasses
 from typing import TYPE_CHECKING, Sequence
 
 from .analyze import certify
-from .dispatch import (COMPUTE, DISK, TRANSFER_KINDS, DispatchPolicy,
-                       engine_key, engine_of, get_policy)
-from .memgraph import MemGraph
+from .dispatch import (COMPUTE, D2H, DISK, H2D, TRANSFER_KINDS,
+                       DispatchPolicy, engine_key, engine_of, get_policy)
+from .executor import INLINE, THREADED
+from .liveness import LivenessCertificate, inline_seam_certified
+from .memgraph import MemGraph, MemOp
 
 if TYPE_CHECKING:                      # no import cycle at runtime
     from .build import BuildResult
@@ -87,6 +102,15 @@ DEFAULT_MERGE_GAP = 3
 # fused submissions are bounded so one batch's completion wait cannot
 # defer an unboundedly long tail of downstream work
 MAX_FUSE = 16
+
+# seam-backend stamping (DESIGN.md §17): a nondet region at most this
+# long runs on the thread-free inline executor — overridable per plan via
+# BuildConfig.seam_threshold. Above it (or when the region's ready sets
+# grow wider than MAX_INLINE_WIDTH — enough concurrent freedom that real
+# streams could genuinely overlap), the threaded fleet keeps the paper's
+# parallel event loop.
+DEFAULT_SEAM_THRESHOLD = 64
+MAX_INLINE_WIDTH = 8
 
 
 class PlanCompileError(RuntimeError):
@@ -116,6 +140,10 @@ class Region:
     kind: str                # STATIC | NONDET
     start: int
     end: int
+    # NONDET regions carry the seam backend the compiler chose for them
+    # (DESIGN.md §17): "inline" for small certified seams, "threaded"
+    # for large windows. STATIC regions leave it "".
+    backend: str = ""
 
     def __len__(self) -> int:
         return self.end - self.start
@@ -138,6 +166,9 @@ class CompiledPlan:
     policy_name: str
     certified: bool                    # soundness certificate was ok
     liveness_certified: bool           # liveness certificate was ok
+    # the inline-stamping size bound this plan was lowered under
+    # (DESIGN.md §17) — verify() re-checks every inline region against it
+    seam_threshold: int = DEFAULT_SEAM_THRESHOLD
 
     @property
     def n_vertices(self) -> int:
@@ -150,6 +181,16 @@ class CompiledPlan:
     @property
     def n_nondet(self) -> int:
         return sum(len(r) for r in self.regions if r.kind == NONDET)
+
+    @property
+    def n_inline(self) -> int:
+        return sum(len(r) for r in self.regions
+                   if r.kind == NONDET and r.backend == INLINE)
+
+    @property
+    def n_threaded(self) -> int:
+        return sum(len(r) for r in self.regions
+                   if r.kind == NONDET and r.backend == THREADED)
 
     @property
     def seams(self) -> tuple[int, ...]:
@@ -176,7 +217,8 @@ class CompiledPlan:
 
     def summary(self) -> str:
         return (f"compiled[{self.policy_name}]: {self.n_vertices} instrs, "
-                f"{self.n_static} static / {self.n_nondet} nondet over "
+                f"{self.n_static} static / {self.n_nondet} nondet "
+                f"({self.n_inline} inline, {self.n_threaded} threaded) over "
                 f"{len(self.regions)} region(s), {len(self.batches)} fused "
                 f"DMA batch(es), certified={self.certified}")
 
@@ -190,9 +232,16 @@ class CompiledPlan:
           ``ready_tick <= pos`` (the order is topological — position
           order implies dependency order);
         * regions partition ``[0, n)`` contiguously;
+        * backend stamps: every nondet region carries ``inline`` or
+          ``threaded``; static regions carry none; an inline region fits
+          ``seam_threshold``, and — when the plan is not
+          liveness-certified — contains no admission vertex (OFFLOAD /
+          SPILL / LOAD), the vacuous face of the §17 soundness argument;
         * every batch is a contiguous span of one static region, all
-          members share one (device, engine) DMA stream, and every
-          member's out-of-batch predecessor precedes the batch head.
+          members share one (device, engine) DMA stream — or, on a
+          liveness-certified plan, one device's H2D/D2H *engine pair* —
+          and every member's out-of-batch predecessor precedes the
+          batch head.
         """
         n = len(self.order)
         if sorted(self.order) != sorted(mg.vertices):
@@ -215,6 +264,26 @@ class CompiledPlan:
                 raise PlanCompileError(f"regions do not partition the "
                                        f"order at {at}: {r}")
             at = r.end
+            if r.kind == NONDET:
+                if r.backend not in (INLINE, THREADED):
+                    raise PlanCompileError(
+                        f"nondet region {r} has no seam-backend stamp")
+                if r.backend == INLINE:
+                    if len(r) > self.seam_threshold:
+                        raise PlanCompileError(
+                            f"inline region {r} exceeds seam_threshold "
+                            f"{self.seam_threshold}")
+                    if not self.liveness_certified and any(
+                            mg.vertices[self.order[i]].op in
+                            (MemOp.OFFLOAD, MemOp.SPILL, MemOp.LOAD)
+                            for i in range(r.start, r.end)):
+                        raise PlanCompileError(
+                            f"inline region {r} contains admission "
+                            f"vertices on an uncertified-liveness plan — "
+                            f"the calling thread could block (§17)")
+            elif r.backend:
+                raise PlanCompileError(
+                    f"static region {r} carries a seam-backend stamp")
         if self.regions and at != n:
             raise PlanCompileError(f"regions end at {at}, order has {n}")
         region_of = [r for r in self.regions for _ in range(len(r))]
@@ -231,12 +300,20 @@ class CompiledPlan:
                 raise PlanCompileError(
                     f"batch ({a},{b}) crosses a region boundary or sits "
                     f"in a nondet region")
-            for i in range(a, b):
-                v = mg.vertices[self.order[i]]
-                if engine_key(v) != key:
+            kinds = {engine_key(mg.vertices[self.order[i]])
+                     for i in range(a, b)}
+            if len(kinds) > 1:
+                # one legal mixture: the H2D/D2H engine pair of one
+                # device, and only on a liveness-certified plan (the
+                # paired submission holds both DMA lanes behind one
+                # completion wait — known stall-free only under §14)
+                if not ({k for _, k in kinds} <= {H2D, D2H}
+                        and len({d for d, _ in kinds}) == 1
+                        and self.liveness_certified):
                     raise PlanCompileError(
-                        f"batch ({a},{b}) mixes streams: {key} vs "
-                        f"{engine_key(v)}")
+                        f"batch ({a},{b}) mixes streams: "
+                        f"{sorted(kinds)}")
+            for i in range(a, b):
                 for p in mg.preds[self.order[i]]:
                     if a <= pos[p] < i:
                         continue       # in-batch: stream FIFO preserves it
@@ -341,23 +418,36 @@ def _fuse(mg: MemGraph, order: list[int], regions: list[Region], *,
           liveness_ok: bool, max_fuse: int) -> list[tuple[int, int]]:
     """Maximal runs of adjacent same-(device, engine) DMA instructions
     inside static regions; see the module docstring for the legality
-    argument. Disk-engine runs require the liveness certificate."""
+    argument. Disk-engine runs require the liveness certificate — and so
+    does fusing *across* one device's H2D/D2H engine pair (a paired
+    submission holds both DMA lanes of the device behind a single
+    completion wait; §14's proof is what makes that wait known
+    stall-free). In-batch order is preserved either way: a fused span
+    issues back-to-back in position order."""
+
+    def fuse_key(m: int) -> tuple[int, str] | None:
+        d, eng = engine_key(mg.vertices[m])
+        if eng not in TRANSFER_KINDS:
+            return None
+        if eng == DISK and not liveness_ok:
+            return None
+        if liveness_ok and eng in (H2D, D2H):
+            return (d, "h2d|d2h")      # the device's DMA engine pair
+        return (d, eng)
+
     batches: list[tuple[int, int]] = []
     for r in regions:
         if r.kind != STATIC:
             continue
         i = r.start
         while i < r.end:
-            v = mg.vertices[order[i]]
-            key = engine_key(v)
-            if key[1] not in TRANSFER_KINDS or \
-                    (key[1] == DISK and not liveness_ok):
+            key = fuse_key(order[i])
+            if key is None:
                 i += 1
                 continue
             j = i + 1
             while j < r.end and j - i < max_fuse:
-                u = mg.vertices[order[j]]
-                if engine_key(u) != key:
+                if fuse_key(order[j]) != key:
                     break
                 j += 1
             if j - i >= 2:
@@ -366,12 +456,58 @@ def _fuse(mg: MemGraph, order: list[int], regions: list[Region], *,
     return batches
 
 
+def _ready_width(mg: MemGraph, mids: Sequence[int]) -> int:
+    """The widest simultaneously-ready set a seam exposes, replaying its
+    members in linearization order with out-of-seam predecessors treated
+    as complete — the concurrency the threaded fleet could actually
+    exploit. A seam this narrow (≤ MAX_INLINE_WIDTH) gains little from
+    real streams, so it is a candidate for the inline backend."""
+    subset = set(mids)
+    remaining = {m: sum(1 for p in mg.preds[m] if p in subset)
+                 for m in mids}
+    ready = {m for m, r in remaining.items() if r == 0}
+    width = len(ready)
+    for m in mids:
+        ready.discard(m)
+        for s in mg.succs[m]:
+            if s in remaining:
+                remaining[s] -= 1
+                if remaining[s] == 0:
+                    ready.add(s)
+        width = max(width, len(ready))
+    return width
+
+
+def _stamp_backends(mg: MemGraph, order: list[int],
+                    regions: list[Region], *, seam_threshold: int,
+                    lcert: LivenessCertificate | None) -> list[Region]:
+    """Stamp every NONDET region with its seam backend (DESIGN.md §17):
+    ``inline`` when the region is small (≤ ``seam_threshold``), narrow
+    (ready width ≤ MAX_INLINE_WIDTH), and the no-blocking-waits claim is
+    certified (:func:`~repro.core.liveness.inline_seam_certified`) —
+    otherwise it demotes to ``threaded``."""
+    out: list[Region] = []
+    for r in regions:
+        if r.kind != NONDET:
+            out.append(r)
+            continue
+        mids = order[r.start:r.end]
+        backend = THREADED
+        if (len(r) <= seam_threshold
+                and _ready_width(mg, mids) <= MAX_INLINE_WIDTH
+                and inline_seam_certified(mg, mids, lcert)):
+            backend = INLINE
+        out.append(dataclasses.replace(r, backend=backend))
+    return out
+
+
 def lower(res: "BuildResult", *,
           policy: str | DispatchPolicy | None = None,
           seed: int | None = None,
           n_streams: int = 5, n_transfer_streams: int = 1,
           merge_gap: int = DEFAULT_MERGE_GAP,
-          max_fuse: int = MAX_FUSE) -> CompiledPlan:
+          max_fuse: int = MAX_FUSE,
+          seam_threshold: int | None = None) -> CompiledPlan:
     """Lower ``res`` under ``policy`` into a :class:`CompiledPlan`.
 
     Uses ``res.certificate`` when the build carried one
@@ -380,11 +516,19 @@ def lower(res: "BuildResult", *,
     that lets static regions drop runtime dispatch entirely). A plan
     that cannot be certified lowers to one whole-plan nondet region.
     ``res.liveness_certificate`` (when present and ok) additionally
-    enables fusing disk-engine runs."""
+    enables fusing disk-engine runs and the H2D/D2H pair.
+
+    ``seam_threshold`` bounds inline-backend stamping (DESIGN.md §17);
+    ``None`` defers to ``res.seam_threshold`` (``BuildConfig``'s knob)
+    and then :data:`DEFAULT_SEAM_THRESHOLD`."""
     mg = res.memgraph
     pol = get_policy(policy, seed=seed)
     pol.prepare(mg)
     verts = mg.vertices
+    if seam_threshold is None:
+        seam_threshold = getattr(res, "seam_threshold", None)
+    if seam_threshold is None:
+        seam_threshold = DEFAULT_SEAM_THRESHOLD
 
     order = mg.topo_order(
         key=lambda m: (pol.priority(m), verts[m].seq, m))
@@ -404,6 +548,8 @@ def lower(res: "BuildResult", *,
         regions = [Region(NONDET, 0, len(order))]
     else:
         regions = []
+    regions = _stamp_backends(mg, order, regions,
+                              seam_threshold=seam_threshold, lcert=lcert)
     batches = _fuse(mg, order, regions, liveness_ok=liveness_ok,
                     max_fuse=max_fuse)
     head_of: dict[int, int] = {}
@@ -429,7 +575,8 @@ def lower(res: "BuildResult", *,
 
     plan = CompiledPlan(order=order, instrs=instrs, regions=regions,
                         batches=batches, policy_name=pol.name,
-                        certified=certified, liveness_certified=liveness_ok)
+                        certified=certified, liveness_certified=liveness_ok,
+                        seam_threshold=seam_threshold)
     plan.verify(mg)
     return plan
 
@@ -463,6 +610,7 @@ def main(argv: Sequence[str] | None = None) -> int:
     disk_caps = (None, 0, 2, 4, 50)
     n_ok = n_oom = failed = 0
     total_static = total_nondet = total_batches = 0
+    total_inline = total_threaded = 0
     for seed in range(args.seeds):
         rng = pyrandom.Random(1000 + seed)
         tg = _corpus_taskgraph(rng)
@@ -504,25 +652,42 @@ def main(argv: Sequence[str] | None = None) -> int:
                     if not np.array_equal(out[k], ref[k]):
                         raise PlanCompileError(
                             f"linearization replay diverged on output {k}")
+                # every nondet region must carry a seam-backend stamp
+                # (DESIGN.md §17); plan.verify() enforces the inline
+                # soundness conditions on top
+                for r in plan.regions:
+                    if r.kind == NONDET and r.backend not in (INLINE,
+                                                              THREADED):
+                        raise PlanCompileError(
+                            f"unstamped nondet region {r}")
                 total_static += plan.n_static
                 total_nondet += plan.n_nondet
+                total_inline += plan.n_inline
+                total_threaded += plan.n_threaded
                 total_batches += len(plan.batches)
             except Exception as e:
                 print(f"seed {seed}/{pol_name}: FAILED ({e})")
                 bad = True
-        # the full compiled executor (straight-line + interpreter seams)
-        try:
-            rr = TurnipRuntime(tg, res, mode="nondet",
-                               policy="critical-path", seed=seed).run(inputs)
-            for k in ref:
-                if not np.array_equal(rr.outputs[k], ref[k]):
-                    raise PlanCompileError(
-                        f"compiled executor diverged on output {k}")
-            assert rr.n_compiled + rr.n_interpreted == \
-                len(res.memgraph.vertices)
-        except Exception as e:
-            print(f"seed {seed}/executor: FAILED ({e})")
-            bad = True
+        # the full compiled executor (straight-line + seam backends),
+        # under the compiler's stamps and with every seam forced inline
+        for seam_backend in ("auto", INLINE):
+            try:
+                rr = TurnipRuntime(tg, res, mode="nondet",
+                                   policy="critical-path", seed=seed,
+                                   seam_backend=seam_backend).run(inputs)
+                for k in ref:
+                    if not np.array_equal(rr.outputs[k], ref[k]):
+                        raise PlanCompileError(
+                            f"compiled executor diverged on output {k}")
+                assert rr.n_compiled + rr.n_interpreted == \
+                    len(res.memgraph.vertices)
+                assert rr.n_inline + rr.n_threaded == rr.n_interpreted
+                if seam_backend == INLINE:
+                    assert rr.n_threaded == 0
+            except Exception as e:
+                print(f"seed {seed}/executor[{seam_backend}]: "
+                      f"FAILED ({e})")
+                bad = True
         if bad:
             failed += 1
         else:
@@ -531,7 +696,8 @@ def main(argv: Sequence[str] | None = None) -> int:
                 print(f"seed {seed}: ok ({plan.summary()})")
     print(f"corpus: {n_ok} plans lowered + replayed byte-exactly, "
           f"{n_oom} rejected at compile time, {failed} failed; "
-          f"{total_static} static / {total_nondet} nondet instrs, "
+          f"{total_static} static / {total_nondet} nondet instrs "
+          f"({total_inline} inline, {total_threaded} threaded), "
           f"{total_batches} fused batches across all policies")
     return 1 if failed else 0
 

@@ -1,0 +1,565 @@
+"""The unified executor core (DESIGN.md §17; ROADMAP item 5).
+
+One scheduling kernel, three interchangeable backends. TURNIP's thesis is
+that the runtime keeps *order freedom* exactly where transfer timing is
+unknowable — but freedom must not be priced in OS wakeups: a 36-vertex
+nondet seam should not pay a thread fleet's condition-variable round
+trips when one caller thread could schedule the whole window. So the
+scheduling state machine (ready sets, dependency counts, the
+:class:`~repro.core.dispatch.DispatchPolicy` choice among simultaneously
+ready vertices) lives in ONE place — :class:`ReadyKernel` — and the
+*threading model* is chosen per region, the way dispatch policies are
+already chosen per plan:
+
+* :class:`StaticExecutor` — the straight-line walker for certified
+  STATIC regions of a :class:`~repro.core.compile.CompiledPlan`: no heap,
+  no locks; ``ready_tick <= pos`` was proved at lowering time, so
+  position order *is* dependency order (DESIGN.md §15).
+* :class:`ThreadedExecutor` — the persistent engine-stream worker fleet
+  for large nondet windows: real threads per (device, engine-class)
+  stream, condition-variable wakeups on completion events — the paper's
+  event-driven runtime.
+* :class:`InlineExecutor` — a thread-free ready-heap executor for small
+  nondet seams: the same kernel, the same policy choice among ready
+  vertices, the same RaceError/tier semantics, scheduled entirely on the
+  calling thread. Completion events are drained by non-blocking polls of
+  the kernel (in this CPU-model runtime an op's completion is its
+  return, so ``complete()`` *is* the drained event queue) — zero thread
+  wakeups, zero lock round-trips. Soundness of running a seam on the
+  caller is a *certified* property (``liveness.inline_seam_certified``,
+  §14/§17): the compiler only stamps a region ``inline`` when no vertex
+  in it can block the calling thread on a pool/disk admission.
+
+Nondeterminism semantics are unchanged end-to-end: any backend executes
+some dependency-respecting order the policy could have chosen, and the
+plan certifier (§13) proved every such order byte-exact.
+
+The kernel itself is not locked: the inline executor drives it from one
+thread, and the threaded executor wraps every kernel call in its
+scheduler lock (a :func:`lockcheck.make_lock` sanitized lock, so the
+lock-order sanitizer audits it with the store/pool locks).
+
+:func:`select_best` is the kernel's dispatch primitive — "among the
+simultaneously-ready candidates, take the policy minimum" — shared with
+the serving engine's DMA streams (``serve/engine.py``): a serve reload
+policy's pop-time choice among pending transfers routes through the same
+primitive as a MEMGRAPH seam's choice among ready vertices.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import threading
+import time
+from typing import Any, Callable, Sequence, TypeVar
+
+import numpy as np
+
+from . import lockcheck
+from .dispatch import COMPUTE, DispatchPolicy, engine_of
+from .memgraph import MemGraph, MemOp, MemVertex
+from .ops import get_op
+from .stores import HostStore
+from .taskgraph import TaskGraph
+
+__all__ = ["ExecContext", "ReadyKernel", "InlineExecutor",
+           "ThreadedExecutor", "StaticExecutor", "select_best",
+           "run_vertex", "INLINE", "THREADED"]
+
+# nondet-region backend hints (compile.Region.backend / RunResult counters)
+INLINE = "inline"
+THREADED = "threaded"
+
+_T = TypeVar("_T")
+
+
+def select_best(candidates: Sequence[_T],
+                rank: Callable[[_T], Any]) -> int:
+    """The kernel's dispatch choice, as a primitive: the index of the
+    minimum-``rank`` candidate among the simultaneously-ready set.
+    ``rank`` is evaluated at pop time, so callers with *dynamic*
+    priorities (the serving engine's reload policies) share the exact
+    selection rule the static-priority heaps implement."""
+    best = 0
+    best_rank = rank(candidates[0])
+    for i in range(1, len(candidates)):
+        r = rank(candidates[i])
+        if r < best_rank:
+            best, best_rank = i, r
+    return best
+
+
+# --------------------------------------------------------------------------
+# vertex execution (shared by every backend and the reference interpreter)
+# --------------------------------------------------------------------------
+def _exec_vertex(v: MemVertex, mg: MemGraph, tg: TaskGraph, mem: Any,
+                 host: HostStore) -> None:
+    if v.op == MemOp.INPUT:
+        mem.write(v.loc, host.inputs[v.src_tid])
+    elif v.op in (MemOp.COMPUTE, MemOp.TRANSFER):
+        vals = [mem.read(mg.vertices[m].loc) for m in v.operands]
+        fn = get_op(v.op_name or ("copy" if v.op == MemOp.TRANSFER else ""))
+        out = fn(*vals, **v.params)
+        mem.write(v.loc, np.asarray(out))
+    elif v.op == MemOp.OFFLOAD:
+        val = mem.read(mg.vertices[v.operands[0]].loc)
+        host.put_offload(v.mid, np.array(val, copy=True))
+    elif v.op == MemOp.RELOAD:
+        mem.write(v.loc, host.get_for_reload(v))
+    elif v.op == MemOp.SPILL:
+        # second hop of a tiered eviction (host→disk) — or a free release
+        # of dead bytes. operands[0] is the host-store key.
+        host.spill(v.operands[0], drop=bool(v.params.get("drop")))
+    elif v.op == MemOp.LOAD:
+        host.load(v.operands[0])   # first hop of a two-hop reload
+    elif v.op == MemOp.ALLOC0:
+        spec = tg.vertices[v.src_tid].out
+        mem.write(v.loc, np.zeros(spec.shape, spec.np_dtype))
+    elif v.op == MemOp.ADD_INTO:
+        acc = mem.read(v.loc)
+        val = mem.read(mg.vertices[v.operands[0]].loc)
+        mem.write(v.loc, acc + val)
+    elif v.op == MemOp.JOIN:
+        pass  # completion marker: the accumulator already holds the value
+    else:  # pragma: no cover
+        raise AssertionError(f"unknown op {v.op}")
+
+
+@dataclasses.dataclass
+class ExecContext:
+    """Everything a backend needs to execute vertices of one run: the
+    plan's graphs, the shared memory/store tiers, the dispatch policy,
+    and the run-wide timeline/span accumulators. One context is shared by
+    every backend of a run, so ByteArena extents, TieredStore tier moves,
+    and HostPool lease accounting are exactly the invariants the
+    certifiers assumed — regardless of which backend touches them."""
+
+    mg: MemGraph
+    tg: TaskGraph
+    mem: Any
+    host: HostStore
+    policy: DispatchPolicy
+    mode: str                                    # "nondet" | "fixed"
+    latency: Callable[[MemVertex], float] | None
+    timeline: list[tuple[float, float, int, str, str]]
+    spans: dict[int, tuple[float, float]]
+    t0: float
+    # §B write-protected sum-into: one lock per ADD_INTO lock group
+    locks: dict[tuple[int, int], threading.Lock] = dataclasses.field(
+        default_factory=dict)
+
+    @staticmethod
+    def make(mg: MemGraph, tg: TaskGraph, mem: Any, host: HostStore,
+             policy: DispatchPolicy, mode: str,
+             latency: Callable[[MemVertex], float] | None,
+             t0: float, members: Sequence[int]) -> "ExecContext":
+        locks: dict[tuple[int, int], threading.Lock] = {}
+        for m in members:
+            g = mg.vertices[m].lock_group
+            if g is not None:
+                locks.setdefault(g, threading.Lock())
+        return ExecContext(mg=mg, tg=tg, mem=mem, host=host, policy=policy,
+                           mode=mode, latency=latency, timeline=[],
+                           spans={}, t0=t0, locks=locks)
+
+
+def run_vertex(ctx: ExecContext, m: int) -> None:
+    """Execute one vertex with the run's latency model and ADD_INTO lock
+    discipline, recording its timeline interval. Shared by the inline and
+    threaded backends (the straight-line walker inlines its own cheaper
+    variant: regions execute strictly sequentially, so no lock-group lock
+    is ever needed there)."""
+    v = ctx.mg.vertices[m]
+    t_start = time.perf_counter() - ctx.t0
+    if ctx.latency is not None:
+        d = ctx.latency(v)
+        if d > 0:
+            time.sleep(d)
+    lk = ctx.locks.get(v.lock_group) if v.lock_group is not None else None
+    if lk is not None and v.op == MemOp.ADD_INTO:
+        with lk:   # §B: write-protected sum-into
+            _exec_vertex(v, ctx.mg, ctx.tg, ctx.mem, ctx.host)
+    else:
+        _exec_vertex(v, ctx.mg, ctx.tg, ctx.mem, ctx.host)
+    t_end = time.perf_counter() - ctx.t0
+    ctx.timeline.append((t_start, t_end, v.device, engine_of(v),
+                         v.name or str(m)))
+    ctx.spans[m] = (t_start, t_end)
+
+
+# --------------------------------------------------------------------------
+# the shared scheduling kernel
+# --------------------------------------------------------------------------
+class ReadyKernel:
+    """The ready-set/dispatch state machine every backend schedules with.
+
+    State: per-vertex remaining-dependency counts, one priority heap per
+    (device, engine-class) key ordered by ``(policy.priority, seq, mid)``,
+    and — in ``mode='fixed'`` — the strict compile-time issue order with
+    head-of-line blocking. The kernel carries NO locking: the inline
+    executor drives it from a single thread; the threaded executor holds
+    its scheduler lock around every call.
+
+    A job is any subset of ``members``; predecessors outside the job are
+    treated as already complete (sound for the compiled backend: the
+    linearization is topological, so cross-region deps point backward).
+    """
+
+    def __init__(self, mg: MemGraph, members: Sequence[int],
+                 policy: DispatchPolicy, mode: str) -> None:
+        self.mg = mg
+        self.verts = mg.vertices
+        self.policy = policy
+        self.mode = mode
+        keys = {(self.verts[m].device, engine_of(self.verts[m]))
+                for m in members}
+        self.engine_keys: list[tuple[int, str]] = sorted(keys)
+        self.heaps: dict[tuple[int, str], list[tuple[float, int, int]]] = \
+            {k: [] for k in self.engine_keys}
+        # fixed mode: seq -> mid of dep-complete vertices + the issue order
+        self.ready_fixed: dict[int, int] = {}
+        self.seq_order: list[int] = []
+        self.next_i = 0
+        # per-job state
+        self.remaining: dict[int, int] = {}
+        self.n_done = 0
+        self.total = 0
+
+    # ---- job lifecycle ------------------------------------------------
+    def load(self, mids: Sequence[int]) -> list[int]:
+        """Begin a job over ``mids``: reset counts and return the
+        initially dep-complete vertices (NOT yet published — the caller
+        publishes, so the threaded backend can pair each publish with its
+        engine wakeup)."""
+        subset = set(mids)
+        self.remaining = {m: sum(1 for p in self.mg.preds[m] if p in subset)
+                          for m in mids}
+        self.n_done = 0
+        self.total = len(mids)
+        if self.mode == "fixed":
+            self.seq_order = sorted(self.verts[m].seq for m in mids)
+            self.next_i = 0
+        return [m for m, r in self.remaining.items() if r == 0]
+
+    @property
+    def done(self) -> bool:
+        return self.n_done >= self.total
+
+    # ---- ready-set operations ----------------------------------------
+    def publish(self, m: int) -> tuple[int, str] | None:
+        """Make a dep-complete vertex poppable. Returns the engine key
+        whose ready set grew (``None`` in fixed mode — the head-of-line
+        queue is global)."""
+        v = self.verts[m]
+        if self.mode == "fixed":
+            self.ready_fixed[v.seq] = m
+            return None
+        key = (v.device, engine_of(v))
+        heapq.heappush(self.heaps[key],
+                       (self.policy.priority(m), v.seq, m))
+        return key
+
+    def pop(self, key: tuple[int, str]) -> int | None:
+        """Pop the policy-best ready vertex of one engine key (a threaded
+        worker's view: each stream races only within its engine class)."""
+        heap = self.heaps[key]
+        if not heap:
+            return None
+        return heapq.heappop(heap)[2]
+
+    def pop_fixed(self, key: tuple[int, str] | None = None) -> int | None:
+        """Fixed-mode head-of-line issue: the next vertex of the strict
+        seq order, if dep-complete (and on ``key``'s engine when given).
+        ``None`` = the head is not ready / not ours — wait."""
+        if self.next_i >= len(self.seq_order):
+            return None
+        m = self.ready_fixed.get(self.seq_order[self.next_i])
+        if m is None:
+            return None
+        if key is not None:
+            v = self.verts[m]
+            if (v.device, engine_of(v)) != key:
+                return None
+        del self.ready_fixed[self.seq_order[self.next_i]]
+        self.next_i += 1
+        return m
+
+    def pop_best(self) -> int | None:
+        """Inline dispatch: the policy-best vertex across EVERY engine's
+        ready set — the choice one caller thread makes when it is all the
+        engines at once. Same ``(priority, seq)`` ordering as the
+        per-engine heaps, so the policy's preference structure is
+        identical between backends."""
+        if self.mode == "fixed":
+            return self.pop_fixed()
+        keys = [k for k in self.engine_keys if self.heaps[k]]
+        if not keys:
+            return None
+        best = keys[select_best(keys, lambda k: self.heaps[k][0])]
+        return heapq.heappop(self.heaps[best])[2]
+
+    def ready_view(self) -> dict[tuple[int, str], list[int]]:
+        """Snapshot of the ready sets (tests: backend equivalence)."""
+        if self.mode == "fixed":
+            out: dict[tuple[int, str], list[int]] = {}
+            for m in self.ready_fixed.values():
+                v = self.verts[m]
+                out.setdefault((v.device, engine_of(v)), []).append(m)
+            return {k: sorted(v) for k, v in out.items()}
+        return {k: sorted(t[2] for t in h)
+                for k, h in self.heaps.items() if h}
+
+    def complete(self, m: int) -> list[int]:
+        """Record a completion event (the non-blocking poll: by the time
+        a backend calls this the op has returned, so there is nothing to
+        wait on) and return the vertices it made dep-complete."""
+        self.n_done += 1
+        out: list[int] = []
+        for s in self.mg.succs[m]:
+            if s in self.remaining:
+                self.remaining[s] -= 1
+                if self.remaining[s] == 0:
+                    out.append(s)
+        return out
+
+    def clear_ready(self) -> None:
+        """Error path: nothing more launches."""
+        for heap in self.heaps.values():
+            heap.clear()
+        self.ready_fixed.clear()
+
+
+# --------------------------------------------------------------------------
+# backend 3: the thread-free inline executor (small nondet seams)
+# --------------------------------------------------------------------------
+class InlineExecutor:
+    """Run a nondet seam entirely on the calling thread.
+
+    Same kernel, same policy choice among simultaneously-ready vertices,
+    same RaceError/tier semantics — zero thread wakeups. The loop is the
+    event-driven scheduler collapsed to one thread: pop the policy-best
+    ready vertex, execute it, drain its completion through the kernel
+    (non-blocking — the op already returned), publish the newly-ready.
+    Legal because any dependency-respecting order is certified byte-exact
+    (§13); *stall-free on the caller* because the compiler only routes a
+    seam here when ``inline_seam_certified`` holds (§14/§17)."""
+
+    def __init__(self, ctx: ExecContext, members: Sequence[int]) -> None:
+        self.ctx = ctx
+        self.kernel = ReadyKernel(ctx.mg, members, ctx.policy, ctx.mode)
+
+    def run_subset(self, mids: Sequence[int]) -> None:
+        """Execute one job to completion on the calling thread. Errors
+        propagate directly — there is no worker to surface them from."""
+        k = self.kernel
+        for m in k.load(mids):
+            k.publish(m)
+        while not k.done:
+            m = k.pop_best()
+            assert m is not None, \
+                "ready set drained before the job completed (cyclic deps?)"
+            run_vertex(self.ctx, m)
+            for s in k.complete(m):
+                k.publish(s)
+
+
+# --------------------------------------------------------------------------
+# backend 2: the threaded engine-stream fleet (large nondet windows)
+# --------------------------------------------------------------------------
+class _Engine:
+    """One engine class of one device: its kernel ready-heap key + a
+    wakeup condition. All engines share the scheduler's single sanitized
+    lock; each carries its own condition variable so a completion event
+    wakes only streams that gained work."""
+
+    __slots__ = ("key", "cond")
+
+    def __init__(self, key: tuple[int, str],
+                 lock: lockcheck.SanitizedLock) -> None:
+        self.key = key
+        self.cond = threading.Condition(lock)
+
+
+class ThreadedExecutor:
+    """A persistent pool of engine-stream worker threads executing
+    dependency-complete vertices — the paper's event-driven runtime.
+
+    Thread start-up is paid ONCE per run: the interpreted backend submits
+    the whole graph as a single job; the compiled backend submits one job
+    per threaded nondet region, so large seams share one fleet instead of
+    each spinning threads up and back down (small seams skip the fleet
+    entirely via :class:`InlineExecutor`).
+
+    ``members`` sizes the engines: only (device, engine-class) pairs
+    actually present get streams. The scheduler lock is a
+    :func:`lockcheck.make_lock` sanitized lock — the lock-order sanitizer
+    audits its acquisition pairs along with the store/pool locks (it must
+    stay a leaf: no other sanitized lock is ever taken under it)."""
+
+    def __init__(self, ctx: ExecContext, members: Sequence[int], *,
+                 n_streams: int = 5, n_transfer_streams: int = 1) -> None:
+        self.ctx = ctx
+        per_key: dict[tuple[int, str], int] = {}
+        verts = ctx.mg.vertices
+        for m in members:
+            key = (verts[m].device, engine_of(verts[m]))
+            per_key[key] = per_key.get(key, 0) + 1
+
+        # ---- scheduler state (all guarded by `lock`) ------------------
+        self.lock = lockcheck.make_lock("ExecutorScheduler")
+        self.kernel = ReadyKernel(ctx.mg, members, ctx.policy, ctx.mode)
+        self.engines = {key: _Engine(key, self.lock)
+                        for key in sorted(per_key)}
+        self.main_cond = threading.Condition(self.lock)
+        self.fixed_cond = threading.Condition(self.lock)
+        self.errors: list[BaseException] = []
+        self.shutdown = False
+
+        self.threads: list[threading.Thread] = []
+        for (d, kind), eng in self.engines.items():
+            width = n_streams if kind == COMPUTE else n_transfer_streams
+            width = max(1, min(width, per_key[(d, kind)]))
+            for i in range(width):
+                if ctx.mode == "fixed":
+                    th = threading.Thread(target=self._worker_fixed,
+                                          args=((d, kind),),
+                                          name=f"turnip-{kind}{d}.{i}")
+                else:
+                    th = threading.Thread(target=self._worker_nondet,
+                                          args=(eng,),
+                                          name=f"turnip-{kind}{d}.{i}")
+                self.threads.append(th)
+        self.started: list[threading.Thread] = []
+
+    def start(self) -> None:
+        """Start every stream. On a mid-fleet OS refusal the caller's
+        ``close()`` (in its finally) drains the partial fleet."""
+        for th in self.threads:
+            th.start()
+            self.started.append(th)
+
+    def close(self) -> None:
+        """Deterministic drain — success, worker error, thread-start
+        failure, or KeyboardInterrupt alike: every started stream
+        observes ``shutdown`` and exits; no timeout, no leaked threads."""
+        with self.lock:
+            self.shutdown = True
+            for eng in self.engines.values():
+                eng.cond.notify_all()
+            self.fixed_cond.notify_all()
+            self.main_cond.notify_all()
+        for th in self.started:
+            th.join()
+
+    def run_subset(self, mids: Sequence[int]) -> None:
+        """Execute one job: every vertex of ``mids``, any legal order.
+        Blocks until the job completes; raises the first worker error."""
+        k = self.kernel
+        with self.lock:
+            if self.errors:
+                raise self.errors[0]
+            for m in k.load(mids):
+                self._publish(m)
+            while not k.done and not self.errors:
+                self.main_cond.wait()
+            if self.errors:
+                raise self.errors[0]
+
+    # ---- internals ----------------------------------------------------
+    def _publish(self, m: int) -> None:
+        """Lock held. Publish a dep-complete vertex + wake its engine."""
+        key = self.kernel.publish(m)
+        if key is None:                       # fixed mode: global queue
+            self.fixed_cond.notify_all()
+        else:
+            self.engines[key].cond.notify()
+
+    def _worker_nondet(self, eng: _Engine) -> None:
+        k = self.kernel
+        while True:
+            with self.lock:
+                m = k.pop(eng.key)
+                while m is None and not self.shutdown:
+                    eng.cond.wait()
+                    m = k.pop(eng.key)
+                if m is None:
+                    return                    # shutdown
+            self._run_vertex(m)
+
+    def _worker_fixed(self, key: tuple[int, str]) -> None:
+        k = self.kernel
+        while True:
+            with self.lock:
+                m = k.pop_fixed(key)
+                while m is None and not self.shutdown:
+                    self.fixed_cond.wait()
+                    m = k.pop_fixed(key)
+                if m is None:
+                    return                    # shutdown
+                # the new head may belong to any engine: wake everyone
+                self.fixed_cond.notify_all()
+            self._run_vertex(m)
+
+    def _run_vertex(self, m: int) -> None:
+        try:
+            run_vertex(self.ctx, m)
+        except BaseException as e:     # surface in run_subset's caller
+            with self.lock:
+                self.errors.append(e)
+                self.kernel.clear_ready()     # nothing more launches
+                self.main_cond.notify_all()
+            return
+        with self.lock:
+            for s in self.kernel.complete(m):
+                self._publish(s)
+            if self.kernel.done:
+                self.main_cond.notify_all()
+
+
+# --------------------------------------------------------------------------
+# backend 1: the straight-line walker (certified STATIC regions)
+# --------------------------------------------------------------------------
+class StaticExecutor:
+    """Execute a :class:`~repro.core.compile.CompiledPlan`'s STATIC
+    regions straight-line on the calling thread: no heap, no locks, no
+    condition variables — the precomputed tick counts proved position
+    order is dependency order, so the assert is the entire per-vertex
+    dispatch. Fused DMA batches issue as one submission: members execute
+    back-to-back, one completion wait for the whole span."""
+
+    def __init__(self, ctx: ExecContext, plan: Any) -> None:
+        self.ctx = ctx
+        self.plan = plan
+        self.heads: dict[int, tuple[int, int]] = plan.batch_heads
+
+    def run_region(self, region: Any) -> int:
+        """Run one STATIC region; returns the fused submissions issued."""
+        n_fused = 0
+        i = region.start
+        while i < region.end:
+            span = self.heads.get(i)
+            if span is not None:
+                for j in range(span[0], span[1]):
+                    self._exec(j)
+                n_fused += 1
+                i = span[1]
+            else:
+                self._exec(i)
+                i += 1
+        return n_fused
+
+    def _exec(self, i: int) -> None:
+        ins = self.plan.instrs[i]
+        assert ins.ready_tick <= i, "compiled plan not topological"
+        ctx = self.ctx
+        v = ctx.mg.vertices[ins.mid]
+        t_start = time.perf_counter() - ctx.t0
+        if ctx.latency is not None:
+            d = ctx.latency(v)
+            if d > 0:
+                time.sleep(d)
+        _exec_vertex(v, ctx.mg, ctx.tg, ctx.mem, ctx.host)
+        t_end = time.perf_counter() - ctx.t0
+        ctx.timeline.append((t_start, t_end, v.device, ins.engine,
+                             v.name or str(ins.mid)))
+        ctx.spans[ins.mid] = (t_start, t_end)

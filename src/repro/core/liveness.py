@@ -76,7 +76,7 @@ from .memgraph import MemGraph, MemOp, RaceError
 __all__ = [
     "LeaseSpec", "PoolConfig", "StreamConfig", "LivenessCertificate",
     "ProgressCertificationError", "LivenessModelError", "certify_progress",
-    "default_pool_config", "ASSUMPTIONS", "main",
+    "default_pool_config", "inline_seam_certified", "ASSUMPTIONS", "main",
 ]
 
 # hazard kinds (PlanHazard.kind; witness_kind == "stall" when confirmable)
@@ -599,6 +599,38 @@ def certify_progress(mg: MemGraph, pool_config: PoolConfig | None = None,
     cert.n_spills_checked = p.n_spills_checked
     cert.ok = not cert.hazards
     return cert
+
+
+# vertices whose execution charges a bounded admission gate (the pool's
+# lease accounting or the disk tier's capacity) — the ops the blocking
+# model prices as potential waits (§14's blocking edges)
+_ADMISSION_OPS = (MemOp.OFFLOAD, MemOp.SPILL, MemOp.LOAD)
+
+
+def inline_seam_certified(mg: MemGraph, mids: Sequence[int],
+                          cert: LivenessCertificate | None) -> bool:
+    """Is "no blocking waits on the calling thread" a *certified*
+    property for the seam ``mids`` (DESIGN.md §17)?
+
+    The inline executor runs a nondet seam on the calling thread, so a
+    vertex that blocks mid-admission would stall the whole runtime loop
+    — there is no other worker to free the resource it waits on. The
+    claim is certified two ways:
+
+    * the plan carries an ``ok`` liveness certificate: §14's blocking
+      model already proved every pool/disk admission in the plan finds
+      its bytes free in every legal order, which covers the calling
+      thread as a degenerate one-worker schedule; or
+    * the seam contains **no admission vertex at all** (no OFFLOAD /
+      SPILL / LOAD member): vertices that never charge a bounded gate
+      have no blocking edges in the model, vacuously.
+
+    When neither holds, the compiler demotes the seam to the threaded
+    backend, where a blocked admission only parks one worker stream.
+    """
+    if cert is not None and cert.ok:
+        return True
+    return not any(mg.vertices[m].op in _ADMISSION_OPS for m in mids)
 
 
 # --------------------------------------------------------------------------

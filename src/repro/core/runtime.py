@@ -20,14 +20,17 @@ Components:
 * :func:`run_in_order` — single-threaded reference interpreter executing an
   arbitrary caller-supplied topological order (the property-test workhorse:
   every valid order must give identical outputs).
-* :class:`TurnipRuntime` — the threaded event-driven scheduler. Each device
-  owns a pool of compute streams plus dedicated DMA streams per direction
-  (h2d/d2h/d2d) and a disk I/O engine for spill/load hops (the engine
-  classes of :mod:`~repro.core.simulate`), so an OFFLOAD never occupies a
-  compute stream and a disk transfer never occupies a DMA lane. Threads
-  sleep on condition variables and are woken only by dependency-completion
-  events — there is no polling anywhere. Ready vertices are ranked by a
-  pluggable :class:`~repro.core.dispatch.DispatchPolicy`; ``mode='fixed'``
+* :class:`TurnipRuntime` — a facade over the unified executor core
+  (:mod:`~repro.core.executor`, DESIGN.md §17): ONE ready-set/dispatch
+  kernel behind three interchangeable backends. Certified-STATIC regions
+  of a compiled plan run straight-line (:class:`StaticExecutor`); large
+  nondet windows run on the threaded engine-stream fleet
+  (:class:`ThreadedExecutor` — per-device compute pools plus dedicated
+  DMA/disk streams, condition-variable wakeups, no polling); small
+  nondet seams run thread-free on the calling thread
+  (:class:`InlineExecutor` — same dispatch freedom, zero OS wakeups).
+  Ready vertices are ranked by a pluggable
+  :class:`~repro.core.dispatch.DispatchPolicy`; ``mode='fixed'``
   reproduces the paper's ablation: vertices are *issued* strictly in the
   compile-time simulation order (head-of-line blocking), though still
   asynchronous once issued.
@@ -35,7 +38,6 @@ Components:
 from __future__ import annotations
 
 import dataclasses
-import heapq
 import threading
 import time
 from typing import Any, Callable
@@ -44,8 +46,9 @@ import numpy as np
 
 from . import liveness as _lv
 from .build import BuildResult
-from .dispatch import (COMPUTE, DispatchPolicy, TRANSFER_KINDS,
-                       engine_of, get_policy)
+from .dispatch import COMPUTE, DispatchPolicy, TRANSFER_KINDS, get_policy
+from .executor import (INLINE, THREADED, ExecContext, InlineExecutor,
+                       StaticExecutor, ThreadedExecutor, _exec_vertex)
 from .memgraph import Loc, MemGraph, MemOp, MemVertex, RaceError
 from .ops import get_op
 from .pool import HostPool, Lease
@@ -156,42 +159,6 @@ class ByteArena:
             self.specs.pop((loc.device, loc.offset, loc.size), None)
 
 
-# --------------------------------------------------------------------------
-# vertex execution (shared by interpreter and threaded runtime)
-# --------------------------------------------------------------------------
-def _exec_vertex(v: MemVertex, mg: MemGraph, tg: TaskGraph, mem,
-                 host: HostStore) -> None:
-    if v.op == MemOp.INPUT:
-        mem.write(v.loc, host.inputs[v.src_tid])
-    elif v.op in (MemOp.COMPUTE, MemOp.TRANSFER):
-        vals = [mem.read(mg.vertices[m].loc) for m in v.operands]
-        fn = get_op(v.op_name or ("copy" if v.op == MemOp.TRANSFER else ""))
-        out = fn(*vals, **v.params)
-        mem.write(v.loc, np.asarray(out))
-    elif v.op == MemOp.OFFLOAD:
-        val = mem.read(mg.vertices[v.operands[0]].loc)
-        host.put_offload(v.mid, np.array(val, copy=True))
-    elif v.op == MemOp.RELOAD:
-        mem.write(v.loc, host.get_for_reload(v))
-    elif v.op == MemOp.SPILL:
-        # second hop of a tiered eviction (host→disk) — or a free release
-        # of dead bytes. operands[0] is the host-store key.
-        host.spill(v.operands[0], drop=bool(v.params.get("drop")))
-    elif v.op == MemOp.LOAD:
-        host.load(v.operands[0])   # first hop of a two-hop reload
-    elif v.op == MemOp.ALLOC0:
-        spec = tg.vertices[v.src_tid].out
-        mem.write(v.loc, np.zeros(spec.shape, spec.np_dtype))
-    elif v.op == MemOp.ADD_INTO:
-        acc = mem.read(v.loc)
-        val = mem.read(mg.vertices[v.operands[0]].loc)
-        mem.write(v.loc, acc + val)
-    elif v.op == MemOp.JOIN:
-        pass  # completion marker: the accumulator already holds the value
-    else:  # pragma: no cover
-        raise AssertionError(f"unknown op {v.op}")
-
-
 def _collect_outputs(tg: TaskGraph, res: BuildResult, mem,
                      host: HostStore) -> dict[int, np.ndarray]:
     outs: dict[int, np.ndarray] = {}
@@ -296,218 +263,11 @@ class RunResult:
     n_compiled: int = 0
     n_interpreted: int = 0
     fused_dma_batches: int = 0
-
-
-class _Engine:
-    """One engine class of one device: a ready heap + its wakeup condition.
-
-    All engines share the scheduler's single state lock; each carries its own
-    condition variable so a completion event wakes only streams that gained
-    work.
-    """
-
-    __slots__ = ("device", "kind", "heap", "cond")
-
-    def __init__(self, device: int, kind: str, lock: threading.Lock) -> None:
-        self.device = device
-        self.kind = kind
-        self.heap: list[tuple[float, int, int]] = []   # (priority, seq, mid)
-        self.cond = threading.Condition(lock)
-
-
-class _Fleet:
-    """A persistent pool of engine-stream worker threads executing
-    dependency-complete vertices of one :class:`TurnipRuntime` run.
-
-    Thread start-up is paid ONCE per run: the interpreted backend submits
-    the whole graph as a single job; the compiled backend submits one job
-    per nondet region (seam handoff), so dozens of small seams share one
-    fleet instead of each spinning threads up and back down.
-
-    ``members`` is every vertex the fleet may ever be asked to run — it
-    sizes the engines (only (device, engine-class) pairs actually present
-    get streams) and the ADD_INTO lock-group locks. A job is a subset of
-    ``members``; predecessors outside the job are treated as already
-    complete, which is sound for the compiled backend because the
-    linearization is topological (cross-region deps point backward).
-    """
-
-    def __init__(self, rt: "TurnipRuntime", mem, host, timeline, spans,
-                 t0: float, members: list[int]) -> None:
-        self.rt = rt
-        self.mem = mem
-        self.host = host
-        self.timeline = timeline
-        self.spans = spans
-        self.t0 = t0
-        self.mg = rt.mg
-        self.verts = rt.mg.vertices
-        verts = self.verts
-        self.locks: dict[tuple[int, int], threading.Lock] = {}
-        for m in members:
-            v = verts[m]
-            if v.lock_group is not None:
-                self.locks.setdefault(v.lock_group, threading.Lock())
-
-        # ---- scheduler state (all guarded by `lock`) ------------------
-        self.lock = threading.Lock()
-        per_key: dict[tuple[int, str], int] = {}
-        for m in members:
-            key = (verts[m].device, engine_of(verts[m]))
-            per_key[key] = per_key.get(key, 0) + 1
-        self.engines = {key: _Engine(key[0], key[1], self.lock)
-                        for key in sorted(per_key)}
-        self.main_cond = threading.Condition(self.lock)
-        self.fixed_cond = threading.Condition(self.lock)
-        # per-job state
-        self.remaining: dict[int, int] = {}
-        self.ready_fixed: dict[int, int] = {}      # seq -> mid
-        self.seq_order: list[int] = []
-        self.next_i = 0
-        self.n_done = 0
-        self.total = 0
-        self.errors: list[BaseException] = []
-        self.shutdown = False
-
-        self.threads: list[threading.Thread] = []
-        for (d, k), eng in self.engines.items():
-            width = rt.n_streams if k == COMPUTE else rt.n_transfer_streams
-            width = max(1, min(width, per_key[(d, k)]))
-            for i in range(width):
-                if rt.mode == "fixed":
-                    th = threading.Thread(target=self._worker_fixed,
-                                          args=(d, k),
-                                          name=f"turnip-{k}{d}.{i}")
-                else:
-                    th = threading.Thread(target=self._worker_nondet,
-                                          args=(eng,),
-                                          name=f"turnip-{k}{d}.{i}")
-                self.threads.append(th)
-        self.started: list[threading.Thread] = []
-
-    def start(self) -> None:
-        """Start every stream. On a mid-fleet OS refusal the caller's
-        ``close()`` (in its finally) drains the partial fleet."""
-        for th in self.threads:
-            th.start()
-            self.started.append(th)
-
-    def close(self) -> None:
-        """Deterministic drain — success, worker error, thread-start
-        failure, or KeyboardInterrupt alike: every started stream
-        observes ``shutdown`` and exits; no timeout, no leaked threads."""
-        with self.lock:
-            self.shutdown = True
-            for eng in self.engines.values():
-                eng.cond.notify_all()
-            self.fixed_cond.notify_all()
-            self.main_cond.notify_all()
-        for th in self.started:
-            th.join()
-
-    def run_subset(self, mids: list[int]) -> None:
-        """Execute one job: every vertex of ``mids``, any legal order.
-        Blocks until the job completes; raises the first worker error."""
-        mg = self.mg
-        with self.lock:
-            if self.errors:
-                raise self.errors[0]
-            subset = set(mids)
-            self.remaining = {m: sum(1 for p in mg.preds[m] if p in subset)
-                              for m in mids}
-            self.n_done = 0
-            self.total = len(mids)
-            if self.rt.mode == "fixed":
-                # strict issue order over the member seqs (sparse for
-                # compiled-backend seam jobs)
-                self.seq_order = sorted(self.verts[m].seq for m in mids)
-                self.next_i = 0
-            for m, r in list(self.remaining.items()):
-                if r == 0:
-                    self._make_ready(m)
-            while self.n_done < self.total and not self.errors:
-                self.main_cond.wait()
-            if self.errors:
-                raise self.errors[0]
-
-    # ---- internals ----------------------------------------------------
-    def _make_ready(self, m: int) -> None:
-        """Lock held. Publish a dep-complete vertex to its engine."""
-        v = self.verts[m]
-        if self.rt.mode == "fixed":
-            self.ready_fixed[v.seq] = m
-            self.fixed_cond.notify_all()
-        else:
-            eng = self.engines[(v.device, engine_of(v))]
-            heapq.heappush(eng.heap,
-                           (self.rt.policy.priority(m), v.seq, m))
-            eng.cond.notify()
-
-    def _worker_nondet(self, eng: _Engine) -> None:
-        while True:
-            with self.lock:
-                while not eng.heap and not self.shutdown:
-                    eng.cond.wait()
-                if self.shutdown:
-                    return
-                _, _, m = heapq.heappop(eng.heap)
-            self._run_vertex(m)
-
-    def _worker_fixed(self, dev: int, kind: str) -> None:
-        while True:
-            with self.lock:
-                while True:
-                    if self.shutdown:
-                        return
-                    m = (self.ready_fixed.get(self.seq_order[self.next_i])
-                         if self.next_i < len(self.seq_order) else None)
-                    if (m is not None and self.verts[m].device == dev
-                            and engine_of(self.verts[m]) == kind):
-                        break
-                    self.fixed_cond.wait()
-                del self.ready_fixed[self.seq_order[self.next_i]]
-                self.next_i += 1
-                # the new head may belong to any engine: wake everyone
-                self.fixed_cond.notify_all()
-            self._run_vertex(m)
-
-    def _run_vertex(self, m: int) -> None:
-        rt = self.rt
-        v = self.verts[m]
-        t_start = time.perf_counter() - self.t0
-        try:
-            if rt.latency is not None:
-                d = rt.latency(v)
-                if d > 0:
-                    time.sleep(d)
-            lk = (self.locks.get(v.lock_group)
-                  if v.lock_group is not None else None)
-            if lk is not None and v.op == MemOp.ADD_INTO:
-                with lk:   # §B: write-protected sum-into
-                    _exec_vertex(v, self.mg, rt.tg, self.mem, self.host)
-            else:
-                _exec_vertex(v, self.mg, rt.tg, self.mem, self.host)
-        except BaseException as e:     # surface in run_subset's caller
-            with self.lock:
-                self.errors.append(e)
-                for eng in self.engines.values():  # nothing more launches
-                    eng.heap.clear()
-                self.ready_fixed.clear()
-                self.main_cond.notify_all()
-            return
-        t_end = time.perf_counter() - self.t0
-        self.timeline.append((t_start, t_end, v.device, engine_of(v),
-                              v.name or str(m)))
-        self.spans[m] = (t_start, t_end)
-        with self.lock:
-            self.n_done += 1
-            for s in self.mg.succs[m]:
-                if s in self.remaining:
-                    self.remaining[s] -= 1
-                    if self.remaining[s] == 0:
-                        self._make_ready(s)
-            if self.n_done == self.total:
-                self.main_cond.notify_all()
+    # seam-backend split (DESIGN.md §17): of the interpreted vertices,
+    # how many ran on the thread-free inline executor vs the threaded
+    # fleet. Invariant: n_inline + n_threaded == n_interpreted.
+    n_inline: int = 0
+    n_threaded: int = 0
 
 
 class TurnipRuntime:
@@ -549,9 +309,12 @@ class TurnipRuntime:
                  store_factory: Callable[[dict], HostStore] | None = None,
                  host_lease=None,
                  seed: int | None = None,
-                 exec_backend: str | None = None) -> None:
+                 exec_backend: str | None = None,
+                 seam_backend: str = "auto") -> None:
         if mode not in ("nondet", "fixed"):
             raise ValueError(mode)
+        if seam_backend not in ("auto", INLINE, THREADED):
+            raise ValueError(f"unknown seam backend {seam_backend!r}")
         if host_lease is not None and store_factory is not None:
             raise ValueError("pass host_lease OR store_factory, not both "
                              "(attach the lease inside the factory instead)")
@@ -574,6 +337,12 @@ class TurnipRuntime:
         if self.exec_backend not in ("interpreted", "compiled"):
             raise ValueError(f"unknown executor backend "
                              f"{self.exec_backend!r}")
+        # seam backend (DESIGN.md §17): which executor runs a compiled
+        # plan's NONDET regions. "auto" honours the compiler's per-region
+        # hints (inline below BuildConfig.seam_threshold when certified,
+        # threaded above); "inline"/"threaded" force one backend for every
+        # seam (the differential harness's forced-backend lanes).
+        self.seam_backend = seam_backend
         self._compiled = None          # lazily lowered CompiledPlan cache
         # shared-pool mode (DESIGN.md §12): the runtime-owned store joins
         # an arbitrated HostPool under this lease — occupancy is mirrored
@@ -616,14 +385,19 @@ class TurnipRuntime:
             if owns_store:
                 host.close()
 
+    def _make_ctx(self, mem, host, t0: float, members) -> ExecContext:
+        return ExecContext.make(self.mg, self.tg, mem, host, self.policy,
+                                self.mode, self.latency, t0, members)
+
     def _run(self, inputs: dict[int, np.ndarray], mem, host) -> RunResult:
-        """Interpreted backend: the whole graph as one fleet job."""
+        """Interpreted backend: the whole graph as one threaded job."""
         self.policy.prepare(self.mg)
-        timeline: list[tuple[float, float, int, str, str]] = []
-        spans: dict[int, tuple[float, float]] = {}
         t0 = time.perf_counter()
         members = list(self.mg.vertices)
-        fleet = _Fleet(self, mem, host, timeline, spans, t0, members)
+        ctx = self._make_ctx(mem, host, t0, members)
+        fleet = ThreadedExecutor(ctx, members,
+                                 n_streams=self.n_streams,
+                                 n_transfer_streams=self.n_transfer_streams)
         try:
             fleet.start()
             if members:
@@ -632,114 +406,108 @@ class TurnipRuntime:
             _certified_reraise(self.res, e)
         finally:
             fleet.close()
-        return self._finish(mem, host, timeline, spans, t0,
-                            n_interpreted=len(members))
+        return self._finish(mem, host, ctx, t0,
+                            n_interpreted=len(members),
+                            n_threaded=len(members))
+
+    def _region_backend(self, region) -> str:
+        """The seam backend a NONDET region actually runs on: the
+        compiler's stamp, unless this runtime forces one."""
+        if self.seam_backend != "auto":
+            return self.seam_backend
+        return region.backend or THREADED
 
     def _run_compiled(self, inputs: dict[int, np.ndarray], mem,
                       host) -> RunResult:
-        """Compiled backend (DESIGN.md §15): straight-line execution of
-        certified-static regions — no heap, no locks, no condition
-        variables; the precomputed tick counts proved position order is
-        dependency order — handing off to a persistent interpreter fleet
-        at nondet-region seams. Both executors share ``mem`` and
-        ``host``, so ByteArena extents, TieredStore tier moves, and
-        HostPool lease accounting are exactly the invariants the
-        certifiers assumed."""
+        """Compiled backend (DESIGN.md §15/§17): straight-line execution
+        of certified-static regions, handing off at nondet-region seams
+        to the backend the region is stamped with — the thread-free
+        inline executor for small certified seams, the persistent
+        threaded fleet for large windows. All executors share one
+        :class:`ExecContext` (``mem``, ``host``, the run timeline), so
+        ByteArena extents, TieredStore tier moves, and HostPool lease
+        accounting are exactly the invariants the certifiers assumed."""
         from .compile import NONDET, lower
 
         mg = self.mg
         pol = self.policy
         prepared = False
         if self._compiled is None:
-            pol.prepare(mg)
+            # lower() prepares the policy as part of linearization; that
+            # same dispatch state then drives this run's seam executors
             prepared = True
             self._compiled = lower(
                 self.res, policy=pol, n_streams=self.n_streams,
-                n_transfer_streams=self.n_transfer_streams)
+                n_transfer_streams=self.n_transfer_streams,
+                seam_threshold=getattr(self.res, "seam_threshold", None))
         plan = self._compiled
-        timeline: list[tuple[float, float, int, str, str]] = []
-        spans: dict[int, tuple[float, float]] = {}
         t0 = time.perf_counter()
         n_compiled = n_interpreted = n_fused = 0
-        heads = plan.batch_heads
-        # one fleet serves every seam: sized to the union of nondet
-        # regions, threads started once (None when the plan is all-static)
-        seam_members = [m for r in plan.regions if r.kind == NONDET
-                        for m in plan.order[r.start:r.end]]
+        n_inline = n_threaded = 0
+        # split the seams by effective backend: the fleet is sized to —
+        # and threads are spun up for — ONLY the threaded-bound regions
+        # (forcing inline gives a zero-thread run); the inline executor's
+        # kernel covers the inline-bound ones. One shared context carries
+        # the ADD_INTO lock groups of every seam vertex.
+        seam_regions = [r for r in plan.regions if r.kind == NONDET]
+        threaded_members = [m for r in seam_regions
+                            if self._region_backend(r) == THREADED
+                            for m in plan.order[r.start:r.end]]
+        inline_members = [m for r in seam_regions
+                         if self._region_backend(r) == INLINE
+                         for m in plan.order[r.start:r.end]]
+        ctx = self._make_ctx(mem, host, t0,
+                             threaded_members + inline_members)
+        if seam_regions and not prepared:
+            # dispatch state (priorities, RNG draw) is only consumed by
+            # the seam executors — an all-static plan skips it entirely
+            pol.prepare(mg)
         fleet = None
-        if seam_members:
-            if not prepared:
-                # dispatch state (priorities, RNG draw) is only consumed
-                # by the seam fleet — an all-static plan skips it entirely
-                pol.prepare(mg)
-            fleet = _Fleet(self, mem, host, timeline, spans, t0,
-                           seam_members)
+        if threaded_members:
+            fleet = ThreadedExecutor(
+                ctx, threaded_members, n_streams=self.n_streams,
+                n_transfer_streams=self.n_transfer_streams)
+        inline = InlineExecutor(ctx, inline_members) if inline_members \
+            else None
+        static = StaticExecutor(ctx, plan)
         try:
             if fleet is not None:
                 fleet.start()
             for region in plan.regions:
                 if region.kind == NONDET:
-                    # seam handoff: the interpreter fleet gets the
-                    # region's vertex subset with full dispatch freedom.
-                    # The linearization is topological, so every
-                    # cross-region dependency points backward — already
-                    # executed.
-                    fleet.run_subset(plan.order[region.start:region.end])
-                    n_interpreted += len(region)
-                    continue
-                i = region.start
-                while i < region.end:
-                    span = heads.get(i)
-                    if span is not None:
-                        # one fused submission: the run issues together,
-                        # members execute back-to-back on their stream,
-                        # one completion wait for the whole batch
-                        for j in range(span[0], span[1]):
-                            self._exec_compiled(plan, j, mem, host,
-                                                timeline, spans, t0)
-                        n_fused += 1
-                        i = span[1]
+                    # seam handoff: the region's vertex subset executes
+                    # with full dispatch freedom on its backend. The
+                    # linearization is topological, so every cross-region
+                    # dependency points backward — already executed.
+                    mids = plan.order[region.start:region.end]
+                    if self._region_backend(region) == INLINE:
+                        inline.run_subset(mids)
+                        n_inline += len(region)
                     else:
-                        self._exec_compiled(plan, i, mem, host,
-                                            timeline, spans, t0)
-                        i += 1
-                n_compiled += len(region)
+                        fleet.run_subset(mids)
+                        n_threaded += len(region)
+                    n_interpreted += len(region)
+                else:
+                    n_fused += static.run_region(region)
+                    n_compiled += len(region)
         except RaceError as e:
             _certified_reraise(self.res, e)
         finally:
             if fleet is not None:
                 fleet.close()
-        return self._finish(mem, host, timeline, spans, t0,
+        return self._finish(mem, host, ctx, t0,
                             n_compiled=n_compiled,
                             n_interpreted=n_interpreted,
-                            fused_dma_batches=n_fused)
+                            fused_dma_batches=n_fused,
+                            n_inline=n_inline, n_threaded=n_threaded)
 
-    def _exec_compiled(self, plan, i: int, mem, host, timeline, spans,
-                      t0: float) -> None:
-        """One straight-line instruction. Regions execute strictly one
-        after another on the calling thread, so no lock-group lock is
-        taken here: position order is execution order (``plan.verify``
-        proved ``ready_tick <= pos`` for every instruction at lowering
-        time — the assert is the entire per-vertex dispatch)."""
-        ins = plan.instrs[i]
-        assert ins.ready_tick <= i, "compiled plan not topological"
-        v = self.mg.vertices[ins.mid]
-        t_start = time.perf_counter() - t0
-        if self.latency is not None:
-            d = self.latency(v)
-            if d > 0:
-                time.sleep(d)
-        _exec_vertex(v, self.mg, self.tg, mem, host)
-        t_end = time.perf_counter() - t0
-        timeline.append((t_start, t_end, v.device, ins.engine,
-                         v.name or str(ins.mid)))
-        spans[ins.mid] = (t_start, t_end)
-
-    def _finish(self, mem, host, timeline, spans, t0: float, *,
+    def _finish(self, mem, host, ctx: ExecContext, t0: float, *,
                 n_compiled: int = 0, n_interpreted: int = 0,
-                fused_dma_batches: int = 0) -> RunResult:
+                fused_dma_batches: int = 0,
+                n_inline: int = 0, n_threaded: int = 0) -> RunResult:
         """Fold a finished execution's timeline into a RunResult (shared
         by both backends)."""
+        timeline, spans = ctx.timeline, ctx.spans
         makespan = time.perf_counter() - t0
         devices = sorted({v.device for v in self.mg.vertices.values()})
         busy = {d: 0.0 for d in devices}
@@ -774,6 +542,7 @@ class TurnipRuntime:
             peak_host_bytes=host.peak_resident_bytes,
             n_compiled=n_compiled, n_interpreted=n_interpreted,
             fused_dma_batches=fused_dma_batches,
+            n_inline=n_inline, n_threaded=n_threaded,
         )
 
 

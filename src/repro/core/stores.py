@@ -192,9 +192,17 @@ class DiskStore:
     ``write_bytes``/``read_bytes`` count cumulative spill/load traffic;
     ``resident_bytes``/``peak_resident_bytes`` track *live* occupancy.
     :meth:`drop` retires a record logically (the capacity check frees
-    its bytes immediately); the physical log space is reclaimed at
-    :meth:`close`. ``capacity`` (bytes, ``None`` = unbounded) makes
-    :meth:`put` refuse admissions that would overflow the tier with a
+    its bytes immediately). The physical log space of retired records is
+    reclaimed by **compaction**: when dead bytes dominate the log
+    (``compact_dead_fraction`` of the file, once it exceeds
+    ``compact_min_bytes``), the live records are streamed into a fresh
+    log which atomically replaces the old one (``os.replace``), under
+    the same store lock every mutation already holds. A crash at any
+    instant leaves either the complete old log or the complete new one —
+    never a torn mixture — and in-flight readers holding the old read
+    handle retry against the new index (a generation counter guards the
+    swap). ``capacity`` (bytes, ``None`` = unbounded) makes :meth:`put`
+    refuse admissions that would overflow the tier with a
     :class:`DiskFullError` — overwriting an existing key only charges
     the delta."""
 
@@ -203,10 +211,17 @@ class DiskStore:
     _HDR = struct.Struct("<4sQ")  # record frame: magic, payload nbytes
 
     def __init__(self, directory: str | os.PathLike | None = None, *,
-                 capacity: int | None = None) -> None:
+                 capacity: int | None = None,
+                 compact_dead_fraction: float | None = 0.5,
+                 compact_min_bytes: int = 1 << 20) -> None:
         self._dir = pathlib.Path(directory) if directory is not None else None
         self._owns_dir = directory is None
         self.capacity = capacity
+        # compaction knobs: rewrite the log once dead bytes exceed this
+        # fraction of the file (None disables), but never bother below
+        # the size floor (small logs are cheaper to leave alone)
+        self.compact_dead_fraction = compact_dead_fraction
+        self.compact_min_bytes = compact_min_bytes
         # key -> (log offset, payload nbytes, ((name, dtype, shape, nb), ...))
         self._files: dict[Any, tuple[int, int, tuple]] = {}
         self._log_path: pathlib.Path | None = None
@@ -217,6 +232,17 @@ class DiskStore:
         self.read_bytes = 0
         self.resident_bytes = 0
         self.peak_resident_bytes = 0
+        # dead (retired-record) bytes currently wasting log space,
+        # frame headers included — what compaction reclaims
+        self.dead_bytes = 0
+        self.n_compactions = 0
+        self.compacted_reclaimed_bytes = 0
+        # bumped on every log rewrite: readers that resolved an index
+        # entry against an older generation retry their read
+        self._gen = 0
+        # read handles retired by compaction: a reader may be mid-pread
+        # on one, so they stay open until close()
+        self._retired_fds: list[int] = []
         self._lock = lockcheck.make_lock("DiskStore")
 
     def _root(self) -> pathlib.Path:
@@ -257,7 +283,8 @@ class DiskStore:
         n = len(blob)
         rec = self._HDR.pack(self._MAGIC, n) + blob
         with self._lock:
-            prev = self._files.get(key, (0, 0, ()))[1]
+            prev_entry = self._files.get(key)
+            prev = prev_entry[1] if prev_entry is not None else 0
             if (self.capacity is not None
                     and self.resident_bytes - prev + n > self.capacity):
                 raise DiskFullError(
@@ -274,6 +301,9 @@ class DiskStore:
             self.resident_bytes += n - prev
             self.peak_resident_bytes = max(self.peak_resident_bytes,
                                            self.resident_bytes)
+            if prev_entry is not None:   # the old record is now dead space
+                self.dead_bytes += self._HDR.size + prev
+                self._maybe_compact_locked()
         return n
 
     def _read_blob(self, entry: tuple[int, int, tuple]):
@@ -315,32 +345,45 @@ class DiskStore:
         a concurrent :meth:`drop` retires the entry mid-read. That is a
         healthy, legitimately-freed key — not corruption — so the read
         re-checks the entry afterwards and raises ``KeyError`` for the
-        dropped-key case instead of returning retired bytes."""
-        with self._lock:
-            entry = self._files[key]
-            if count:
-                self.read_bytes += entry[1]
-        try:
-            val = self._read_blob(entry)
-        except BaseException as e:
-            if not isinstance(e, (OSError, EOFError, ValueError)):
-                raise
+        dropped-key case instead of returning retired bytes. A
+        concurrent *compaction* instead moves the live record to a new
+        offset in a rewritten log; the generation counter detects that
+        and the read retries against the new index — even when the
+        stale-offset read happened to return frame-valid bytes, which
+        after a rewrite could be the wrong record's."""
+        while True:
+            with self._lock:
+                entry = self._files[key]
+                gen = self._gen
+                if count:
+                    self.read_bytes += entry[1]
+                    count = False      # one logical load, however many tries
+            try:
+                val = self._read_blob(entry)
+            except (OSError, EOFError, ValueError) as e:
+                with self._lock:
+                    cur = self._files.get(key)
+                    cur_gen = self._gen
+                if cur_gen != gen:
+                    continue           # log rewritten mid-read: retry
+                if cur is None or cur[0] != entry[0]:
+                    # drop/get race: the key was freed (or freed and
+                    # re-put — a re-put always appends at a fresh offset)
+                    # while we read the old record. The caller raced a
+                    # legitimate release; the tier is healthy: a stale
+                    # lookup, not corruption.
+                    raise KeyError(key) from None
+                raise DiskCorruptionError(
+                    f"spill record for {key!r} torn or corrupt at "
+                    f"{self._log_path}+{entry[0]}: {e}") from e
             with self._lock:
                 cur = self._files.get(key)
+                cur_gen = self._gen
+            if cur_gen != gen:
+                continue               # log rewritten mid-read: retry
             if cur is None or cur[0] != entry[0]:
-                # drop/get race: the key was freed (or freed and re-put —
-                # a re-put always appends at a fresh offset) while we read
-                # the old record. The caller raced a legitimate release;
-                # the tier is healthy: a stale lookup, not corruption.
-                raise KeyError(key) from None
-            raise DiskCorruptionError(
-                f"spill record for {key!r} torn or corrupt at "
-                f"{self._log_path}+{entry[0]}: {e}") from e
-        with self._lock:
-            cur = self._files.get(key)
-        if cur is None or cur[0] != entry[0]:
-            raise KeyError(key)
-        return val
+                raise KeyError(key)
+            return val
 
     def drop(self, key) -> None:
         with self._lock:
@@ -348,15 +391,105 @@ class DiskStore:
             if entry is None:
                 return
             self.resident_bytes -= entry[1]
+            self.dead_bytes += self._HDR.size + entry[1]
+            self._maybe_compact_locked()
+
+    # ---- log compaction ----------------------------------------------
+    def _maybe_compact_locked(self) -> None:
+        """Lock held. Kick a compaction when dead bytes dominate the log.
+        Compaction is an *optimization*: any failure (I/O error, a torn
+        record in a log region we were about to discard anyway) leaves
+        the store fully functional on the old log, so errors are
+        swallowed here — the put/drop that triggered the pass must not
+        fail for it."""
+        if (self._wfd is None or self.compact_dead_fraction is None
+                or self._end < self.compact_min_bytes
+                or self.dead_bytes <
+                self.compact_dead_fraction * self._end):
+            return
+        try:
+            self._compact_locked()
+        except (OSError, ValueError):
+            pass
+
+    def _publish_compaction(self, tmp: pathlib.Path,
+                            path: pathlib.Path) -> None:
+        """The commit point: atomically swap the rewritten log into
+        place. A crash strictly before leaves the old log intact (plus a
+        stray tmp file); strictly after, the new log is complete and
+        fsynced. Split out as a fault-injection seam for the
+        crash-during-compaction tests."""
+        os.replace(tmp, path)
+
+    def _compact_locked(self) -> None:
+        """Lock held. Stream the live records into a fresh log, fsync,
+        atomically publish, and swap the in-memory index to the new
+        offsets. The old read handle is retired, not closed: a
+        concurrent :meth:`get` may be mid-``pread`` on it (it will see
+        intact old-log bytes, notice the generation bump, and retry
+        against the new index)."""
+        assert self._log_path is not None and self._rfd is not None \
+            and self._wfd is not None
+        old_rfd, old_wfd, old_end = self._rfd, self._wfd, self._end
+        tmp = self._log_path.with_name(self._log_path.name + ".compact")
+        entries = sorted(self._files.items(), key=lambda kv: kv[1][0])
+        tfd: int | None = os.open(str(tmp),
+                                  os.O_WRONLY | os.O_CREAT | os.O_TRUNC,
+                                  0o644)
+        try:
+            new_files: dict[Any, tuple[int, int, tuple]] = {}
+            at = 0
+            for key, (off, n, spec) in entries:
+                hdr = os.pread(old_rfd, self._HDR.size, off)
+                if len(hdr) != self._HDR.size:
+                    raise ValueError("torn record header")
+                magic, length = self._HDR.unpack(hdr)
+                if magic != self._MAGIC or length != n:
+                    raise ValueError("bad record frame")
+                buf = os.pread(old_rfd, n, off + self._HDR.size)
+                if len(buf) != n:
+                    raise ValueError("torn record payload")
+                os.write(tfd, hdr + buf)
+                new_files[key] = (at, n, spec)
+                at += self._HDR.size + n
+            os.fsync(tfd)
+            os.close(tfd)
+            tfd = None
+            self._publish_compaction(tmp, self._log_path)
+        except BaseException:
+            # abort: the old log (and every handle on it) is untouched
+            if tfd is not None:
+                os.close(tfd)
+            tmp.unlink(missing_ok=True)
+            raise
+        # committed on disk — swap handles and index. The old fds keep
+        # the pre-replace inode alive for any mid-read concurrent get.
+        self._wfd = os.open(str(self._log_path),
+                            os.O_WRONLY | os.O_CREAT | os.O_APPEND, 0o644)
+        try:
+            self._rfd = os.open(str(self._log_path), os.O_RDONLY)
+        except BaseException:
+            os.close(self._wfd)
+            self._wfd, self._rfd = old_wfd, old_rfd
+            raise
+        self._retired_fds += [old_rfd, old_wfd]
+        self._files = new_files
+        self._end = at
+        self.dead_bytes = 0
+        self._gen += 1
+        self.n_compactions += 1
+        self.compacted_reclaimed_bytes += old_end - at
 
     def close(self) -> None:
         with self._lock:
             self._files.clear()
             self.resident_bytes = 0
-            for fd in (self._wfd, self._rfd):
+            self.dead_bytes = 0
+            for fd in (self._wfd, self._rfd, *self._retired_fds):
                 if fd is not None:
                     os.close(fd)
             self._wfd = self._rfd = None
+            self._retired_fds = []
             self._end = 0
             d, self._dir = self._dir, None
         if d is not None and self._owns_dir:

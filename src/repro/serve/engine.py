@@ -78,6 +78,7 @@ import numpy as np
 
 from ..core import lockcheck
 from ..core.dispatch import D2H, DISK, H2D, DispatchPolicy
+from ..core.executor import select_best
 from ..core.liveness import (LeaseSpec, LivenessCertificate,
                              LivenessModelError, PoolConfig,
                              certify_progress)
@@ -267,8 +268,12 @@ class ReloadPolicy(DispatchPolicy):
         raise NotImplementedError
 
     def pick(self, pending: list[_Transfer]) -> _Transfer:
-        best = min(range(len(pending)),
-                   key=lambda i: (self.priority(pending[i]), pending[i].seq))
+        # the executor kernel's dispatch primitive (DESIGN.md §17): a
+        # serve DMA stream's choice among pending transfers is the same
+        # "policy minimum of the simultaneously-ready set" as a MEMGRAPH
+        # seam's choice among ready vertices
+        best = select_best(pending,
+                           lambda tr: (self.priority(tr), tr.seq))
         return pending.pop(best)
 
 

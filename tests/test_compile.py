@@ -8,8 +8,9 @@ import numpy as np
 import pytest
 
 from repro.core import BuildConfig, MemgraphOOM, build_memgraph
-from repro.core.compile import (DEFAULT_MERGE_GAP, NONDET, STATIC,
-                                CompiledPlan, PlanCompileError, lower, main)
+from repro.core.compile import (DEFAULT_MERGE_GAP, INLINE, NONDET, STATIC,
+                                THREADED, CompiledPlan, PlanCompileError,
+                                lower, main)
 from repro.core.dispatch import (COMPUTE, DISK, POLICY_NAMES, TRANSFER_KINDS,
                                  engine_key)
 from repro.core.memgraph import DepKind
@@ -112,6 +113,78 @@ class TestSegmentation:
         assert not plan.certified
         assert [r.kind for r in plan.regions] == [NONDET]
         assert plan.batches == []     # nondet regions never fuse
+        # even the uncertified whole-plan region carries a backend stamp
+        assert plan.regions[0].backend in (INLINE, THREADED)
+
+
+# ------------------------------------------------- seam-backend stamping
+class TestBackendStamping:
+    def test_every_nondet_region_is_stamped(self):
+        for seed in range(8):
+            tg = random_taskgraph(pyrandom.Random(1000 + seed))
+            try:
+                res = build(tg, seed)
+            except MemgraphOOM:
+                continue
+            plan = lower(res, policy="random", seed=seed)
+            for r in plan.regions:
+                if r.kind == NONDET:
+                    assert r.backend in (INLINE, THREADED)
+                else:
+                    assert r.backend == ""
+
+    def test_small_certified_seam_stamps_inline(self):
+        # fig3's h2d races are small, narrow, and admission-free: the
+        # canonical inline seam
+        plan = lower(build(fig3_taskgraph()), policy="fixed")
+        nondet = [r for r in plan.regions if r.kind == NONDET]
+        assert nondet
+        assert all(r.backend == INLINE for r in nondet
+                   if len(r) <= plan.seam_threshold)
+        assert any(r.backend == INLINE for r in nondet)
+
+    def test_seam_threshold_zero_demotes_every_seam(self):
+        res = build(fig3_taskgraph())
+        plan = lower(res, policy="fixed", seam_threshold=0)
+        assert plan.seam_threshold == 0
+        assert plan.n_inline == 0
+        assert all(r.backend == THREADED for r in plan.regions
+                   if r.kind == NONDET)
+
+    def test_seam_threshold_flows_from_build_config(self):
+        tg = fig3_taskgraph()
+        res = build(tg, backend="compiled", seam_threshold=0)
+        assert res.seam_threshold == 0
+        plan = lower(res, policy="fixed")     # picks up res.seam_threshold
+        assert plan.seam_threshold == 0
+        assert plan.n_inline == 0
+        rr = TurnipRuntime(tg, res, policy="fixed").run(int_inputs(tg))
+        assert rr.n_inline == 0
+        assert rr.n_threaded == rr.n_interpreted > 0
+
+    def test_admission_seams_demote_without_liveness_certificate(self):
+        # a seam containing pool/disk admission vertices may only run
+        # inline when §14's proof covers the blocking waits
+        from repro.core.memgraph import MemOp
+        admission = (MemOp.OFFLOAD, MemOp.SPILL, MemOp.LOAD)
+        seen = False
+        for seed in range(20):
+            tg = random_taskgraph(pyrandom.Random(1000 + seed))
+            try:
+                res = build(tg, seed, host_capacity=2, disk_capacity=50)
+            except MemgraphOOM:
+                continue
+            assert res.liveness_certificate is None
+            plan = lower(res, policy="fixed")
+            mg = res.memgraph
+            for r in plan.regions:
+                if r.kind != NONDET:
+                    continue
+                if any(mg.vertices[plan.order[i]].op in admission
+                       for i in range(r.start, r.end)):
+                    assert r.backend == THREADED
+                    seen = True
+        assert seen, "corpus produced no admission-bearing seam"
 
 
 # ------------------------------------------------------- tick-count schedule
@@ -182,12 +255,18 @@ class TestFusion:
         region_of = [r for r in plan.regions for _ in range(len(r))]
         for a, b in plan.batches:
             assert b - a >= 2
-            key = engine_key(mg.vertices[plan.order[a]])
-            assert key[1] in TRANSFER_KINDS
+            keys = {engine_key(mg.vertices[plan.order[i]])
+                    for i in range(a, b)}
+            assert {k for _, k in keys} <= set(TRANSFER_KINDS)
+            assert len({d for d, _ in keys}) == 1
+            # one engine stream — or, on a liveness-certified plan, one
+            # device's H2D/D2H engine pair
+            assert (len(keys) == 1
+                    or ({k for _, k in keys} <= {"h2d", "d2h"}
+                        and plan.liveness_certified))
             assert region_of[a].kind == STATIC
             assert region_of[b - 1] is region_of[a]
             for i in range(a, b):
-                assert engine_key(mg.vertices[plan.order[i]]) == key
                 # every external predecessor precedes the batch head —
                 # all dependencies complete when the batch issues
                 for p in mg.preds[plan.order[i]]:
@@ -208,11 +287,14 @@ class TestFusion:
         res, plan = self._fused_plan()
         mg = res.memgraph
         a, _b = plan.batches[0]
-        key = engine_key(mg.vertices[plan.order[a]])
-        # graft a non-matching neighbour into the batch
+        # graft a compute neighbour into the batch: compute is never a
+        # legal batch member (the only legal mixture is the H2D/D2H DMA
+        # pair of one device on a liveness-certified plan)
         for j, m in enumerate(plan.order):
-            if engine_key(mg.vertices[m]) != key:
+            if engine_key(mg.vertices[m])[1] == COMPUTE:
                 break
+        else:
+            pytest.fail("plan has no compute vertex")
         lo, hi = min(a, j), max(a, j) + 1
         plan.batches[0] = (lo, hi)
         with pytest.raises(PlanCompileError):
@@ -228,6 +310,36 @@ class TestFusion:
         for a, _ in bare.batches:
             assert engine_key(mg.vertices[bare.order[a]])[1] != DISK
         assert len(bare.batches) <= len(plan.batches)
+
+    def test_pair_fusion_requires_liveness_certificate(self):
+        res, plan = self._fused_plan()
+        mg = res.memgraph
+        # strip the certificate: every remaining batch is single-stream
+        res.liveness_certificate = None
+        bare = lower(res, policy="fixed")
+        for a, b in bare.batches:
+            keys = {engine_key(mg.vertices[bare.order[i]])
+                    for i in range(a, b)}
+            assert len(keys) == 1
+
+    def test_pair_fusion_occurs_in_corpus(self):
+        # some certified plan in the seed sweep fuses across one
+        # device's H2D/D2H engine pair
+        for seed in range(20):
+            tg = random_taskgraph(pyrandom.Random(1000 + seed))
+            try:
+                res = build(tg, seed, host_capacity=2, disk_capacity=50,
+                            certify_liveness=True)
+            except MemgraphOOM:
+                continue
+            plan = lower(res, policy="fixed")
+            mg = res.memgraph
+            for a, b in plan.batches:
+                kinds = {engine_key(mg.vertices[plan.order[i]])[1]
+                         for i in range(a, b)}
+                if kinds == {"h2d", "d2h"}:
+                    return
+        pytest.fail("no seed produced an H2D/D2H pair batch")
 
     def test_max_fuse_bounds_batch_length(self):
         res, _ = self._fused_plan()

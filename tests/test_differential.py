@@ -130,6 +130,24 @@ def check_case(tg, seed: int, host_cap, disk_cap, *,
                            seed=seed, exec_backend="compiled").run(inputs)
         _assert_equal(rr.outputs, ref, f"compiled/{policy}")
         assert rr.n_compiled + rr.n_interpreted == len(mg.vertices)
+        assert rr.n_inline + rr.n_threaded == rr.n_interpreted
+
+    # forced-backend lane (DESIGN.md §17): the same compiled plan with
+    # every seam forced onto ONE backend — the thread-free inline
+    # executor and the threaded fleet — must stay byte-exact under every
+    # policy, and the counters must show the forcing actually happened
+    # (inline-forced runs spin up zero seam threads).
+    for backend in ("inline", "threaded"):
+        for policy in policies:
+            rr = TurnipRuntime(tg, res, mode="nondet", policy=policy,
+                               seed=seed, exec_backend="compiled",
+                               seam_backend=backend).run(inputs)
+            _assert_equal(rr.outputs, ref, f"compiled/{backend}/{policy}")
+            assert rr.n_inline + rr.n_threaded == rr.n_interpreted
+            if backend == "inline":
+                assert rr.n_threaded == 0
+            else:
+                assert rr.n_inline == 0
 
     # shared-pool lane (DESIGN.md §12): the same plan over a store whose
     # host arena is a lease of an arbitrated HostPool, with a second

@@ -1,0 +1,240 @@
+"""The unified executor core (DESIGN.md §17): the shared ReadyKernel's
+ready sets against a brute-force dependency recount, inline dispatch
+replaying the compile-time linearization tie-break, fixed-mode
+head-of-line issue, policy ``prepare()`` caching across a run's seams,
+and lock-order-sanitizer coverage of the scheduler lock."""
+import random as pyrandom
+
+import numpy as np
+
+from repro.core import (BuildConfig, MemgraphOOM, build_memgraph,
+                        lockcheck)
+from repro.core.compile import NONDET, lower
+from repro.core.dispatch import (POLICY_NAMES, CriticalPathPolicy, engine_of,
+                                 get_policy)
+from repro.core.executor import (ExecContext, ReadyKernel, ThreadedExecutor,
+                                 select_best)
+from repro.core.runtime import TurnipRuntime, eval_taskgraph
+
+from helpers import fig3_taskgraph, int_inputs, random_taskgraph
+
+UNITS = dict(size_fn=lambda v: 1)
+
+
+def build(tg, seed=0, **kw):
+    cfg = BuildConfig(capacity=3, rng_seed=seed, **UNITS, **kw)
+    return build_memgraph(tg, cfg)
+
+
+def try_build(tg, seed=0, **kw):
+    """Corpus loops skip the rare random plan that does not fit."""
+    try:
+        return build(tg, seed, **kw)
+    except MemgraphOOM:
+        return None
+
+
+# ------------------------------------------------------------ select_best
+class TestSelectBest:
+    def test_picks_minimum_rank(self):
+        assert select_best([3, 1, 2], lambda x: x) == 1
+        assert select_best([5], lambda x: -x) == 0
+
+    def test_first_of_tied_candidates_wins(self):
+        # stable like min(): the serve reload policies rely on seq being
+        # part of the rank, but ties must still resolve deterministically
+        assert select_best(["b", "z", "a"], lambda s: 0) == 0
+
+    def test_rank_evaluated_at_call_time(self):
+        # dynamic ranks (serve reload deadlines) are re-evaluated per call
+        prio = {"x": 2, "y": 1}
+        assert select_best(["x", "y"], prio.__getitem__) == 1
+        prio["x"] = 0
+        assert select_best(["x", "y"], prio.__getitem__) == 0
+
+
+# ------------------------------------------------------------ ReadyKernel
+class TestReadyKernel:
+    def test_ready_sets_match_brute_force(self):
+        """At every dispatch step, the kernel's ready view must equal the
+        from-scratch recount — vertices whose in-subset predecessors all
+        completed — each filed under its own (device, engine) key."""
+        for seed in range(6):
+            rng = pyrandom.Random(seed)
+            tg = random_taskgraph(rng)
+            res = try_build(tg, seed)
+            if res is None:
+                continue
+            mg = res.memgraph
+            for pname in POLICY_NAMES:
+                pol = get_policy(pname, seed=seed)
+                pol.prepare(mg)
+                members = list(mg.vertices)
+                k = ReadyKernel(mg, members, pol, "nondet")
+                for m in k.load(members):
+                    k.publish(m)
+                done: set = set()
+                popped: set = set()
+                while not k.done:
+                    want = {m for m in members if m not in popped
+                            and all(p in done for p in mg.preds[m])}
+                    view = k.ready_view()
+                    got = {m for ms in view.values() for m in ms}
+                    assert got == want
+                    for key, ms in view.items():
+                        for m in ms:
+                            v = mg.vertices[m]
+                            assert (v.device, engine_of(v)) == key
+                    m = k.pop_best()
+                    assert m is not None and m in want
+                    popped.add(m)
+                    done.add(m)
+                    for s in k.complete(m):
+                        k.publish(s)
+                assert popped == set(members)
+
+    def test_subset_job_treats_outside_preds_as_complete(self):
+        """A job over a suffix of a chain must start immediately: the
+        cross-region dependency points backward (already executed)."""
+        rng = pyrandom.Random(4)
+        tg = random_taskgraph(rng)
+        res = build(tg, 4)
+        mg = res.memgraph
+        pol = get_policy("fixed")
+        pol.prepare(mg)
+        all_m = sorted(mg.vertices, key=lambda m: mg.vertices[m].seq)
+        tail = all_m[len(all_m) // 2:]
+        k = ReadyKernel(mg, tail, pol, "nondet")
+        ready = k.load(tail)
+        # brute-force: ready iff no predecessor INSIDE the job is pending
+        tailset = set(tail)
+        want = [m for m in tail
+                if not any(p in tailset for p in mg.preds[m])]
+        assert sorted(ready) == sorted(want)
+
+    def test_fixed_mode_issues_strict_seq_order(self):
+        """Fixed mode is head-of-line: the pops replay the build's issue
+        order exactly, whatever the heap keys would have preferred."""
+        for seed in (1, 4):
+            rng = pyrandom.Random(seed)
+            tg = random_taskgraph(rng)
+            res = build(tg, seed)
+            mg = res.memgraph
+            pol = get_policy("fixed")
+            pol.prepare(mg)
+            members = list(mg.vertices)
+            k = ReadyKernel(mg, members, pol, "fixed")
+            for m in k.load(members):
+                k.publish(m)
+            seqs = []
+            while not k.done:
+                m = k.pop_best()
+                assert m is not None, "head-of-line vertex never became ready"
+                seqs.append(mg.vertices[m].seq)
+                for s in k.complete(m):
+                    k.publish(s)
+            assert seqs == sorted(mg.vertices[m].seq for m in members)
+
+    def test_inline_pop_replays_linearization(self):
+        """pop_best's ``(priority, seq, mid)`` choice is exactly the
+        compile-time linearization tie-break, so an inline seam under a
+        deterministic policy executes its plan-order slice verbatim —
+        the inline backend is the linearizer re-run at execution time."""
+        checked = 0
+        for seed in range(6):
+            rng = pyrandom.Random(seed)
+            tg = random_taskgraph(rng)
+            res = try_build(tg, seed)
+            if res is None:
+                continue
+            mg = res.memgraph
+            for pname in ("fixed", "critical-path", "transfer-first"):
+                pol = get_policy(pname)
+                pol.prepare(mg)
+                plan = lower(res, policy=pol)
+                for r in plan.regions:
+                    if r.kind != NONDET:
+                        continue
+                    mids = list(plan.order[r.start:r.end])
+                    k = ReadyKernel(mg, mids, pol, "nondet")
+                    for m in k.load(mids):
+                        k.publish(m)
+                    got = []
+                    while not k.done:
+                        m = k.pop_best()
+                        assert m is not None
+                        got.append(m)
+                        for s in k.complete(m):
+                            k.publish(s)
+                    assert got == mids
+                    checked += 1
+        assert checked > 0, "corpus produced no nondet regions"
+
+
+# --------------------------------------------------- policy prepare cache
+class _CountingPolicy(CriticalPathPolicy):
+    def __init__(self):
+        super().__init__()
+        self.calls = 0
+
+    def prepare(self, mg):
+        self.calls += 1
+        super().prepare(mg)
+
+
+class TestPolicyPrepareCaching:
+    def test_one_prepare_per_run_however_many_seams(self):
+        """Dispatch state is computed once per run and shared by every
+        seam executor — N nondet regions must not mean N prepare()
+        passes (and the lowering's own prepare is the run's one)."""
+        tg = fig3_taskgraph()
+        res = build(tg)
+        pol = _CountingPolicy()
+        rt = TurnipRuntime(tg, res, exec_backend="compiled", policy=pol)
+        ref = eval_taskgraph(tg, int_inputs(tg))
+        rr = rt.run(int_inputs(tg))
+        assert rr.n_interpreted > 0, "plan has no seams to exercise"
+        n_seams = sum(1 for r in rt._compiled.regions if r.kind == NONDET)
+        assert n_seams >= 1
+        assert pol.calls == 1
+        for k in ref:
+            np.testing.assert_array_equal(rr.outputs[k], ref[k])
+        # a second run reuses the cached plan but refreshes dispatch state
+        rt.run(int_inputs(tg))
+        assert pol.calls == 2
+
+
+# ------------------------------------------------------------- lockcheck
+class TestSchedulerLock:
+    def test_scheduler_lock_is_sanitized(self):
+        tg = fig3_taskgraph()
+        res = build(tg)
+        mg = res.memgraph
+        pol = get_policy("fixed")
+        pol.prepare(mg)
+        ctx = ExecContext.make(mg, tg, None, None, pol, "nondet", None,
+                               0.0, [])
+        ex = ThreadedExecutor(ctx, [])
+        try:
+            assert isinstance(ex.lock, lockcheck.SanitizedLock)
+            assert "ExecutorScheduler" in repr(ex.lock)
+        finally:
+            ex.close()
+
+    def test_scheduler_lock_stays_a_leaf_under_tiered_runs(self):
+        """No sanitized lock (store, pool) may ever be taken while the
+        scheduler lock is held: vertices execute OUTSIDE it. A tiered
+        threaded run exercises store locks from worker threads; the
+        acquisition graph must show no outgoing edge from the scheduler
+        lock, and stay acyclic overall."""
+        tg = fig3_taskgraph()
+        res = build(tg, host_capacity=2, disk_capacity=50)
+        ref = eval_taskgraph(tg, int_inputs(tg))
+        for exec_backend in ("interpreted", "compiled"):
+            rr = TurnipRuntime(tg, res, exec_backend=exec_backend,
+                               policy="random", seed=0).run(int_inputs(tg))
+            for k in ref:
+                np.testing.assert_array_equal(rr.outputs[k], ref[k])
+        out = lockcheck.edges().get("ExecutorScheduler", set())
+        assert not out, f"locks acquired under the scheduler lock: {out}"
+        lockcheck.assert_acyclic()

@@ -361,6 +361,160 @@ class TestDiskFaults:
         assert not leaked, f"streams leaked on error path: {leaked}"
 
 
+# ----------------------------------------------------- log compaction
+class TestCompaction:
+    """Append-only spill.log compaction (DESIGN.md §10): when dead bytes
+    dominate, the live records are streamed into a fresh log and
+    atomically swapped in. Compaction is an optimization — every failure
+    mode must leave the store fully functional on the old log."""
+
+    def test_overwrite_churn_triggers_and_shrinks_log(self):
+        ds = DiskStore(compact_min_bytes=1)
+        keep = np.arange(256, dtype=np.float64)          # 2048 B payload
+        ds.put("keep", keep)
+        for i in range(8):
+            ds.put("churn", np.full(256, float(i)))
+        assert ds.n_compactions >= 1
+        assert ds.compacted_reclaimed_bytes > 0
+        # the on-disk log matches the index's view and holds far less
+        # than the total bytes ever appended
+        assert ds._log_path is not None
+        assert os.stat(ds._log_path).st_size == ds._end
+        assert ds._end < 9 * (ds._HDR.size + keep.nbytes)
+        # write_bytes counts spill traffic only — compaction's internal
+        # rewrite must not inflate it
+        assert ds.write_bytes == 9 * keep.nbytes
+        np.testing.assert_array_equal(ds.get("keep"), keep)
+        np.testing.assert_array_equal(ds.get("churn"), np.full(256, 7.0))
+        ds.close()
+        assert not ds._retired_fds                       # no fd leak
+
+    def test_drop_triggers_compaction(self):
+        ds = DiskStore(compact_min_bytes=1)
+        big = np.arange(256, dtype=np.float64)
+        ds.put("a", big)
+        ds.put("b", 2 * big)
+        ds.drop("a")                 # dead == live → fraction 0.5 crossed
+        assert ds.n_compactions == 1
+        assert "a" not in ds
+        assert ds._end == ds._HDR.size + big.nbytes
+        assert ds.dead_bytes == 0
+        np.testing.assert_array_equal(ds.get("b"), 2 * big)
+        ds.close()
+
+    def test_no_compaction_below_min_bytes_or_when_disabled(self):
+        for ds in (DiskStore(),                          # default 1 MiB floor
+                   DiskStore(compact_dead_fraction=None,
+                             compact_min_bytes=1)):      # knob off
+            for i in range(8):
+                ds.put("churn", np.full(64, float(i)))
+            assert ds.n_compactions == 0
+            assert ds.dead_bytes > 0
+            np.testing.assert_array_equal(ds.get("churn"), np.full(64, 7.0))
+            ds.close()
+
+    def test_crash_at_publish_leaves_old_log_intact(self):
+        """Kill the compaction at its commit point: the atomic-rename
+        seam raises. The store must carry on against the old log — the
+        triggering put succeeds, every key reads back byte-exact, and
+        the half-built tmp file is cleaned up."""
+        ds = DiskStore(compact_min_bytes=1)
+
+        def boom(tmp, path):
+            raise OSError("injected crash at publish")
+
+        ds._publish_compaction = boom                    # instance seam
+        keep = np.arange(256, dtype=np.float64)
+        ds.put("keep", keep)
+        for i in range(8):
+            ds.put("churn", np.full(256, float(i)))      # crossings swallowed
+        assert ds.n_compactions == 0
+        assert ds.dead_bytes > 0                         # nothing reclaimed
+        assert ds._log_path is not None
+        assert not ds._log_path.with_name("spill.log.compact").exists()
+        np.testing.assert_array_equal(ds.get("keep"), keep)
+        np.testing.assert_array_equal(ds.get("churn"), np.full(256, 7.0))
+        del ds._publish_compaction                       # heal the seam
+        ds.put("churn", np.full(256, 9.0))               # re-trigger
+        assert ds.n_compactions >= 1
+        np.testing.assert_array_equal(ds.get("keep"), keep)
+        np.testing.assert_array_equal(ds.get("churn"), np.full(256, 9.0))
+        ds.close()
+
+    def test_crash_during_rewrite_leaves_old_log_intact(self, monkeypatch):
+        """Kill the compaction mid-rewrite (fsync of the tmp log fails —
+        strictly before the commit point). Old log untouched, tmp
+        cleaned, store functional; once I/O heals the next trigger
+        compacts successfully."""
+        real_fsync = os.fsync
+        monkeypatch.setattr(os, "fsync",
+                            lambda fd: (_ for _ in ()).throw(
+                                OSError("injected crash during rewrite")))
+        ds = DiskStore(compact_min_bytes=1)
+        keep = np.arange(256, dtype=np.float64)
+        ds.put("keep", keep)
+        for i in range(8):
+            ds.put("churn", np.full(256, float(i)))
+        assert ds.n_compactions == 0
+        assert ds._log_path is not None
+        assert not ds._log_path.with_name("spill.log.compact").exists()
+        np.testing.assert_array_equal(ds.get("keep"), keep)
+        monkeypatch.setattr(os, "fsync", real_fsync)
+        ds.put("churn", np.full(256, 9.0))
+        assert ds.n_compactions >= 1
+        np.testing.assert_array_equal(ds.get("keep"), keep)
+        np.testing.assert_array_equal(ds.get("churn"), np.full(256, 9.0))
+        ds.close()
+
+    def test_reader_paused_across_compaction_retries(self):
+        """A get() that resolved its index entry, then lost the CPU while
+        a compaction rewrote the log, reads at a stale offset of the NEW
+        log. The generation counter must send it back for a retry — the
+        caller sees the correct bytes, never a spurious error."""
+        ds = DiskStore(compact_min_bytes=1, compact_dead_fraction=None)
+        junk = np.zeros(512)
+        a = np.arange(64.0)
+        ds.put("junk", junk)         # "k" lands at a nonzero offset...
+        ds.put("k", a)
+        ds.drop("junk")              # ...that compaction will move to 0
+        reading = threading.Event()
+        resume = threading.Event()
+        orig = DiskStore._read_blob
+        calls: list = []
+
+        def seam(self, entry):
+            calls.append(entry)
+            if len(calls) == 1:      # pause only the first, stale read
+                reading.set()
+                assert resume.wait(5)
+            return orig(self, entry)
+
+        ds._read_blob = seam.__get__(ds)
+        result: list = []
+
+        def reader():
+            try:
+                result.append(ds.get("k"))
+            except BaseException as e:
+                result.append(e)
+
+        t = threading.Thread(target=reader)
+        t.start()
+        assert reading.wait(5)       # reader holds a pre-compaction entry
+        ds.compact_dead_fraction = 0.01
+        ds.put("x", np.ones(4))
+        ds.put("x", np.ones(4))      # overwrite trigger: rewrites the log
+        assert ds.n_compactions == 1
+        resume.set()
+        t.join(5)
+        assert result, "reader never finished"
+        assert not isinstance(result[0], BaseException), \
+            f"stale-offset read after compaction escalated: {result[0]!r}"
+        np.testing.assert_array_equal(result[0], a)
+        assert len(calls) >= 2, "generation bump did not force a retry"
+        ds.close()
+
+
 # ------------------------------------------------------- compiled plans
 def tiered_build(cap=3, host_cap=2, **kw):
     tg = fig3_taskgraph()
